@@ -1,0 +1,28 @@
+"""Paper S5 analytical table: predicted utilisation / feasible R per layer
+and machine -- printed next to the measured Fig2/Fig3 numbers."""
+
+from __future__ import annotations
+
+from repro.core import analysis as an
+
+
+def main():
+    for hw in (an.SKYLAKE_X, an.MOBILE_I7, an.TPU_V5E):
+        print(f"# {hw.name}: CMR_dram={hw.cmr_dram:.0f} CMR_fast={hw.cmr_fast:.0f} "
+              f"minR={an.min_r(hw)}")
+        for c in (32, 64, 128, 256, 512):
+            t = 7
+            feas = an.fused_is_feasible(hw, c, c, t)
+            rmax = an.max_r(hw, c, c, t)
+            util = an.predicted_utilization(hw, min(rmax, 24), c, c, t, t - 2)
+            algo = an.choose_algo(hw, c, c, t)
+            print(
+                f"analysis_{hw.name.split()[0]}_{c}ch,0.0,"
+                f"fits_fast_level={feas};max_R={rmax};"
+                f"pred_util={util:.2f};chosen_algo={algo}"
+            )
+    return 0
+
+
+if __name__ == "__main__":
+    main()

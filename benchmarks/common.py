@@ -1,0 +1,29 @@
+"""Benchmark timing utilities."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, min_time_s: float = 0.4,
+            max_iters: int = 50) -> float:
+    """Median wall-clock seconds per call (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    total = 0.0
+    while total < min_time_s and len(times) < max_iters:
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        total += dt
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,51 @@
+"""LM-framework micro-benchmarks on CPU (reduced configs): train-step
+throughput + decode latency for a representative arch of each family."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import init_lm, lm_decode_step, lm_prefill
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+from benchmarks.common import time_fn
+
+ARCHS = ["qwen2.5-14b", "mamba2-1.3b", "moonshot-v1-16b-a3b"]
+
+
+def main():
+    for name in ARCHS:
+        cfg = get_arch(name).reduced()
+        tcfg = TrainConfig(remat=False, microbatches=1)
+        state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+        step = jax.jit(make_train_step(cfg, tcfg))
+        b, s = 4, 64
+        rng = np.random.default_rng(0)
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+            "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+            "mask": jnp.ones((b, s), jnp.float32),
+        }
+        t = time_fn(lambda st: step(st, batch)[0], state, warmup=1, max_iters=5)
+        toks = b * s / t
+        print(f"lm_train_{name},{t * 1e6:.0f},tokens_per_s={toks:.0f}", flush=True)
+
+        p = state["params"]
+        toks_p = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+        _, st = lm_prefill(p, cfg, toks_p, 64)
+        dec = jax.jit(
+            lambda pp, tok, pos, ss: lm_decode_step(pp, cfg, tok, pos, ss)
+        )
+        tok = jnp.asarray([1, 2], jnp.int32)
+        t = time_fn(
+            lambda: dec(p, tok, jnp.int32(16), st), warmup=1, max_iters=10
+        )
+        print(f"lm_decode_{name},{t * 1e6:.0f},ms_per_token={t * 1e3:.2f}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Figure 3 reproduction: small-channel layers with R=8 (the paper's
+i7 configuration -- closest to this 1-core container)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tiling
+from repro.core.conv import conv2d_direct
+from repro.core.fused import conv2d_l3_fused
+from repro.core.three_stage import ThreeStageStaged, transform_kernels
+
+from benchmarks.common import time_fn
+
+I7_LAYERS = [
+    ("i7_32ch_112", 32, 112),
+    ("i7_64ch_56", 64, 56),
+    ("i7_128ch_28", 128, 28),
+    ("i7_256ch_14", 256, 14),
+]
+
+M = 5
+R = 8  # paper's i7 setting
+
+
+def main(batch: int = 2):
+    rows = []
+    for tag, c, d in I7_LAYERS:
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((batch, d, d, c)) * 0.1, jnp.float32)
+        w = jnp.asarray(rng.standard_normal((3, 3, c, c)) * 0.1, jnp.float32)
+        fused = jax.jit(functools.partial(conv2d_l3_fused, pad=1, m=M, r_tiles=R))
+        direct = jax.jit(functools.partial(conv2d_direct, pad=1))
+        plan = tiling.TilePlan.build(d, d, 3, 1, M + 2)
+        staged = ThreeStageStaged(plan)
+        wt = jax.jit(functools.partial(transform_kernels, m=M))(w)
+        jax.block_until_ready(wt)
+        t_f = time_fn(fused, x, w)
+        t_d = time_fn(direct, x, w)
+        t_s = time_fn(lambda xx: staged(xx, wt), x)
+        rows.append((tag, t_f, t_s, t_d))
+        print(
+            f"fig3_{tag},{t_f * 1e6 / batch:.1f},"
+            f"fused_ms/img={t_f * 1e3 / batch:.2f};"
+            f"3stage_ms/img={t_s * 1e3 / batch:.2f};"
+            f"vendor_ms/img={t_d * 1e3 / batch:.2f};"
+            f"speedup={min(t_s, t_d) / t_f:.2f}",
+            flush=True,
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

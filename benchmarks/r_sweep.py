@@ -1,0 +1,35 @@
+"""R-parameter sweep (paper S4.1.2 / S5): wall-clock vs R on one layer.
+
+Validates the paper's two-sided constraint story: small R starves the
+matmul arithmetic intensity; past the fast-level bound, larger R stops
+helping (and on a real cache machine begins to hurt)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fused import conv2d_l3_fused
+
+from benchmarks.common import time_fn
+
+
+def main(batch: int = 2):
+    c, d = 64, 56
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((batch, d, d, c)) * 0.1, jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, c, c)) * 0.1, jnp.float32)
+    base = None
+    for r in (1, 2, 4, 8, 16, 24, 32, 64):
+        fn = jax.jit(functools.partial(conv2d_l3_fused, pad=1, m=5, r_tiles=r))
+        t = time_fn(fn, x, w)
+        base = base or t
+        print(f"r_sweep_R{r},{t * 1e6:.1f},speedup_vs_R1={base / t:.2f}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

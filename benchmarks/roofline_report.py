@@ -1,0 +1,43 @@
+"""Render the roofline table from results/dryrun/*.json (deliverable g)."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+
+def load(dirpath="results/dryrun"):
+    recs = []
+    for p in sorted(pathlib.Path(dirpath).glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def main(dirpath="results/dryrun"):
+    recs = load(dirpath)
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    failed = [r for r in recs if r.get("status") == "error"]
+    print(f"# dry-run cells: {len(ok)} ok, {len(skipped)} skipped, "
+          f"{len(failed)} failed")
+    hdr = (
+        "cell,compile_s,t_compute_s,t_memory_s,t_collective_s,"
+        "bottleneck,useful_ratio,roofline_frac"
+    )
+    print(hdr)
+    for r in ok:
+        rf = r["roofline"]
+        cell = f"{r['arch']}|{r['shape']}|{r['mesh']}"
+        print(
+            f"{cell},{r['compile_s']},{rf['t_compute_s']:.4g},"
+            f"{rf['t_memory_s']:.4g},{rf['t_collective_s']:.4g},"
+            f"{rf['bottleneck']},{rf['useful_flops_ratio']:.3f},"
+            f"{rf['roofline_fraction']:.4f}"
+        )
+    for r in failed:
+        print(f"{r['arch']}|{r['shape']}|{r['mesh']},FAILED,,,,,,")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Benchmark driver: one section per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/*.py).
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller batches")
+    ap.add_argument(
+        "--only", default=None,
+        help="comma list: fig2,fig3,analysis,r_sweep,lm,roofline",
+    )
+    args = ap.parse_args()
+    batch = 1 if args.quick else 2
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    sections = []
+    if want("analysis"):
+        from benchmarks import analysis_table
+
+        sections.append(("paper S5 analysis table", analysis_table.main, ()))
+    if want("fig2"):
+        from benchmarks import paper_fig2
+
+        sections.append(
+            ("paper Fig2 (VGG/ResNet layers)", paper_fig2.main, (batch,))
+        )
+    if want("fig3"):
+        from benchmarks import paper_fig3
+
+        sections.append(("paper Fig3 (i7 layers)", paper_fig3.main, (batch,)))
+    if want("r_sweep"):
+        from benchmarks import r_sweep
+
+        sections.append(("R-parameter sweep (S4.1.2)", r_sweep.main, (batch,)))
+    if want("lm"):
+        from benchmarks import lm_bench
+
+        sections.append(("LM framework benches", lm_bench.main, ()))
+    if want("roofline"):
+        from benchmarks import roofline_report
+
+        sections.append(("roofline table (dry-run)", roofline_report.main, ()))
+
+    failures = 0
+    for title, fn, fargs in sections:
+        print(f"\n## {title}", flush=True)
+        try:
+            fn(*fargs)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

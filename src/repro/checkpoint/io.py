@@ -1,0 +1,166 @@
+"""Sharded checkpointing: atomic, async, keep-k, resumable.
+
+Layout per checkpoint:
+    <dir>/step_<N>/host_<i>.npz     flattened leaves (this host's shards)
+    <dir>/step_<N>/meta.json        step, leaf paths/shapes/dtypes, done flag
+    <dir>/step_<N>.done             commit marker (atomic rename)
+
+On a real multi-host cluster each host writes only its addressable shards;
+in this single-host container that is the whole array.  Restore is
+sharding-agnostic: arrays are `jax.device_put` against whatever mesh the
+*restoring* job runs (elastic re-scaling = restore on a different mesh --
+see repro/checkpoint/elastic.py and tests/test_checkpoint.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten(tree: Pytree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    flat = {}
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz has no bf16: store f32
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat, treedef
+
+
+def save(
+    ckpt_dir: str | os.PathLike,
+    step: int,
+    tree: Pytree,
+    *,
+    host_id: int = 0,
+    keep: int = 3,
+) -> pathlib.Path:
+    """Synchronous atomic save."""
+    root = pathlib.Path(ckpt_dir)
+    tmp = root / f"step_{step}.tmp"
+    final = root / f"step_{step}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    flat, _ = _flatten(tree)
+    np.savez(tmp / f"host_{host_id}.npz", **flat)
+    meta = {
+        "step": int(step),
+        "leaves": {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+            for k, v in flat.items()
+        },
+    }
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic commit
+    (root / f"step_{step}.done").touch()
+    _gc(root, keep)
+    return final
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint I/O with training: save() returns immediately;
+    the previous save is joined before a new one starts (one in flight)."""
+
+    def __init__(self, ckpt_dir: str, *, keep: int = 3, host_id: int = 0):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self.host_id = host_id
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Pytree) -> None:
+        self.wait()
+        # materialise to host memory on the caller's thread (cheap, bounded)
+        host_tree = jax.tree.map(np.asarray, tree)
+
+        def run():
+            try:
+                save(
+                    self.ckpt_dir, step, host_tree,
+                    host_id=self.host_id, keep=self.keep,
+                )
+            except BaseException as e:  # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+
+def latest_step(ckpt_dir: str | os.PathLike) -> Optional[int]:
+    root = pathlib.Path(ckpt_dir)
+    if not root.exists():
+        return None
+    steps = [
+        int(p.stem.split("_")[1])
+        for p in root.glob("step_*.done")
+    ]
+    return max(steps) if steps else None
+
+
+def restore(
+    ckpt_dir: str | os.PathLike,
+    step: Optional[int],
+    like: Pytree,
+    *,
+    shardings: Optional[Pytree] = None,
+    host_id: int = 0,
+) -> Tuple[Pytree, int]:
+    """Restore into the structure of `like`; optionally device_put against
+    `shardings` (which may describe a DIFFERENT mesh than the one that
+    saved -- elastic restore)."""
+    root = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    data = np.load(root / f"step_{step}" / f"host_{host_id}.npz")
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    flat_sh = (
+        treedef.flatten_up_to(shardings) if shardings is not None else None
+    )
+    for i, (path, leaf) in enumerate(leaves):
+        key = jax.tree_util.keystr(path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        want = str(leaf.dtype) if hasattr(leaf, "dtype") else str(arr.dtype)
+        if want == "bfloat16":  # stored as f32; cast back on device
+            import ml_dtypes
+
+            arr = arr.astype(ml_dtypes.bfloat16)
+        if flat_sh is not None:
+            out.append(jax.device_put(arr, flat_sh[i]))
+        else:
+            out.append(jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+def _gc(root: pathlib.Path, keep: int) -> None:
+    steps = sorted(
+        int(p.stem.split("_")[1]) for p in root.glob("step_*.done")
+    )
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(root / f"step_{s}", ignore_errors=True)
+        (root / f"step_{s}.done").unlink(missing_ok=True)

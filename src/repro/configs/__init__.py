@@ -1,0 +1,16 @@
+from repro.configs.base import (
+    SHAPES,
+    ArchConfig,
+    MLAConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    cell_is_defined,
+    get_arch,
+    list_archs,
+)
+
+__all__ = [
+    "ArchConfig", "ShapeConfig", "MoEConfig", "MLAConfig", "SSMConfig",
+    "SHAPES", "get_arch", "list_archs", "cell_is_defined",
+]

@@ -1,0 +1,13 @@
+"""repro.core -- the paper's contribution: L3-fused transformed convolutions."""
+
+from repro.core.conv import conv1d_depthwise_causal, conv2d, conv2d_direct
+from repro.core.fused import conv2d_l3_fused
+from repro.core.three_stage import conv2d_three_stage
+
+__all__ = [
+    "conv2d",
+    "conv2d_direct",
+    "conv2d_l3_fused",
+    "conv2d_three_stage",
+    "conv1d_depthwise_causal",
+]

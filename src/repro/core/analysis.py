@@ -1,0 +1,134 @@
+"""The paper's S5 analytical (roofline) model, as executable code.
+
+Used three ways:
+  * tests assert the algebra (AI_L3 == R/2, channel conditions, ...)
+  * `choose_algo` implements the paper's "wisdom file" remark: pick the
+    fused algorithm exactly where the model predicts it wins
+  * benchmarks/analysis_table.py prints predicted utilisation next to the
+    measured Fig-2/Fig-3 reproductions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    name: str
+    peak_flops: float  # FLOP/s (fp32 on CPUs, bf16 on TPU)
+    dram_bw: float  # bytes/s main memory (HBM on TPU)
+    fast_shared_bw: float  # bytes/s of the shared fast level (L3 / VMEM feed)
+    fast_shared_bytes: int  # capacity of that level
+    private_bytes: int  # per-core private working memory (L2 / VMEM budget)
+
+    @property
+    def cmr_dram(self) -> float:
+        return self.peak_flops / self.dram_bw
+
+    @property
+    def cmr_fast(self) -> float:
+        return self.peak_flops / self.fast_shared_bw
+
+
+# The two machines of the paper's S6, numbers from the text.
+SKYLAKE_X = HardwareModel(
+    name="i9-7980xe (18c, AVX512)",
+    peak_flops=2.6e9 * 18 * 2 * 16 * 2,  # 2 FMA ports x 16 fp32 lanes
+    dram_bw=4 * 21.3e9,
+    fast_shared_bw=(2.6e9 * 18 * 2 * 16 * 2) / 10.0,  # paper: CMR_L3 ~ 10
+    fast_shared_bytes=20 * 2**20,
+    private_bytes=1 * 2**20,
+)
+# AVX-heavy code downclocks below the 3.1 GHz nominal: the paper reports
+# CMR_dram = 13, implying ~2.6 GHz effective (13 * 25.6 GB/s = 332.8 GFLOP/s).
+_I7_PEAK = 13.0 * (2 * 12.8e9)
+MOBILE_I7 = HardwareModel(
+    name="i7 MacBookPro (4c, AVX2)",
+    peak_flops=_I7_PEAK,
+    dram_bw=2 * 12.8e9,
+    fast_shared_bw=_I7_PEAK / 4.0,  # paper: CMR_L3 ~ 4
+    fast_shared_bytes=8 * 2**20,
+    private_bytes=256 * 2**10,
+)
+# TPU v5e, the adaptation target.  The "fast shared" level is VMEM; its feed
+# bandwidth is effectively the VREG load rate -- we conservatively model the
+# VMEM->compute CMR as ~2 (VMEM streams near compute rate), which makes the
+# L3-lower-bound on R mild; the binding constraints on TPU are the HBM AI and
+# the VMEM capacity budget.
+TPU_V5E = HardwareModel(
+    name="TPU v5e (per chip)",
+    peak_flops=197e12,
+    dram_bw=819e9,
+    fast_shared_bw=197e12 / 2.0,
+    fast_shared_bytes=64 * 2**20,
+    private_bytes=32 * 2**20,
+)
+
+
+def kernel_matrix_bytes(c_in: int, c_out: int, t: int) -> int:
+    """Right-hand matrices: 4 C C' T^2 bytes (Winograd and FFT alike --
+    FFT stores complex pairs but only T(T/2+1) frequencies)."""
+    return 4 * c_in * c_out * t * t
+
+
+def task_flops(r: int, c_in: int, c_out: int, t: int, alpha: int = 1) -> int:
+    """alpha 2 R C C' T^2 -- matmul FLOPs per task (alpha=1 Wino, 2 FFT)."""
+    return alpha * 2 * r * c_in * c_out * t * t
+
+
+def ai_fast_level(r: int) -> float:
+    """Arithmetic intensity against the shared fast level == R/2 (paper S5.1)."""
+    return r / 2.0
+
+
+def ai_dram(c_in: int, c_out: int, t: int, t_out: int, alpha: int = 1) -> float:
+    """AI against main memory: FLOPs / (input+output tile bytes)."""
+    flops = alpha * 2 * c_in * c_out * t * t
+    byts = 4 * t * t * c_in + 4 * t_out * t_out * c_out
+    return flops / byts
+
+
+def min_r(hw: HardwareModel) -> int:
+    """Lower bound: R >= 2 CMR_fast for full utilisation at the shared level."""
+    import math
+
+    return int(math.ceil(2 * hw.cmr_fast))
+
+
+def max_r(hw: HardwareModel, c_in: int, c_out: int, t: int) -> int:
+    """Upper bound from the shared buffer fitting half the private memory."""
+    from repro.core.sharedbuf import max_r_for_budget
+
+    return max_r_for_budget(hw.private_bytes // 2, c_in, c_out, t)
+
+
+def predicted_utilization(
+    hw: HardwareModel, r: int, c_in: int, c_out: int, t: int, t_out: int,
+    alpha: int = 1,
+) -> float:
+    """min over memory levels of AI/CMR, capped at 1 (paper S2.3)."""
+    u_fast = ai_fast_level(r) / hw.cmr_fast
+    u_dram = ai_dram(c_in, c_out, t, t_out, alpha) / hw.cmr_dram
+    return min(1.0, u_fast, u_dram)
+
+
+def fused_is_feasible(
+    hw: HardwareModel, c_in: int, c_out: int, t: int, frac: float = 0.5
+) -> bool:
+    """Right-hand matrices must occupy <= a constant fraction of shared fast
+    memory (paper S4.1.1)."""
+    return kernel_matrix_bytes(c_in, c_out, t) <= frac * hw.fast_shared_bytes
+
+
+def choose_algo(
+    hw: HardwareModel, c_in: int, c_out: int, t: int
+) -> Literal["l3_fused", "three_stage"]:
+    """The "wisdom file": fused where the kernel matrices fit the shared
+    level AND a feasible R exists between the bounds."""
+    if not fused_is_feasible(hw, c_in, c_out, t):
+        return "three_stage"
+    if max_r(hw, c_in, c_out, t) < max(8, min_r(hw) // 2):
+        return "three_stage"
+    return "l3_fused"

@@ -1,0 +1,90 @@
+"""Public convolution API with algorithm selection.
+
+    conv2d(x, w, pad=1, algo="l3_fused")      # the paper's contribution
+    conv2d(x, w, pad=1, algo="three_stage")   # vendor-structure baseline
+    conv2d(x, w, pad=1, algo="direct")        # XLA direct conv (the "DNNL"
+                                              # stand-in on this backend)
+    conv2d(x, w, pad=1, algo="fft_fused")     # FFT-basis fused variant
+    conv2d(x, w, pad=1, algo="l3_fused_pallas")  # the Pallas TPU kernel
+    conv2d(x, w, pad=1, algo="auto")          # paper's wisdom-file choice
+
+Layout: NHWC activations, HWIO kernels (TPU-native).  `conv1d` covers the
+depthwise-causal short convs of the SSM architectures.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import analysis
+from repro.core.fft_conv import conv2d_fft_fused
+from repro.core.fused import conv2d_l3_fused
+from repro.core.three_stage import conv2d_three_stage
+
+ALGOS = ("direct", "three_stage", "l3_fused", "fft_fused", "l3_fused_pallas", "auto")
+
+
+def conv2d_direct(x: jnp.ndarray, w: jnp.ndarray, *, pad: int = 0) -> jnp.ndarray:
+    """XLA's own convolution -- the vendor-library stand-in."""
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(1, 1),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv2d(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    pad: int = 0,
+    algo: str = "auto",
+    m: Optional[int] = None,
+    r_tiles: int = 24,
+    hw: analysis.HardwareModel = analysis.TPU_V5E,
+) -> jnp.ndarray:
+    """2-D convolution, NHWC x HWIO -> NHWC."""
+    if algo not in ALGOS:
+        raise ValueError(f"unknown algo {algo!r}, expected one of {ALGOS}")
+    if algo == "auto":
+        k = w.shape[0]
+        t = (m if m is not None else 5) + k - 1
+        algo = analysis.choose_algo(hw, x.shape[3], w.shape[3], t)
+    if algo == "direct":
+        return conv2d_direct(x, w, pad=pad)
+    if algo == "three_stage":
+        return conv2d_three_stage(x, w, pad=pad, m=m)
+    if algo == "l3_fused":
+        return conv2d_l3_fused(x, w, pad=pad, m=m, r_tiles=r_tiles)
+    if algo == "fft_fused":
+        return conv2d_fft_fused(x, w, pad=pad, r_tiles=r_tiles)
+    if algo == "l3_fused_pallas":
+        from repro.kernels.fused_winograd import ops as fw_ops
+
+        return fw_ops.conv2d_fused_pallas(x, w, pad=pad, m=m, r_tiles=r_tiles)
+    raise AssertionError(algo)
+
+
+def conv1d_depthwise_causal(
+    x: jnp.ndarray, w: jnp.ndarray, *, use_pallas: bool = False
+) -> jnp.ndarray:
+    """Depthwise causal conv1d: x (B, L, D), w (K, D) -> (B, L, D).
+
+    The Mamba-family short conv.  `use_pallas` selects the fused VMEM kernel
+    (repro.kernels.conv1d_fused); default is the jnp reference, which XLA
+    fuses adequately on CPU.
+    """
+    if use_pallas:
+        from repro.kernels.conv1d_fused import ops as c1_ops
+
+        return c1_ops.conv1d_fused(x, w)
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K is tiny (4); unrolled shifted MACs
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out

@@ -1,0 +1,71 @@
+"""FFT-based transformed convolution (the paper's second transform family).
+
+Same OLA tiling and task structure as the Winograd path; the basis transform
+is an rFFT over each T x T tile.  Cross-correlation via the correlation
+theorem:  y = irfft2( rfft2(d) * conj(rfft2(g, s=(T,T))) )[:T', :T'] --
+circular wrap-around only contaminates the last K-1 rows/cols, which OLA
+discards.  rfft keeps T*(T/2+1) frequencies (the paper's conjugate
+anti-symmetric ~2x saving); each frequency's channel-mix is a complex
+matmul (alpha = 2 in the paper's FLOP accounting -- 4 real mults per MAC).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tiling
+
+
+def transform_kernels_fft(w: jnp.ndarray, t: int) -> jnp.ndarray:
+    """HWIO (K, K, C, C') -> (T, T//2+1, C, C') complex right-hand matrices."""
+    wf = jnp.fft.rfft2(w, s=(t, t), axes=(0, 1))
+    return jnp.conj(wf)
+
+
+def conv2d_fft_fused(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    pad: int = 0,
+    t: int = 16,
+    r_tiles: int = 16,
+    wt: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """NHWC L3-fused FFT convolution (paper: T >= 16 works well for FFT)."""
+    k = w.shape[0]
+    plan = tiling.TilePlan.build(x.shape[1], x.shape[2], k, pad, t)
+    if wt is None:
+        wt = transform_kernels_fft(w, t)
+    batch, c_in = x.shape[0], x.shape[3]
+    c_out = wt.shape[3]
+
+    xp = tiling.pad_input(x, plan)
+    tiles = tiling.extract_tiles(xp, plan)  # (B, nH, nW, T, T, C)
+    n_tile = batch * plan.tiles_per_image
+    tiles = tiles.reshape(n_tile, t, t, c_in)
+
+    r = min(r_tiles, n_tile)
+    n_task = -(-n_tile // r)
+    n_pad = n_task * r
+    if n_pad > n_tile:
+        tiles = jnp.concatenate(
+            [tiles, jnp.zeros((n_pad - n_tile, t, t, c_in), tiles.dtype)], 0
+        )
+    tiles = tiles.reshape(n_task, r, t, t, c_in)
+
+    def task(carry, tl):
+        u = jnp.fft.rfft2(tl, axes=(1, 2))  # (R, T, F, C) complex
+        mm = jnp.einsum("rxfc,xfcd->rxfd", u, wt)
+        y = jnp.fft.irfft2(mm, s=(t, t), axes=(1, 2))
+        return carry, y[:, : plan.t_out, : plan.t_out, :]
+
+    _, y_tiles = jax.lax.scan(task, jnp.zeros((), x.dtype), tiles)
+    y_tiles = y_tiles.reshape(n_pad, plan.t_out, plan.t_out, c_out)[:n_tile]
+    y_tiles = y_tiles.reshape(
+        batch, plan.n_tiles_h, plan.n_tiles_w, plan.t_out, plan.t_out, c_out
+    )
+    return tiling.assemble_tiles(y_tiles, plan).astype(x.dtype)

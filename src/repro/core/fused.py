@@ -1,0 +1,126 @@
+"""The paper's contribution: the L3-fused transformed convolution.
+
+Instead of three full-layer stages, tiles are processed in N_task =
+ceil(N_tile / R) independent *tasks*.  Each task
+
+  1. forward-transforms R tile-groups            (R instances of step 1)
+  2. performs the T^2 small matmuls (RxC)@(CxC') against the *stationary*
+     right-hand (transformed-kernel) matrices
+  3. inverse-transforms the R results
+
+so the per-task intermediates (R x C and R x C' matrices, T^2 of each) stay
+in fast private memory, and the T^2 right-hand matrices -- re-read by every
+task -- stay hot in the fast shared level (L3 on CPU; VMEM-stationary on the
+TPU Pallas path, see repro.kernels.fused_winograd).
+
+This module is the pure-JAX expression of the algorithm: a `lax.scan` over
+tasks models the per-core sequential task stream; tasks are embarrassingly
+parallel across cores/chips (paper S4) -- on the TPU mesh, the tile axis is
+sharded over the `data` axis and each chip scans its own tasks.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tiling, transforms
+from repro.core.three_stage import transform_kernels
+
+
+def _tile_offsets(plan: tiling.TilePlan, batch: int) -> np.ndarray:
+    """(N_tile, 3) int32: (batch, row0, col0) of every input tile, flat order."""
+    b_idx, h_idx, w_idx = np.meshgrid(
+        np.arange(batch),
+        np.arange(plan.n_tiles_h) * plan.t_out,
+        np.arange(plan.n_tiles_w) * plan.t_out,
+        indexing="ij",
+    )
+    return np.stack(
+        [b_idx.ravel(), h_idx.ravel(), w_idx.ravel()], axis=1
+    ).astype(np.int32)
+
+
+def _gather_tiles(x_padded: jnp.ndarray, offsets: jnp.ndarray, t: int) -> jnp.ndarray:
+    """Gather R overlapping (T, T, C) tiles given (R, 3) offsets."""
+
+    def one(off):
+        return jax.lax.dynamic_slice(
+            x_padded,
+            (off[0], off[1], off[2], 0),
+            (1, t, t, x_padded.shape[3]),
+        )[0]
+
+    return jax.vmap(one)(offsets)  # (R, T, T, C)
+
+
+def conv2d_l3_fused(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    pad: int = 0,
+    m: Optional[int] = None,
+    r_tiles: int = 24,
+    wt: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """NHWC L3-fused transformed convolution.
+
+    Args:
+      x: (B, H, W, C) input.
+      w: (K, K, C, C') kernels (HWIO); ignored if `wt` given.
+      pad: symmetric spatial padding.
+      m: Winograd output-tile size (T = m + K - 1).  Default m=5, T=7 --
+         the paper's benchmark configuration.
+      r_tiles: R, tiles per task (paper uses R=24 on SkylakeX, R=8 on i7).
+      wt: pre-transformed kernels (T*T, C, C') -- the inference-time path.
+    """
+    k = w.shape[0]
+    m = m if m is not None else 5  # T = 7, the paper's fixed benchmark config
+    t = m + k - 1
+    plan = tiling.TilePlan.build(x.shape[1], x.shape[2], k, pad, t)
+    if wt is None:
+        wt = transform_kernels(w, m)
+    batch, c_in = x.shape[0], x.shape[3]
+    c_out = wt.shape[2]
+
+    at_np, _, bt_np = transforms.winograd_matrices(m, k)
+    at = jnp.asarray(at_np, x.dtype)
+    bt = jnp.asarray(bt_np, x.dtype)
+
+    xp = tiling.pad_input(x, plan)
+    n_tile = plan.n_tiles(batch)
+    r = min(r_tiles, n_tile)
+    n_task = -(-n_tile // r)
+    n_pad = n_task * r
+
+    offsets = _tile_offsets(plan, batch)
+    if n_pad > n_tile:  # pad the task list by repeating the last tile
+        offsets = np.concatenate(
+            [offsets, np.repeat(offsets[-1:], n_pad - n_tile, axis=0)], axis=0
+        )
+    offsets = jnp.asarray(offsets).reshape(n_task, r, 3)
+
+    def task(carry_out_tiles, off_r):
+        # step 1: gather + forward-transform R tiles -> (T^2, R, C)
+        tiles = _gather_tiles(xp, off_r, t)  # (R, T, T, C)
+        u = jnp.einsum("xi,rijc,yj->xyrc", bt, tiles, bt)
+        u = u.reshape(t * t, r, c_in)
+        # step 2: T^2 small matmuls against the stationary right-hand matrices
+        mm = jnp.einsum("src,scd->srd", u, wt)  # (T^2, R, C')
+        # step 3: inverse transform
+        z = mm.reshape(t, t, r, c_out)
+        y = jnp.einsum("xi,ijrc,yj->rxyc", at, z, at)  # (R, T', T', C')
+        return carry_out_tiles, y
+
+    _, y_tiles = jax.lax.scan(
+        task, jnp.zeros((), x.dtype), offsets
+    )  # (n_task, R, T', T', C')
+    y_tiles = y_tiles.reshape(n_pad, plan.t_out, plan.t_out, c_out)[:n_tile]
+    y_tiles = y_tiles.reshape(
+        batch, plan.n_tiles_h, plan.n_tiles_w, plan.t_out, plan.t_out, c_out
+    )
+    return tiling.assemble_tiles(y_tiles, plan)

@@ -1,0 +1,124 @@
+"""The state-of-the-art *non-fused* 3-stage transformed convolution.
+
+This is the structure the paper attributes to DNNL / ZNN / LIBXSMM / FALCON
+(and uses as its own baseline): each stage runs over ALL tiles before the
+next begins, materialising the full transformed tensors
+
+    U: (T*T, N_tile, C)     "left-hand matrices"
+    M: (T*T, N_tile, C')    products
+
+in main memory (HBM on TPU).  Stages 1 and 3 are memory-bound; stage 2 is
+the only potentially compute-bound part (paper S3).
+
+For honest CPU benchmarking the three stages can be jitted *separately*
+(`three_stage_staged`), preventing XLA from fusing across stage boundaries,
+which is exactly the materialisation behaviour of the vendor libraries.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tiling, transforms
+
+
+def transform_kernels(w: jnp.ndarray, m: int) -> jnp.ndarray:
+    """HWIO kernels (K, K, C, C') -> right-hand matrices (T*T, C, C').
+
+    Done once ahead of time (paper footnote 1: transformed kernels are
+    precomputed and stored for inference; see also Liu et al. for training).
+    """
+    k = w.shape[0]
+    _, g, _ = transforms.winograd_matrices(m, k)
+    g = jnp.asarray(g, w.dtype)
+    # W_t[x, y] = G W G^T per (C, C') pair
+    wt = jnp.einsum("xi,ijcd,yj->xycd", g, w, g)
+    t = m + k - 1
+    return wt.reshape(t * t, w.shape[2], w.shape[3])
+
+
+def stage1_input_transform(
+    x_padded: jnp.ndarray, plan: tiling.TilePlan
+) -> jnp.ndarray:
+    """All input tiles -> U: (T*T, N_tile, C)."""
+    bt_np, _, _ = _mats(plan)
+    bt = jnp.asarray(bt_np, x_padded.dtype)
+    tiles = tiling.extract_tiles(x_padded, plan)  # (B, nH, nW, T, T, C)
+    b = tiles.shape[0]
+    tiles = tiles.reshape(b * plan.tiles_per_image, plan.t, plan.t, -1)
+    u = jnp.einsum("xi,nijc,yj->xync", bt, tiles, bt)
+    n_tile = u.shape[2]
+    return u.reshape(plan.t * plan.t, n_tile, -1)
+
+
+def stage2_multiply(u: jnp.ndarray, wt: jnp.ndarray) -> jnp.ndarray:
+    """T*T large matmuls: (T*T, N, C) @ (T*T, C, C') -> (T*T, N, C')."""
+    return jnp.einsum("snc,scd->snd", u, wt)
+
+
+def stage3_inverse_transform(
+    m_tensor: jnp.ndarray, plan: tiling.TilePlan, batch: int
+) -> jnp.ndarray:
+    """M: (T*T, N_tile, C') -> assembled output (B, H', W', C')."""
+    _, _, at_np = _mats(plan)
+    at = jnp.asarray(at_np, m_tensor.dtype)
+    n_tile = m_tensor.shape[1]
+    z = m_tensor.reshape(plan.t, plan.t, n_tile, -1)
+    y_tiles = jnp.einsum("xi,ijnc,yj->nxyc", at, z, at)
+    y_tiles = y_tiles.reshape(
+        batch, plan.n_tiles_h, plan.n_tiles_w, plan.t_out, plan.t_out, -1
+    )
+    return tiling.assemble_tiles(y_tiles, plan)
+
+
+def _mats(plan: tiling.TilePlan):
+    m = plan.t_out
+    at, g, bt = transforms.winograd_matrices(m, plan.k)
+    return bt, g, at
+
+
+def conv2d_three_stage(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    pad: int = 0,
+    m: Optional[int] = None,
+    wt: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """NHWC x (B,H,W,C), HWIO w (K,K,C,C') -> (B,H',W',C'). Single-jit form."""
+    k = w.shape[0]
+    m = m if m is not None else 6  # T = 8 default
+    plan = tiling.TilePlan.build(x.shape[1], x.shape[2], k, pad, m + k - 1)
+    if wt is None:
+        wt = transform_kernels(w, m)
+    xp = tiling.pad_input(x, plan)
+    u = stage1_input_transform(xp, plan)
+    mm = stage2_multiply(u, wt)
+    return stage3_inverse_transform(mm, plan, x.shape[0])
+
+
+class ThreeStageStaged:
+    """Stage-separated (separately jitted) 3-stage pipeline.
+
+    Mirrors vendor-library behaviour: each stage is an independent compiled
+    program; U and M round-trip through main memory between stages.
+    """
+
+    def __init__(self, plan: tiling.TilePlan):
+        self.plan = plan
+        self._s1 = jax.jit(lambda xp: stage1_input_transform(xp, plan))
+        self._s2 = jax.jit(stage2_multiply)
+        self._s3 = jax.jit(
+            lambda mt, b: stage3_inverse_transform(mt, plan, b), static_argnums=1
+        )
+        self._pad = jax.jit(lambda x: tiling.pad_input(x, plan))
+
+    def __call__(self, x: jnp.ndarray, wt: jnp.ndarray) -> jnp.ndarray:
+        xp = self._pad(x)
+        u = jax.block_until_ready(self._s1(xp))
+        mm = jax.block_until_ready(self._s2(u, wt))
+        return jax.block_until_ready(self._s3(mm, x.shape[0]))

@@ -1,0 +1,161 @@
+"""Winograd (Cook-Toom) and FFT transform construction.
+
+Winograd F(m, r): computes m outputs of a valid 1-D correlation with an
+r-tap filter from a tile of n = m + r - 1 inputs as
+
+    y = A^T [ (G g) . (B^T d) ]            (Lavin & Gray form)
+
+We construct the matrices exactly, over rationals, via the transpose/dual of
+Toom-Cook polynomial multiplication with n-1 finite interpolation points and
+one point at infinity:
+
+  full linear convolution u = z * g (sizes m, r -> n) is exactly
+
+      u = E^{-1} [ (Vz z) . (Vg g) ]
+
+  where Vz[i,:] = [a_i^0 .. a_i^{m-1}]  (last row = leading-coeff / infinity),
+        Vg[i,:] = [a_i^0 .. a_i^{r-1}]  (last row = leading-coeff),
+        E[i,:]  = [a_i^0 .. a_i^{n-1}]  (last row = leading-coeff).
+
+  The map z -> u for fixed g is M z with M[s, i] = g_{s-i}; its transpose
+  M^T d computes (M^T d)_i = sum_k g_k d_{i+k} -- exactly the correlation.
+  Transposing the Toom-Cook factorisation gives
+
+      y = Vz^T diag(Vg g) E^{-T} d   =>   A^T = Vz^T,  G = Vg,  B^T = E^{-T}.
+
+All arithmetic over `fractions.Fraction`, converted to float32/float64 at the
+end, so the only rounding is the final representation -- the transform
+matrices themselves are exact.
+"""
+
+from __future__ import annotations
+
+import functools
+from fractions import Fraction
+from typing import Sequence, Tuple
+
+import numpy as np
+
+# Canonical interpolation-point sequence.  The ordering matters for numerical
+# stability (Lavin & Gray; wincnn): small magnitudes and +/- pairs first.
+_CANONICAL_POINTS: Tuple[Fraction, ...] = tuple(
+    Fraction(p)
+    for p in [
+        0,
+        1,
+        -1,
+        Fraction(1, 2),
+        Fraction(-1, 2),
+        2,
+        -2,
+        Fraction(1, 4),
+        Fraction(-1, 4),
+        4,
+        -4,
+        Fraction(3, 4),
+        Fraction(-3, 4),
+        Fraction(4, 3),
+        Fraction(-4, 3),
+        3,
+        -3,
+    ]
+)
+
+
+def interpolation_points(n_finite: int) -> Tuple[Fraction, ...]:
+    """First `n_finite` canonical finite interpolation points."""
+    if n_finite > len(_CANONICAL_POINTS):
+        raise ValueError(
+            f"need {n_finite} interpolation points, have "
+            f"{len(_CANONICAL_POINTS)} canonical ones"
+        )
+    return _CANONICAL_POINTS[:n_finite]
+
+
+def _vandermonde(points: Sequence[Fraction], width: int) -> list[list[Fraction]]:
+    """Rows [a^0 .. a^{width-1}] per finite point, plus the infinity row."""
+    rows = [[p ** j for j in range(width)] for p in points]
+    rows.append([Fraction(0)] * (width - 1) + [Fraction(1)])
+    return rows
+
+
+def _invert_exact(mat: list[list[Fraction]]) -> list[list[Fraction]]:
+    """Exact Gauss-Jordan inverse over Fractions."""
+    n = len(mat)
+    aug = [row[:] + [Fraction(int(i == j)) for j in range(n)] for i, row in enumerate(mat)]
+    for col in range(n):
+        pivot = next((r for r in range(col, n) if aug[r][col] != 0), None)
+        if pivot is None:
+            raise ValueError("singular interpolation matrix (repeated points?)")
+        aug[col], aug[pivot] = aug[pivot], aug[col]
+        inv_p = Fraction(1) / aug[col][col]
+        aug[col] = [v * inv_p for v in aug[col]]
+        for r in range(n):
+            if r != col and aug[r][col] != 0:
+                f = aug[r][col]
+                aug[r] = [a - f * b for a, b in zip(aug[r], aug[col])]
+    return [row[n:] for row in aug]
+
+
+@functools.lru_cache(maxsize=None)
+def winograd_matrices_exact(m: int, r: int):
+    """Exact Fraction-valued (A^T, G, B^T) for F(m, r). Shapes (m,n),(n,r),(n,n)."""
+    if m < 1 or r < 1:
+        raise ValueError("m and r must be positive")
+    n = m + r - 1
+    if n == 1:  # degenerate 1x1 "conv"
+        one = [[Fraction(1)]]
+        return one, one, one
+    pts = interpolation_points(n - 1)
+    vz = _vandermonde(pts, m)  # n x m
+    vg = _vandermonde(pts, r)  # n x r
+    ev = _vandermonde(pts, n)  # n x n
+    ev_inv = _invert_exact(ev)
+    at = [[vz[j][i] for j in range(n)] for i in range(m)]  # Vz^T: m x n
+    bt = [[ev_inv[j][i] for j in range(n)] for i in range(n)]  # E^{-T}: n x n
+    return at, vg, bt
+
+
+def _to_np(mat, dtype) -> np.ndarray:
+    return np.array([[float(v) for v in row] for row in mat], dtype=dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def winograd_matrices(m: int, r: int, dtype=np.float32):
+    """(A^T, G, B^T) for F(m, r) as numpy arrays.
+
+    A^T: (m, n)   output (inverse) transform
+    G  : (n, r)   kernel transform
+    B^T: (n, n)   input transform,  n = m + r - 1 (the tile size T)
+    """
+    at, g, bt = winograd_matrices_exact(m, r)
+    return _to_np(at, dtype), _to_np(g, dtype), _to_np(bt, dtype)
+
+
+def tile_size(m: int, r: int) -> int:
+    return m + r - 1
+
+
+def output_tile(t: int, r: int) -> int:
+    """T' = T - K + 1."""
+    return t - r + 1
+
+
+# ---------------------------------------------------------------------------
+# FFT transforms.  For tile size T, cross-correlation with a K-tap kernel is
+# computed via the correlation theorem on a T-point (r)FFT:
+#     y = irfft( rfft(d) * conj(rfft(g, n=T)) )[0 : T-K+1]
+# The wrap-around of the circular correlation only contaminates the last K-1
+# outputs, which the OLA tiling discards.  The transformed-kernel tensor is
+# complex with T/2+1 frequencies per axis -- the paper's "conjugate
+# anti-symmetric" ~2x saving falls out of using rfft directly.
+# ---------------------------------------------------------------------------
+
+
+def fft_num_freqs(t: int) -> int:
+    return t // 2 + 1
+
+
+def fft_flops_per_point() -> int:
+    """Complex multiply-accumulate = 4 real mults + 4 adds (paper's alpha=2)."""
+    return 8

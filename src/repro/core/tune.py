@@ -1,0 +1,84 @@
+"""The paper's "wisdom file" (S7): measured R tuning, cached on disk.
+
+    from repro.core.tune import tuned_r
+    r = tuned_r(h=56, w=56, c_in=64, c_out=64)   # measures once, caches
+
+The analytical bounds (core.analysis) give the feasible range; within it we
+time the fused convolution at a few candidate R values and store the
+winner keyed by (layer geometry, tile size, backend).
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import pathlib
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analysis
+from repro.core.fused import conv2d_l3_fused
+
+_DEFAULT_WISDOM = pathlib.Path.home() / ".cache" / "repro_wisdom.json"
+_CANDIDATES = (4, 8, 16, 24, 32, 48)
+
+
+def _key(h, w, c_in, c_out, k, m) -> str:
+    return f"{jax.default_backend()}:{h}x{w}x{c_in}->{c_out}:k{k}:m{m}"
+
+
+def _load(path: pathlib.Path) -> dict:
+    try:
+        return json.loads(path.read_text())
+    except (OSError, ValueError):
+        return {}
+
+
+def measure_r(
+    h: int, w: int, c_in: int, c_out: int, *, k: int = 3, m: int = 5,
+    batch: int = 1, candidates: Sequence[int] = _CANDIDATES, reps: int = 3,
+) -> int:
+    """Time the fused conv at each candidate R; return the fastest."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((batch, h, w, c_in)) * 0.1, jnp.float32)
+    wk = jnp.asarray(rng.standard_normal((k, k, c_in, c_out)) * 0.1, jnp.float32)
+    hw = analysis.TPU_V5E if jax.default_backend() == "tpu" else analysis.SKYLAKE_X
+    r_max = analysis.max_r(hw, c_in, c_out, m + k - 1)
+    best_r, best_t = None, float("inf")
+    for r in candidates:
+        if r > max(r_max, min(candidates)):
+            continue
+        fn = jax.jit(
+            functools.partial(conv2d_l3_fused, pad=1, m=m, r_tiles=r)
+        )
+        jax.block_until_ready(fn(x, wk))  # compile
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x, wk))
+            ts.append(time.perf_counter() - t0)
+        t = sorted(ts)[len(ts) // 2]
+        if t < best_t:
+            best_r, best_t = r, t
+    return best_r if best_r is not None else min(candidates)
+
+
+def tuned_r(
+    h: int, w: int, c_in: int, c_out: int, *, k: int = 3, m: int = 5,
+    wisdom_path: Optional[pathlib.Path] = None,
+) -> int:
+    """Cached best R for this layer geometry (measures on first use)."""
+    path = pathlib.Path(wisdom_path or _DEFAULT_WISDOM)
+    wisdom = _load(path)
+    key = _key(h, w, c_in, c_out, k, m)
+    if key in wisdom:
+        return int(wisdom[key])
+    r = measure_r(h, w, c_in, c_out, k=k, m=m)
+    wisdom[key] = int(r)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(wisdom, indent=1, sort_keys=True))
+    return r

@@ -1,0 +1,247 @@
+"""Path-based sharding rule engine.
+
+One rule set covers all 10 heterogeneous architectures: each param / cache /
+batch leaf gets a PartitionSpec derived from its key path and shape, with a
+divisibility fallback (a dim that does not divide its mesh axis is
+replicated instead of erroring) -- the property that lets e.g. 8 KV heads
+coexist with a 16-way model axis.
+
+Parallelism mapping (DESIGN.md S6):
+  model axis   TP: attention heads / MLP hidden / experts (EP) / vocab
+  data axis    DP for batch; FSDP (ZeRO-3 via GSPMD) for params+optimizer
+  pod axis     joins FSDP for params/optimizer (hierarchical reduction);
+               joins DP for batch
+Sequence/context parallelism: for batch-1 long-context decode the KV-cache
+sequence dim is sharded over `model` (GSPMD lowers the sharded-softmax to
+the flash-decoding split-K pattern).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+# leaf-name -> index (from the leaf's trailing dims) of the tensor-parallel
+# dim.  Negative indices count from the end, so stacked (scan) leading repeat
+# dims need no special-casing.
+_TP_DIM_RULES: Tuple[Tuple[str, int], ...] = (
+    # embeddings / heads: vocab dim
+    (r"\bembed$", -2),
+    (r"\blm_head$", -1),
+    # attention projections: head dim outward
+    (r"\bwq$", -1), (r"\bwk$", -1), (r"\bwv$", -1), (r"\bwo$", -2),
+    (r"\bbq$", -1), (r"\bbk$", -1), (r"\bbv$", -1),
+    # MLA
+    (r"\bwq_a$", -1), (r"\bwq_b$", -1),
+    (r"\bwkv_a$", -1), (r"\bwk_b$", -1), (r"\bwv_b$", -1),
+    # dense MLP
+    (r"\bw1$", -1), (r"\bw3$", -1), (r"\bw2$", -2),
+    (r"\bshared_w1$", -1), (r"\bshared_w3$", -1), (r"\bshared_w2$", -2),
+    # mamba
+    (r"\bin_proj$", -1), (r"\bout_proj$", -2), (r"\bconv_w$", -1),
+    (r"\bconv_b$", -1),
+    # MTP projection
+    (r"\bproj$", -1),
+)
+
+# leaves that must stay replicated (small / f32-critical)
+_REPLICATED = re.compile(
+    r"(norm|ln1|ln2|ln_cross|router|dt_bias|A_log|\bD$|scale|lora_|count)"
+)
+
+# FSDP: shard the largest remaining dim over data (and pod, if present)
+_FSDP_MIN_SIZE = 2**16  # don't bother sharding tiny tensors
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for a parameter leaf."""
+    spec = [None] * len(shape)
+    model = _axis_size(mesh, "model") if "model" in mesh.shape else 1
+
+    if not _REPLICATED.search(path):
+        for pat, dim in _TP_DIM_RULES:
+            if re.search(pat, path):
+                d = dim % len(shape) if dim < 0 else dim
+                if len(shape) > d >= 0 and shape[d] % model == 0 and model > 1:
+                    spec[d] = "model"
+                break
+        # MoE expert tables: expert dim is the first non-stacked dim
+        if re.search(r"moe/(w1|w3|w2)$", path) or (
+            re.search(r"\b(w1|w3|w2)$", path) and len(shape) >= 3
+        ):
+            # (..., E, D, F): put model on E instead (EP)
+            e_dim = len(shape) - 3
+            if shape[e_dim] % model == 0 and model > 1:
+                spec = [None] * len(shape)
+                spec[e_dim] = "model"
+
+    # FSDP over (pod, data) on the largest remaining dim
+    fsdp = _fsdp_axes(mesh)
+    if fsdp and np.prod(shape) >= _FSDP_MIN_SIZE:
+        fsdp_size = int(np.prod([_axis_size(mesh, a) for a in fsdp]))
+        dims = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for d in dims:
+            if spec[d] is None and shape[d] % fsdp_size == 0:
+                spec[d] = fsdp if len(fsdp) > 1 else fsdp[0]
+                break
+    return P(*spec)
+
+
+def cache_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """PartitionSpec for a decode-cache leaf.
+
+    Layouts (with a leading stacked repeat dim):
+      kv      (rep, B, len, Hkv, hd)   B->data; Hkv->model else len->model
+      pos     (rep, B, len)
+      mla     (rep, B, len, rank)      B->data; len->model
+      conv    (rep, B, K-1, d_xbc)     B->data; d_xbc->model
+      ssm     (rep, B, H, P, N)        B->data; H->model
+    """
+    spec = [None] * len(shape)
+    model = _axis_size(mesh, "model") if "model" in mesh.shape else 1
+    data_axes = _fsdp_axes(mesh)
+    data_size = int(np.prod([_axis_size(mesh, a) for a in data_axes])) if data_axes else 1
+
+    # batch dim: index 1 when stacked (rep leading), else 0
+    b_dim = 1 if len(shape) >= 3 else 0
+    if data_axes and shape[b_dim] % data_size == 0:
+        spec[b_dim] = data_axes if len(data_axes) > 1 else data_axes[0]
+    elif "data" in mesh.shape and shape[b_dim] % _axis_size(mesh, "data") == 0:
+        spec[b_dim] = "data"
+
+    if model > 1:
+        if path.endswith("/k") or path.endswith("/v"):
+            h_dim, len_dim = len(shape) - 2, len(shape) - 3
+            if shape[h_dim] % model == 0:
+                spec[h_dim] = "model"
+            elif shape[len_dim] % model == 0:
+                spec[len_dim] = "model"  # context parallelism
+        elif path.endswith("/pos"):
+            pass  # positions stay replicated along model
+        elif path.endswith("/c_kv") or path.endswith("/k_rope"):
+            len_dim = len(shape) - 2
+            if shape[len_dim] % model == 0:
+                spec[len_dim] = "model"
+        elif path.endswith("/conv"):
+            if shape[-1] % model == 0:
+                spec[-1] = "model"
+        elif path.endswith("/ssm"):
+            h_dim = len(shape) - 3
+            if shape[h_dim] % model == 0:
+                spec[h_dim] = "model"
+    return P(*spec)
+
+
+def batch_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Input batch: batch dim over (pod, data) when divisible."""
+    spec = [None] * len(shape)
+    axes = _fsdp_axes(mesh)
+    if not shape:
+        return P()
+    size = int(np.prod([_axis_size(mesh, a) for a in axes])) if axes else 1
+    if axes and shape[0] % size == 0:
+        spec[0] = axes if len(axes) > 1 else axes[0]
+    elif "data" in mesh.shape and shape[0] % _axis_size(mesh, "data") == 0:
+        spec[0] = "data"
+    return P(*spec)
+
+
+def _tree_shardings(tree: Pytree, mesh: Mesh, spec_fn) -> Pytree:
+    def leaf(path, x):
+        return NamedSharding(mesh, spec_fn(_path_str(path), x.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+def _tree_bytes(tree: Pytree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def shard_params(shapes: Pytree, mesh: Mesh) -> Pytree:
+    """Adaptive FSDP: trees small enough to replicate per chip skip the
+    data-axis sharding entirely (no per-layer all-gather storms for models
+    that fit -- EXPERIMENTS.md SPerf gemma3 iteration)."""
+    from repro.models.runtime_flags import FLAGS
+
+    if _tree_bytes(shapes) < FLAGS.fsdp_min_tree_bytes:
+        return _tree_shardings(shapes, mesh, _tp_only_spec)
+    return _tree_shardings(shapes, mesh, param_spec)
+
+
+def shard_params_for_inference(shapes: Pytree, mesh: Mesh) -> Pytree:
+    """Inference param sharding: there are no optimizer states to amortise,
+    so data-axis (FSDP) sharding only buys per-layer all-gathers at decode
+    (the collective-bound decode cells in EXPERIMENTS.md SPerf-beyond).
+    Use TP-only whenever the TP-sharded tree fits per chip; fall back to
+    2-D sharding for models that don't (deepseek-v3)."""
+    from repro.models.runtime_flags import FLAGS
+
+    if FLAGS.fsdp_min_tree_bytes == 0:  # baseline config: FSDP everything
+        return _tree_shardings(shapes, mesh, param_spec)
+    model = mesh.shape.get("model", 1)
+    tp_bytes_per_chip = _tree_bytes(shapes) / max(model, 1)
+    if tp_bytes_per_chip <= 6 << 30:
+        return _tree_shardings(shapes, mesh, _tp_only_spec)
+    return _tree_shardings(shapes, mesh, param_spec)
+
+
+def _tp_only_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """param_spec without the FSDP pass (TP sharding only)."""
+    spec = [None] * len(shape)
+    model = _axis_size(mesh, "model") if "model" in mesh.shape else 1
+    if not _REPLICATED.search(path):
+        for pat, dim in _TP_DIM_RULES:
+            if re.search(pat, path):
+                d = dim % len(shape) if dim < 0 else dim
+                if len(shape) > d >= 0 and shape[d] % model == 0 and model > 1:
+                    spec[d] = "model"
+                break
+        if re.search(r"moe/(w1|w3|w2)$", path) or (
+            re.search(r"\b(w1|w3|w2)$", path) and len(shape) >= 3
+        ):
+            e_dim = len(shape) - 3
+            if shape[e_dim] % model == 0 and model > 1:
+                spec = [None] * len(shape)
+                spec[e_dim] = "model"
+    return P(*spec)
+
+
+def shard_cache(shapes: Pytree, mesh: Mesh) -> Pytree:
+    return _tree_shardings(shapes, mesh, cache_spec)
+
+
+def shard_batch(shapes: Pytree, mesh: Mesh) -> Pytree:
+    return _tree_shardings(shapes, mesh, batch_spec)
+
+
+def replicated(tree: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (validated via interpret=True on CPU).
+
+fused_winograd -- the paper's L3-fused algorithm as a TPU kernel
+conv1d_fused   -- Mamba-family short causal conv, fused taps-stationary
+decode_mlp     -- beyond-paper: weight-stationary fused SwiGLU decode MLP
+"""

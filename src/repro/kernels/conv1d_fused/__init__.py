@@ -1,0 +1,4 @@
+from repro.kernels.conv1d_fused.ops import conv1d_fused
+from repro.kernels.conv1d_fused.ref import conv1d_ref
+
+__all__ = ["conv1d_fused", "conv1d_ref"]

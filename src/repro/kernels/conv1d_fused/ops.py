@@ -1,0 +1,43 @@
+"""Jitted wrapper for the fused causal conv1d Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv1d_fused.kernel import conv1d_fused_call
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "lb", "interpret"))
+def conv1d_fused(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    *,
+    activation: str = "silu",
+    lb: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Causal depthwise conv1d + bias + activation. x (B,L,D), w (K,D)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bsz, l, d = x.shape
+    k = w.shape[0]
+    if b is None:
+        b = jnp.zeros((d,), x.dtype)
+    lb = min(lb, l)
+    pad_l = (-l) % lb
+    # front-pad K-1 (causality); back-pad to a multiple of the block length
+    xp = jnp.pad(x, ((0, 0), (k - 1, pad_l), (0, 0)))
+    y = conv1d_fused_call(
+        xp,
+        w,
+        b,
+        lb=lb,
+        activation=activation,
+        interpret=interpret,
+    )
+    return y[:, :l, :]

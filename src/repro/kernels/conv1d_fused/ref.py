@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused causal conv1d."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv1d_ref(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *, activation: str = "silu"
+) -> jnp.ndarray:
+    """x (B, L, D), w (K, D), b (D,) -> (B, L, D) causal depthwise conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (k - 1, 0), (0, 0)))
+    acc = jnp.zeros(x.shape, jnp.float32)
+    for i in range(k):
+        acc = acc + xp[:, i : i + x.shape[1], :] * w[i].astype(jnp.float32)
+    acc = acc + b.astype(jnp.float32)
+    if activation == "silu":
+        acc = acc * jax.nn.sigmoid(acc)
+    return acc.astype(x.dtype)

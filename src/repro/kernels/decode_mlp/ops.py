@@ -1,0 +1,41 @@
+"""Jitted wrapper for the fused decode-MLP Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_mlp.kernel import decode_mlp_call
+
+
+@functools.partial(jax.jit, static_argnames=("rb", "fb", "interpret"))
+def decode_mlp(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    w3: jnp.ndarray,
+    w2: jnp.ndarray,
+    *,
+    rb: int = 8,
+    fb: int = 512,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused SwiGLU MLP y = (silu(xW1) * xW3) W2 for decode-sized x (B, d)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bsz, d = x.shape
+    f = w1.shape[1]
+    rb = min(rb, bsz)
+    fb = min(fb, f)
+    pad_b = (-bsz) % rb
+    if pad_b:
+        x = jnp.pad(x, ((0, pad_b), (0, 0)))
+    pad_f = (-f) % fb
+    if pad_f:
+        w1 = jnp.pad(w1, ((0, 0), (0, pad_f)))
+        w3 = jnp.pad(w3, ((0, 0), (0, pad_f)))
+        w2 = jnp.pad(w2, ((0, pad_f), (0, 0)))
+    y = decode_mlp_call(x, w1, w3, w2, rb=rb, fb=fb, interpret=interpret)
+    return y[:bsz]

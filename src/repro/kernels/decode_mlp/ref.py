@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused decode MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_mlp_ref(
+    x: jnp.ndarray, w1: jnp.ndarray, w3: jnp.ndarray, w2: jnp.ndarray
+) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    h1 = xf @ w1.astype(jnp.float32)
+    h3 = xf @ w3.astype(jnp.float32)
+    h = jax.nn.silu(h1) * h3
+    return (h @ w2.astype(jnp.float32)).astype(x.dtype)

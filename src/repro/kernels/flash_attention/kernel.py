@@ -1,0 +1,134 @@
+"""Pallas TPU flash-attention kernel (forward).
+
+The paper's L3-fusion principle applied to attention: the probability tile
+P = softmax(q_i k_j^T) is the "left-hand matrix" of the moment -- it lives
+only in VMEM scratch between the QK and PV matmuls (never HBM), while the
+KV stream plays the input-tile role.  GQA is expressed in the BlockSpec
+index map (kv head = q head // group) so shared KV heads are DMA'd once,
+not materialised per query head.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) -- kv innermost; the online
+softmax state (m, l, acc) lives in VMEM scratch across the kv loop.
+Causal / sliding-window tiles outside the band are skipped with pl.when
+(no MXU work issued).
+
+The pure-JAX custom-VJP twin (repro.models.flash_attention) is what the
+dry-run lowers; this kernel is the TPU-native form, validated against the
+same oracle in interpret mode (tests/test_kernel_flash.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _body(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, q_blk: int, kv_blk: int, causal: bool, window: int, scale: float,
+):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = i * q_blk
+    k_lo = j * kv_blk
+    # band check (static per grid step at trace time it's dynamic -- cheap
+    # scalar compare; skipped tiles issue no MXU work)
+    in_band = jnp.asarray(True)
+    if causal:
+        in_band = jnp.logical_and(in_band, k_lo <= q_lo + q_blk - 1)
+    if window > 0:
+        in_band = jnp.logical_and(
+            in_band, k_lo + kv_blk - 1 >= q_lo - window + 1
+        )
+
+    @pl.when(in_band)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (q_blk, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (kv_blk, hd)
+        v = v_ref[0, 0]  # (kv_blk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (q_blk, kv_blk)
+        qp = q_lo + jax.lax.broadcasted_iota(jnp.int32, (q_blk, kv_blk), 0)
+        kp = k_lo + jax.lax.broadcasted_iota(jnp.int32, (q_blk, kv_blk), 1)
+        ok = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            ok = jnp.logical_and(ok, kp <= qp)
+        if window > 0:
+            ok = jnp.logical_and(ok, qp - kp < window)
+        s = jnp.where(ok, s, -jnp.inf)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(ok, jnp.exp(s - m_safe[:, None]), 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v.astype(v.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_fwd_pallas(
+    q: jnp.ndarray,  # (B, Hq, Sq, hd)
+    k: jnp.ndarray,  # (B, Hkv, Sk, hd)
+    v: jnp.ndarray,  # (B, Hkv, Sk, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_blk: int = 128,
+    kv_blk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, hq, sq, hd = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    assert sq % q_blk == 0 and sk % kv_blk == 0, (sq, q_blk, sk, kv_blk)
+    body = functools.partial(
+        _body, q_blk=q_blk, kv_blk=kv_blk, causal=causal,
+        window=int(window), scale=hd ** -0.5,
+    )
+    return pl.pallas_call(
+        body,
+        grid=(b, hq, sq // q_blk, sk // kv_blk),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_blk, hd), lambda b_, h, i, j: (b_, h, i, 0)),
+            # GQA in the index map: kv head = q head // group
+            pl.BlockSpec(
+                (1, 1, kv_blk, hd), lambda b_, h, i, j: (b_, h // g, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, kv_blk, hd), lambda b_, h, i, j: (b_, h // g, j, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, q_blk, hd), lambda b_, h, i, j: (b_, h, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk,), jnp.float32),  # m
+            pltpu.VMEM((q_blk,), jnp.float32),  # l
+            pltpu.VMEM((q_blk, hd), jnp.float32),  # acc: P never leaves VMEM
+        ],
+        interpret=interpret,
+    )(q, k, v)

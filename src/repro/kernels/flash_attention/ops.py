@@ -1,0 +1,50 @@
+"""Jitted wrapper for the Pallas flash-attention kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd_pallas
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "q_blk", "kv_blk", "interpret")
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (B, Hq, Sq, hd)
+    k: jnp.ndarray,  # (B, Hkv, Sk, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_blk: int = 128,
+    kv_blk: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, hq, sq, hd = q.shape
+    sk = k.shape[2]
+    q_blk = min(q_blk, sq)
+    kv_blk = min(kv_blk, sk)
+    pad_q = (-sq) % q_blk
+    pad_k = (-sk) % kv_blk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # padded KV rows must never win the softmax: rely on causal mask for
+        # padded-q rows; for padded-k, causal (kp <= qp) masks them for all
+        # real q rows only when causal -- for non-causal, mask via window=0
+        # is unavailable, so we require causal or exact multiples.
+        assert causal or pad_k == 0, "non-causal needs Sk % kv_blk == 0"
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention_fwd_pallas(
+        q, k, v, causal=causal, window=window,
+        q_blk=q_blk, kv_blk=kv_blk, interpret=interpret,
+    )
+    return out[:, :, :sq]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the Pallas flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Hq, Sq, hd)
+    k: jnp.ndarray,  # (B, Hkv, Sk, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    b, hq, sq, hd = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = hq // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * hd ** -0.5
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kp <= qp
+    if window > 0:
+        ok &= qp - kp < window
+    s = jnp.where(ok, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(
+        q.dtype
+    )

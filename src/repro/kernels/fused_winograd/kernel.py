@@ -1,0 +1,142 @@
+"""Pallas TPU kernel for the L3-fused Winograd convolution.
+
+TPU adaptation of the paper's algorithm (DESIGN.md S2):
+
+  * the T^2 right-hand (transformed-kernel) matrices get a *constant
+    BlockSpec index map* -> DMA'd HBM->VMEM once and stationary across all
+    grid steps.  This is the paper's "kernel matrices stay hot in shared L3",
+    with residency *guaranteed* rather than relied upon via cache heuristics.
+  * one grid step == one task: R output tiles along a row-strip.  The input
+    strip is read with `pl.Element` block dims (offset stride T' < extent T),
+    expressing the overlap-add overlap without materialising tiles in HBM.
+  * per-task intermediates live in a single VMEM scratch laid out per the
+    paper's shared-buffer scheme (repro.core.sharedbuf): buffer
+    (T^2 + 1, R, max(C, C')); left-hand matrix s occupies block s+1, the
+    s-th product is written to block s -- overwriting only left-hand
+    matrices already consumed.  This halves the VMEM working set and thus
+    permits a ~2x larger R, exactly the paper's S4.2 claim transplanted.
+
+Grid: (batch, tile_rows, tile_col_blocks); the T^2 matmuls run on the MXU as
+(R x C) @ (C x C') with R a multiple of 8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import transforms
+from repro.core.sharedbuf import SharedBufferPlan
+
+
+def _kernel_body(
+    x_ref, wt_ref, bt_ref, at_ref, o_ref, sb_ref,
+    *, m: int, k: int, c_in: int, c_out: int, r: int
+):
+    t = m + k - 1
+    t2 = t * t
+    bt = bt_ref[...]  # (T, T) input transform
+    at = at_ref[...]  # (T', T) output transform
+
+    strip = x_ref[0].astype(jnp.float32)  # (T, R*T' + K - 1, C)
+
+    # -- step 1: forward-transform R tiles; scatter rows into the shared
+    # buffer as left-hand matrices (blocks 1 .. T^2).  Static unroll: each
+    # tile is a static slice of the strip (stride T', extent T).
+    for tix in range(r):
+        tile = strip[:, tix * m : tix * m + t, :]  # (T, T, C)
+        u = jnp.einsum(
+            "xi,ijc,yj->xyc", bt, tile, bt, preferred_element_type=jnp.float32
+        )
+        sb_ref[1:, tix, :c_in] = u.reshape(t2, c_in)
+
+    # -- step 2: T^2 small matmuls against the stationary right-hand
+    # matrices.  Result s lands on block s = the rows of left-hand matrix
+    # s-1, which is no longer needed (shared-buffer aliasing, paper S4.2).
+    def mm(s, _):
+        lhs = sb_ref[s + 1, :, :c_in]  # (R, C)
+        res = jax.lax.dot_general(
+            lhs,
+            wt_ref[s],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        sb_ref[s, :, :c_out] = res
+        return 0
+
+    jax.lax.fori_loop(0, t2, mm, 0, unroll=False)
+
+    # -- step 3: inverse-transform all R results; write the output strip.
+    z = sb_ref[:t2, :, :c_out].reshape(t, t, r, c_out)
+    y = jnp.einsum("xi,ijrc,yj->rxyc", at, z, at, preferred_element_type=jnp.float32)
+    # (R, T', T', C') -> (T', R*T', C')
+    o_ref[0] = y.transpose(1, 0, 2, 3).reshape(m, r * m, c_out).astype(o_ref.dtype)
+
+
+def fused_winograd_call(
+    xp: jnp.ndarray,
+    wt: jnp.ndarray,
+    *,
+    m: int,
+    k: int,
+    n_tiles_h: int,
+    n_tiles_w: int,
+    r: int,
+    interpret: bool = True,
+):
+    """Invoke the fused kernel.
+
+    xp: (B, H_pad, W_pad, C) pre-padded input with H_pad = nH*T' + K - 1,
+        W_pad = nW*T' + K - 1 and nW divisible by r.
+    wt: (T*T, C, C') transformed kernels.
+    returns: (B, nH*T', nW*T', C') assembled output tiles.
+    """
+    b, h_pad, w_pad, c_in = xp.shape
+    t = m + k - 1
+    t2 = t * t
+    c_out = wt.shape[2]
+    assert wt.shape == (t2, c_in, c_out), (wt.shape, t2, c_in, c_out)
+    assert n_tiles_w % r == 0, (n_tiles_w, r)
+    assert h_pad == n_tiles_h * m + k - 1, (h_pad, n_tiles_h, m, k)
+    assert w_pad == n_tiles_w * m + k - 1, (w_pad, n_tiles_w, m, k)
+    n_col_blocks = n_tiles_w // r
+    sb = SharedBufferPlan(r=r, c_in=c_in, c_out=c_out, t2=t2)
+    sb.validate()
+
+    at_np, _, bt_np = transforms.winograd_matrices(m, k)
+    bt = jnp.asarray(bt_np, jnp.float32)
+    at = jnp.asarray(at_np, jnp.float32)
+
+    body = functools.partial(
+        _kernel_body, m=m, k=k, c_in=c_in, c_out=c_out, r=r
+    )
+    strip_w = r * m + k - 1
+    return pl.pallas_call(
+        body,
+        grid=(b, n_tiles_h, n_col_blocks),
+        in_specs=[
+            pl.BlockSpec(
+                (1, pl.Element(t), pl.Element(strip_w), c_in),
+                lambda bi, i, j: (bi, i * m, j * (r * m), 0),
+            ),
+            # constant index map == VMEM-stationary right-hand matrices
+            pl.BlockSpec((t2, c_in, c_out), lambda bi, i, j: (0, 0, 0)),
+            pl.BlockSpec((t, t), lambda bi, i, j: (0, 0)),
+            pl.BlockSpec((m, t), lambda bi, i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, m, r * m, c_out), lambda bi, i, j: (bi, i, j, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (b, n_tiles_h * m, n_tiles_w * m, c_out), xp.dtype
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((t2 + 1, r, max(c_in, c_out)), jnp.float32)
+        ],
+        interpret=interpret,
+    )(xp, wt, bt, at)

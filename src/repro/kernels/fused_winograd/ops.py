@@ -1,0 +1,61 @@
+"""Jitted public wrapper around the fused Winograd Pallas kernel."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tiling
+from repro.core.three_stage import transform_kernels
+from repro.kernels.fused_winograd.kernel import fused_winograd_call
+
+
+def _extended_plan(plan: tiling.TilePlan, r: int) -> tiling.TilePlan:
+    """Extend the tile grid so n_tiles_w is a multiple of R (task width)."""
+    n_tw = -(-plan.n_tiles_w // r) * r
+    return dataclasses.replace(
+        plan, n_tiles_w=n_tw, w_pad=n_tw * plan.t_out + plan.k - 1
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pad", "m", "r_tiles", "interpret")
+)
+def conv2d_fused_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    pad: int = 0,
+    m: Optional[int] = None,
+    r_tiles: int = 16,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """NHWC (B,H,W,C) x HWIO (K,K,C,C') -> NHWC, via the Pallas fused kernel.
+
+    interpret=None auto-selects: real lowering on TPU, interpreter elsewhere.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    k = w.shape[0]
+    m = m if m is not None else 5
+    t = m + k - 1
+    plan = tiling.TilePlan.build(x.shape[1], x.shape[2], k, pad, t)
+    r = min(r_tiles, plan.n_tiles_w)
+    plan = _extended_plan(plan, r)
+    xp = tiling.pad_input(x, plan)
+    wt = transform_kernels(w, m)
+    y = fused_winograd_call(
+        xp,
+        wt,
+        m=m,
+        k=k,
+        n_tiles_h=plan.n_tiles_h,
+        n_tiles_w=plan.n_tiles_w,
+        r=r,
+        interpret=interpret,
+    )
+    return y[:, : plan.h_out, : plan.w_out, :]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused Winograd kernel: direct correlation."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, *, pad: int = 0) -> jnp.ndarray:
+    """Direct 2-D correlation, NHWC x HWIO -> NHWC, float32 accumulation.
+
+    Implemented as K*K shifted matmuls (no lax.conv), so it is an
+    independent oracle for both the Pallas kernel and the transformed paths.
+    """
+    b, h, wi, c = x.shape
+    k = w.shape[0]
+    c_out = w.shape[3]
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0))).astype(jnp.float32)
+    h_out = h + 2 * pad - k + 1
+    w_out = wi + 2 * pad - k + 1
+    acc = jnp.zeros((b, h_out, w_out, c_out), jnp.float32)
+    for ki in range(k):
+        for kj in range(k):
+            patch = xp[:, ki : ki + h_out, kj : kj + w_out, :]
+            acc = acc + patch @ w[ki, kj].astype(jnp.float32)
+    return acc.astype(x.dtype)

@@ -1,0 +1,574 @@
+"""Post-SPMD HLO analysis: collective-traffic accounting + roofline terms.
+
+cost_analysis() gives FLOPs and bytes but NOT collective traffic; we parse
+the compiled HLO text and sum operand sizes of every collective op
+(DESIGN.md S7).  Async pairs (-start/-done) are counted once via -start.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_WHILE_RE = re.compile(
+    r"while\(.*?\)(?:.*?condition=%?([\w.\-]+))(?:.*?body=%?([\w.\-]+))", re.S
+)
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALLSITE_RE = re.compile(r"(?:calls|body|condition|to_apply|branch_computations)=\{?%?([\w.\-,%\s]+)\}?")
+
+
+def _split_computations(hlo_text: str):
+    comps: Dict[str, list] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+def _line_collective(line: str):
+    """(kind, bytes) if the line is a collective instruction, else None."""
+    if "-done" in line:
+        return None
+    for kind in _COLLECTIVES:
+        idx = line.find(f" {kind}(")
+        is_start = False
+        if idx < 0:
+            idx = line.find(f" {kind}-start(")
+            is_start = idx >= 0
+        if idx < 0:
+            continue
+        result_sizes = [
+            _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(line[:idx])
+        ]
+        if not result_sizes:
+            return None
+        nbytes = max(result_sizes) if is_start else sum(result_sizes)
+        if kind == "reduce-scatter":
+            m = _GROUPS_RE.search(line)
+            if m:
+                nbytes *= int(m.group(2))
+        return kind, nbytes
+    return None
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-device collective traffic from post-SPMD HLO text.
+
+    Operand sizes are reconstructed from RESULT types (optimised HLO prints
+    operands as bare %names): all-reduce / all-to-all / collective-permute
+    move ~result bytes, all-gather receives ~result bytes, reduce-scatter
+    sends ~result * group_size.  Collectives inside `while` bodies (layer
+    scans, KV-chunk scans) are multiplied by the loop trip count, parsed
+    from the loop-condition constant; nested loops multiply.
+    """
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:  # fall back: flat scan, no trip-count awareness
+        comps, entry = {"<all>": hlo_text.splitlines()}, "<all>"
+
+    def trip_count(cond_name: str) -> int:
+        consts = [
+            int(c)
+            for line in comps.get(cond_name, ())
+            for c in _CONST_RE.findall(line)
+        ]
+        return max(consts) if consts else 1
+
+    by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+
+    def walk(comp: str, mult: int, seen):
+        if comp not in comps or comp in seen:
+            return
+        seen = seen | {comp}
+        for line in comps[comp]:
+            hit = _line_collective(line)
+            if hit:
+                kind, nbytes = hit
+                by_kind[kind] += nbytes * mult
+                count[kind] += mult
+            if " while(" in line:
+                m_body = re.search(r"body=%?([\w.\-]+)", line)
+                m_trip = _TRIP_RE.search(line)  # XLA's own trip analysis
+                m_cond = re.search(r"condition=%?([\w.\-]+)", line)
+                if m_body:
+                    if m_trip:
+                        n = int(m_trip.group(1))
+                    else:
+                        n = trip_count(m_cond.group(1)) if m_cond else 1
+                    walk(m_body.group(1), mult * max(n, 1), seen)
+            else:
+                for m in re.finditer(
+                    r"(?:calls|to_apply)=%?([\w.\-]+)", line
+                ):
+                    walk(m.group(1), mult, seen)
+                m = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if m:
+                    for b in m.group(1).split(","):
+                        walk(b.strip().lstrip("%"), mult, seen)
+
+    walk(entry, 1, frozenset())
+    return CollectiveStats(by_kind, count)
+
+
+# ---------------------------------------------------------------------------
+# trip-count-aware FLOP / byte accounting from HLO text.
+#
+# XLA's HloCostAnalysis on the CPU backend counts while bodies ONCE
+# (verified empirically), which under-counts scanned models by the layer
+# count.  We therefore do our own pass: a symbol table of result shapes per
+# instruction lets us compute dot FLOPs (2 * prod(result) * K) and per-op
+# memory traffic (operands + result at fusion granularity), multiplied by
+# XLA's own known_trip_count on each while loop.
+# ---------------------------------------------------------------------------
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPNAME_RE = re.compile(r"^((?:\([^=]*?\)|[a-z0-9\[\],{}]+)\s+)?([\w\-]+)\(")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+# ops that move no real memory
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "reshape", "copy", "after-all", "partition-id",
+    "iota", "broadcast",
+}
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    coll_bytes: float
+    peak_arg_bytes: float = 0.0
+
+
+def _parse_instr(line: str):
+    """-> (name, [(dtype, dims)], opname, [operand names]) or None."""
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.group(1), m.group(2)
+    shapes = []
+    # result type: everything before the op token
+    op_m = re.match(r"^(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+([\w\-]+)", rhs)
+    if not op_m:
+        return None
+    type_str, op = op_m.group(1), op_m.group(2)
+    shapes = _SHAPE_RE.findall(type_str)
+    # operands: %names inside the first (...) after the op name
+    paren = rhs.find("(", op_m.end(2) - len(op_m.group(2)) + len(op_m.group(2)))
+    operands = []
+    if paren >= 0:
+        depth, j = 0, paren
+        while j < len(rhs):
+            if rhs[j] == "(":
+                depth += 1
+            elif rhs[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        operands = _OPERANDS_RE.findall(rhs[paren : j + 1])
+    return name, shapes, op, operands, rhs
+
+
+def hlo_cost(hlo_text: str) -> HloCost:
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:
+        return HloCost(0.0, 0.0, 0.0)
+
+    # global symbol table: instruction name -> (total bytes, first dims)
+    sym_bytes: Dict[str, int] = {}
+    sym_dims: Dict[str, tuple] = {}
+    parsed: Dict[str, list] = {}
+    slicing_comps = set()  # fused computations that dynamic-slice an operand
+    for cname, lines in comps.items():
+        plist = []
+        for line in lines:
+            if " dynamic-slice(" in line:
+                slicing_comps.add(cname)
+            pi = _parse_instr(line)
+            if pi is None:
+                continue
+            name, shapes, op, operands, rhs = pi
+            total = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+            sym_bytes[name] = total
+            if shapes:
+                dt, dims = shapes[0]
+                sym_dims[name] = tuple(int(x) for x in dims.split(",") if x)
+            plist.append((name, shapes, op, operands, rhs))
+        parsed[cname] = plist
+
+    flops = 0.0
+    byts = 0.0
+
+    def io_bytes(name, op, operands, rhs) -> int:
+        """Memory traffic of one op, honouring in-place aliasing and sliced
+        reads: dynamic-update-slice fusions move only the written slice;
+        fusions that dynamic-slice an operand (e.g. the per-iteration layer
+        slice of scan-stacked weights) read only result-sized bytes from
+        the big operand, not the whole stacked tensor."""
+        res = sym_bytes.get(name, 0)
+        ops_b = [sym_bytes.get(o, 0) for o in operands]
+        if op == "dynamic-update-slice" or (
+            op == "fusion"
+            and ("dynamic-update-slice" in name or "dynamic_update_slice" in name)
+        ):
+            if ops_b and max(ops_b) >= res > 0:
+                # result aliases the largest operand in place: traffic is
+                # the written slice, read + written (2x the small operands)
+                return 2 * (sum(ops_b) - max(ops_b))
+        if op == "dynamic-slice":
+            return 2 * res  # reads only the sliced region
+        if op == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", rhs)
+            if m and m.group(1) in slicing_comps:
+                return res + sum(min(b, res) for b in ops_b)
+        return res + sum(ops_b)
+
+    def op_flops(name, shapes, op, operands, rhs) -> float:
+        if op == "dot":
+            res_elems = 1
+            for dt, dims in shapes:
+                for d in dims.split(","):
+                    if d:
+                        res_elems *= int(d)
+            k = 1
+            m = _LHS_CONTRACT_RE.search(rhs)
+            if m and operands:
+                lhs_dims = sym_dims.get(operands[0], ())
+                for c in m.group(1).split(","):
+                    if c and int(c) < len(lhs_dims):
+                        k *= lhs_dims[int(c)]
+            return 2.0 * res_elems * k
+        if op == "convolution":
+            res_elems = 1
+            for dt, dims in shapes:
+                for d in dims.split(","):
+                    if d:
+                        res_elems *= int(d)
+            # window size x input features from the rhs operand (kernel)
+            kdims = sym_dims.get(operands[1], ()) if len(operands) > 1 else ()
+            import numpy as _np
+
+            kelems = int(_np.prod(kdims)) if kdims else 1
+            kout = kdims[-1] if kdims else 1  # HWIO output features
+            return 2.0 * res_elems * max(kelems // max(kout, 1), 1)
+        return 0.0
+
+    def walk(comp: str, mult: float, seen, count_bytes: bool):
+        nonlocal flops, byts
+        if comp not in parsed or comp in seen:
+            return
+        seen = seen | {comp}
+        for name, shapes, op, operands, rhs in parsed[comp]:
+            flops += mult * op_flops(name, shapes, op, operands, rhs)
+            if count_bytes and op not in _FREE_OPS:
+                byts += mult * io_bytes(name, op, operands, rhs)
+            if op == "while":
+                m_body = re.search(r"body=%?([\w.\-]+)", rhs)
+                m_trip = _TRIP_RE.search(rhs)
+                n = int(m_trip.group(1)) if m_trip else 1
+                if m_body:
+                    walk(m_body.group(1), mult * max(n, 1), seen, count_bytes)
+            elif op == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", rhs)
+                if m:  # flops inside fusions count; bytes don't
+                    walk(m.group(1), mult, seen, False)
+            elif op == "conditional":
+                m = re.search(r"branch_computations=\{([^}]*)\}", rhs)
+                if m:
+                    for b in m.group(1).split(","):
+                        walk(b.strip().lstrip("%"), mult, seen, count_bytes)
+            elif op == "call":
+                m = re.search(r"to_apply=%?([\w.\-]+)", rhs)
+                if m:
+                    walk(m.group(1), mult, seen, count_bytes)
+
+    walk(entry, 1.0, frozenset(), True)
+    coll = collective_bytes(hlo_text)
+    return HloCost(flops=flops, bytes=byts, coll_bytes=float(coll.total_bytes))
+
+
+def hlo_top_offenders(hlo_text: str, k: int = 20):
+    """Ranked (mult x cost) instructions -- the dry-run 'profile'.
+
+    Returns {"flops": [(cost, mult, line)], "bytes": [...]} -- the tool the
+    SPerf hypothesis loop reads instead of a wall-clock trace (DESIGN.md S7).
+    """
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:
+        return {"flops": [], "bytes": []}
+    sym_bytes: Dict[str, int] = {}
+    sym_dims: Dict[str, tuple] = {}
+    parsed: Dict[str, list] = {}
+    slicing_comps = set()
+    for cname, lines in comps.items():
+        plist = []
+        for line in lines:
+            if " dynamic-slice(" in line:
+                slicing_comps.add(cname)
+            pi = _parse_instr(line)
+            if pi is None:
+                continue
+            name, shapes, op, operands, rhs = pi
+            sym_bytes[name] = sum(_shape_bytes(dt, d) for dt, d in shapes)
+            if shapes:
+                dt, dims = shapes[0]
+                sym_dims[name] = tuple(int(x) for x in dims.split(",") if x)
+            plist.append((name, shapes, op, operands, rhs))
+        parsed[cname] = plist
+
+    fl, by = [], []
+
+    def dot_flops(shapes, operands, rhs):
+        res_elems = 1
+        for dt, dims in shapes:
+            for d in dims.split(","):
+                if d:
+                    res_elems *= int(d)
+        kk = 1
+        m = _LHS_CONTRACT_RE.search(rhs)
+        if m and operands:
+            lhs_dims = sym_dims.get(operands[0], ())
+            for c in m.group(1).split(","):
+                if c and int(c) < len(lhs_dims):
+                    kk *= lhs_dims[int(c)]
+        return 2.0 * res_elems * kk
+
+    def walk(comp, mult, seen, count_bytes):
+        if comp not in parsed or comp in seen:
+            return
+        seen = seen | {comp}
+        for name, shapes, op, operands, rhs in parsed[comp]:
+            if op == "dot":
+                fl.append((mult * dot_flops(shapes, operands, rhs), mult,
+                           f"{comp}: {name} = {rhs[:160]}"))
+            if count_bytes and op not in _FREE_OPS:
+                res = sym_bytes.get(name, 0)
+                ops_b = [sym_bytes.get(o, 0) for o in operands]
+                if (
+                    op == "dynamic-update-slice"
+                    or (op == "fusion" and ("dynamic-update-slice" in name
+                                            or "dynamic_update_slice" in name))
+                ) and ops_b and max(ops_b) >= res > 0:
+                    io = 2 * (sum(ops_b) - max(ops_b))
+                elif op == "dynamic-slice":
+                    io = 2 * res
+                elif op == "fusion" and (
+                    (mm := re.search(r"calls=%?([\w.\-]+)", rhs))
+                    and mm.group(1) in slicing_comps
+                ):
+                    io = res + sum(min(b, res) for b in ops_b)
+                else:
+                    io = res + sum(ops_b)
+                by.append((mult * io, mult, f"{comp}: {name} [{op}] = {rhs[:160]}"))
+            if op == "while":
+                m_body = re.search(r"body=%?([\w.\-]+)", rhs)
+                m_trip = _TRIP_RE.search(rhs)
+                n = int(m_trip.group(1)) if m_trip else 1
+                if m_body:
+                    walk(m_body.group(1), mult * max(n, 1), seen, count_bytes)
+            elif op == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", rhs)
+                if m:
+                    walk(m.group(1), mult, seen, False)
+            elif op == "conditional":
+                m = re.search(r"branch_computations=\{([^}]*)\}", rhs)
+                if m:
+                    for b in m.group(1).split(","):
+                        walk(b.strip().lstrip("%"), mult, seen, count_bytes)
+            elif op == "call":
+                m = re.search(r"to_apply=%?([\w.\-]+)", rhs)
+                if m:
+                    walk(m.group(1), mult, seen, count_bytes)
+
+    walk(entry, 1.0, frozenset(), True)
+    fl.sort(key=lambda x: -x[0])
+    by.sort(key=lambda x: -x[0])
+    return {"flops": fl[:k], "bytes": by[:k]}
+
+
+# TPU v5e hardware constants (per the brief)
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    chips: int
+    hlo_flops: float  # GLOBAL (all chips)
+    hlo_bytes: float  # GLOBAL
+    coll_bytes: float  # GLOBAL
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: remat/redundancy waste detector."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU upper bound: useful compute time / bound time."""
+        if self.t_bound <= 0:
+            return 0.0
+        return (self.model_flops / (self.chips * PEAK_FLOPS)) / self.t_bound
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_train(cfg, shape) -> float:
+    """6 N D (dense) / 6 N_active D (MoE) with N = active params, D = tokens."""
+    n = active_param_count(cfg)
+    tokens = shape.global_batch * shape.seq_len
+    return 6.0 * n * tokens
+
+
+def model_flops_infer(cfg, shape, *, decode: bool) -> float:
+    n = active_param_count(cfg)
+    tokens = shape.global_batch * (1 if decode else shape.seq_len)
+    return 2.0 * n * tokens
+
+
+def active_param_count(cfg) -> float:
+    """Active (per-token) parameter count, estimated from the config."""
+    d = cfg.d_model
+    n = 0.0
+    # embeddings (active at head, counted once)
+    n += cfg.vocab_size * d
+    per_layer = 0.0
+    if cfg.family == "ssm" or cfg.ssm is not None:
+        s = cfg.ssm
+        d_inner = s.expand * d
+        h = d_inner // s.head_dim
+        d_xbc = d_inner + 2 * s.n_groups * s.d_state
+        mamba = d * (d_inner + d_xbc + h) + d_inner * d
+        if cfg.family == "ssm":
+            per_layer = mamba
+        else:  # hybrid: mamba blocks + amortised shared attn
+            hd = cfg.resolved_head_dim
+            attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd + cfg.n_heads * hd * d
+            mlp = 3 * d * cfg.d_ff
+            per_layer = mamba + (attn + mlp) / max(cfg.shared_attn_period or 6, 1)
+    else:
+        if cfg.mla:
+            m = cfg.mla
+            qd = m.qk_nope_dim + m.qk_rope_dim
+            attn = (
+                d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads * qd
+                + d * (m.kv_lora_rank + m.qk_rope_dim)
+                + m.kv_lora_rank * cfg.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                + cfg.n_heads * m.v_head_dim * d
+            )
+        else:
+            hd = cfg.resolved_head_dim
+            attn = d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd + cfg.n_heads * hd * d
+        if cfg.moe:
+            active_e = cfg.moe.top_k + cfg.moe.n_shared
+            mlp = 3 * d * cfg.d_ff * active_e
+        else:
+            mlp = 3 * d * cfg.d_ff
+        per_layer = attn + mlp
+    n += per_layer * cfg.n_layers
+    if cfg.is_encoder_decoder:
+        hd = cfg.resolved_head_dim
+        enc = cfg.encoder_layers * (
+            d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+            + cfg.n_heads * hd * d + 3 * d * cfg.d_ff
+        )
+        n += enc
+    return n

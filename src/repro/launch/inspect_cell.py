@@ -1,0 +1,124 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+"""Dry-run profiler: lower one cell, print the top FLOP / byte offenders.
+
+    PYTHONPATH=src python -m repro.launch.inspect_cell --arch gemma3-1b \
+        --shape train_4k [--multi-pod] [--save-hlo /tmp/cell.hlo]
+"""
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--impl", choices=("baseline", "optimized"),
+                    default="optimized")
+    args = ap.parse_args()
+
+    from repro.models import runtime_flags
+
+    if args.impl == "optimized":
+        runtime_flags.set_optimized()
+    else:
+        runtime_flags.set_baseline()
+
+    from repro.launch import dryrun
+    from repro.launch.hlo_analysis import hlo_top_offenders
+
+    # reuse the dry-run lowering, but keep the compiled text
+    import repro.launch.dryrun as dr
+
+    rec_holder = {}
+    orig = dr.lower_cell
+
+    cfg_hlo = {}
+
+    def patched(arch, shape, *, multi_pod):
+        rec = orig(arch, shape, multi_pod=multi_pod)
+        return rec
+
+    # simplest: call internals directly
+    from repro.launch.dryrun import lower_cell  # noqa
+
+    # re-run lowering manually to keep hlo text
+    import json
+
+    import jax
+
+    from repro.configs.base import SHAPES, get_arch
+    from repro.distributed import sharding as shd
+    from repro.launch import specs as S
+    from repro.launch.mesh import make_production_mesh
+
+    rec = lower_cell(args.arch, args.shape, multi_pod=args.multi_pod)
+    print(json.dumps(rec["roofline"], indent=1))
+
+    # second lowering to extract text (lower_cell doesn't return it)
+    cfg = get_arch(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    with mesh:
+        if shape.kind == "train":
+            tcfg = S.train_config_for(cfg)
+            st = S.train_state_shapes(cfg, tcfg)
+            batch = S.batch_specs(cfg, shape)
+            st_sh = {
+                "params": shd.shard_params(st["params"], mesh),
+                "opt": {
+                    "m": shd.shard_params(st["opt"]["m"], mesh),
+                    "v": shd.shard_params(st["opt"]["v"], mesh),
+                    "count": shd.replicated(st["opt"]["count"], mesh),
+                },
+                "step": shd.replicated(st["step"], mesh),
+            }
+            fn = S.train_fn(cfg, tcfg)
+            hlo = (
+                jax.jit(fn, in_shardings=(st_sh, shd.shard_batch(batch, mesh)),
+                        out_shardings=(st_sh, None), donate_argnums=(0,))
+                .lower(st, batch).compile().as_text()
+            )
+        elif shape.kind == "prefill":
+            params = S.param_shapes(cfg)
+            batch = S.prefill_specs(cfg, shape)
+            hlo = (
+                jax.jit(S.prefill_fn(cfg, shape),
+                        in_shardings=(shd.shard_params_for_inference(params, mesh),
+                                      shd.shard_batch(batch, mesh)))
+                .lower(params, batch).compile().as_text()
+            )
+        else:
+            params = S.param_shapes(cfg)
+            dec = S.decode_specs(cfg, shape)
+            stt = S.decode_state_shapes(cfg, shape)
+            st_sh = shd.shard_cache(stt, mesh)
+            hlo = (
+                jax.jit(S.decode_fn(cfg),
+                        in_shardings=(shd.shard_params_for_inference(params, mesh),
+                                      shd.shard_batch({"t": dec["token"]}, mesh)["t"],
+                                      None, st_sh),
+                        out_shardings=(None, st_sh), donate_argnums=(3,))
+                .lower(params, dec["token"], dec["pos"], stt)
+                .compile().as_text()
+            )
+
+    if args.save_hlo:
+        open(args.save_hlo, "w").write(hlo)
+    top = hlo_top_offenders(hlo, args.top)
+    print("\n=== top FLOPs (per-device, mult-adjusted) ===")
+    for cost, mult, line in top["flops"]:
+        print(f"{cost / 1e9:10.1f} GF  x{int(mult):5d}  {line[:150]}")
+    print("\n=== top bytes (per-device, mult-adjusted) ===")
+    for cost, mult, line in top["bytes"]:
+        print(f"{cost / 1e9:10.2f} GB  x{int(mult):5d}  {line[:150]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production mesh construction (single-pod 16x16 and 2-pod 2x16x16).
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run pins the device count via XLA_FLAGS before any
+jax initialisation).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the actually-available devices (tests / examples)."""
+    n = len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,147 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run entry points).
+
+No device allocation happens here: params / optimizer / caches come from
+`jax.eval_shape` over the real init functions, inputs are constructed
+directly.  Shardings attach via the rule engine in repro.distributed.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import lm as lm_mod
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+Pytree = Any
+
+# speech/vision frontend stub: precomputed frame/patch embedding length used
+# for the encoder side of enc-dec cells
+SRC_FRAMES = 1024
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_config_for(cfg: ArchConfig) -> TrainConfig:
+    """Full-scale training config per arch (moment precision scales down as
+    the model scales up -- DESIGN.md S6)."""
+    approx_params = cfg.n_layers * cfg.d_model * cfg.d_model
+    if cfg.moe:
+        approx_params = (
+            cfg.n_layers * cfg.moe.n_experts * 3 * cfg.d_model * cfg.d_ff
+        )
+    if approx_params > 2e11:
+        moment = "int8"
+    elif approx_params > 5e9:
+        moment = "bfloat16"
+    else:
+        moment = "float32"
+    return TrainConfig(optimizer=AdamWConfig(moment_dtype=moment), remat=True)
+
+
+def param_shapes(cfg: ArchConfig) -> Pytree:
+    return jax.eval_shape(
+        lambda k: lm_mod.init_lm(k, cfg), jax.random.PRNGKey(0)
+    )
+
+
+def train_state_shapes(cfg: ArchConfig, tcfg: TrainConfig) -> Pytree:
+    return jax.eval_shape(
+        lambda k: init_train_state(k, cfg, tcfg), jax.random.PRNGKey(0)
+    )
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Training batch ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        # split the budget: src frames + tgt tokens of s/2 each
+        return {
+            "src_embeds": sds((b, s // 2, cfg.d_model), cfg.dtype),
+            "tokens": sds((b, s // 2), jnp.int32),
+            "targets": sds((b, s // 2), jnp.int32),
+            "mask": sds((b, s // 2), jnp.float32),
+        }
+    return {
+        "tokens": sds((b, s), jnp.int32),
+        "targets": sds((b, s), jnp.int32),
+        "mask": sds((b, s), jnp.float32),
+    }
+
+
+def prefill_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        return {
+            "src_embeds": sds((b, s, cfg.d_model), cfg.dtype),
+            "tokens": sds((b, 128), jnp.int32),  # short decoder prompt
+        }
+    return {"tokens": sds((b, s), jnp.int32)}
+
+
+def decode_state_shapes(cfg: ArchConfig, shape: ShapeConfig) -> Pytree:
+    b, s = shape.global_batch, shape.seq_len
+    return jax.eval_shape(
+        functools.partial(
+            lm_mod.init_decode_state, cfg, b, s, src_len=SRC_FRAMES
+        )
+    )
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b = shape.global_batch
+    return {
+        "token": sds((b,), jnp.int32),
+        "pos": sds((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# lowering entry points (the functions the dry-run compiles)
+# ---------------------------------------------------------------------------
+
+
+def train_fn(cfg: ArchConfig, tcfg: TrainConfig):
+    return make_train_step(cfg, tcfg)
+
+
+def prefill_fn(cfg: ArchConfig, shape: ShapeConfig, model_axis: int = 16):
+    from repro.models.runtime_flags import FLAGS, overrides
+
+    # context-parallel prefill for archs whose head counts don't divide the
+    # model axis (GSPMD otherwise replicates the whole attention computation
+    # -- the qwen2.5 collective/memory pathology, EXPERIMENTS.md SPerf)
+    use_cp = (
+        FLAGS.attention_impl != "chunked"  # only in the optimized config
+        and cfg.n_heads % model_axis != 0
+        and not cfg.is_encoder_decoder
+    )
+
+    def fn(params, batch):
+        kw = {}
+        if cfg.is_encoder_decoder:
+            kw["src_embeds"] = batch["src_embeds"]
+        if use_cp:
+            with overrides(attention_cp_axis="model", attention_impl="chunked"):
+                return lm_mod.lm_prefill(
+                    params, cfg, batch["tokens"], shape.seq_len, **kw
+                )
+        return lm_mod.lm_prefill(
+            params, cfg, batch["tokens"], shape.seq_len, **kw
+        )
+
+    return fn
+
+
+def decode_fn(cfg: ArchConfig):
+    def fn(params, token, pos, state):
+        return lm_mod.lm_decode_step(params, cfg, token, pos, state)
+
+    return fn

@@ -1,0 +1,81 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --reduced \
+        --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On real hardware this process runs per host under the cluster scheduler
+(jax.distributed.initialize is called when the env vars are present); in
+this container it runs single-host on the CPU device.  Fault tolerance
+(restore-on-failure, SIGTERM save) lives in repro.train.loop.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if "JAX_COORDINATOR" in os.environ:  # multi-host entry (real cluster)
+        jax.distributed.initialize()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=args.lr),
+        microbatches=args.microbatches,
+        remat=True,
+        warmup_steps=max(args.steps // 20, 5),
+        total_steps=args.steps,
+    )
+    state = init_train_state(jax.random.PRNGKey(args.seed), cfg, tcfg)
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"[train] arch={cfg.name} params={n_params / 1e6:.2f}M "
+          f"steps={args.steps} batch={args.batch}x{args.seq}")
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+    stream = TokenStream(
+        DataConfig(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
+    )
+
+    def next_batch(step):
+        return {k: jnp.asarray(v) for k, v in stream.batch_at(step).items()}
+
+    train_loop(
+        state=state,
+        train_step=step_fn,
+        next_batch=next_batch,
+        cfg=LoopConfig(
+            total_steps=args.steps,
+            ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every,
+            log_every=10,
+        ),
+    )
+
+
+if __name__ == "__main__":
+    main()

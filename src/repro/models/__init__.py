@@ -1,0 +1,13 @@
+from repro.models.lm import (
+    init_decode_state,
+    init_lm,
+    lm_decode_step,
+    lm_logits,
+    lm_loss,
+    lm_prefill,
+)
+
+__all__ = [
+    "init_lm", "lm_loss", "lm_logits",
+    "lm_prefill", "lm_decode_step", "init_decode_state",
+]

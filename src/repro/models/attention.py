@@ -1,0 +1,469 @@
+"""Attention: GQA (+bias, +qk-norm, +sliding window) and MLA, train + decode.
+
+Prefill/train use a chunked online-softmax (flash-style) scan over KV blocks
+so the lowered HLO never materialises (S x S) score tensors -- required for
+the 32k-prefill dry-run cells to fit per-chip HBM.  Decode attends over the
+cache in one masked pass (O(S) memory).
+
+Sliding windows are traced scalars (`window <= 0` means global), so layers
+with different windows share one scanned program (gemma3's 5:1 pattern).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MLAConfig
+from repro.models.common import apply_rotary, dense_init, rms_norm
+from repro.models.runtime_flags import FLAGS
+
+KV_CHUNK = 512  # flash-scan KV block length
+
+Params = Dict[str, jnp.ndarray]
+
+
+def full_attention(q, k, v, q_pos, kv_pos, *, window=0, causal=True):
+    """Dispatch full-sequence attention to the configured implementation."""
+    if FLAGS.attention_cp_axis:
+        # context parallelism: shard the q sequence over the model axis and
+        # run the q-vectorised chunked path (each chip owns a q stripe; K/V
+        # stay replicated -- the right shape when head counts don't divide
+        # the model axis).  Prefill-only (no custom VJP on this path).
+        from jax.sharding import PartitionSpec as P
+
+        ax = FLAGS.attention_cp_axis
+        spec = P("data", ax, None, None)  # batch x data, seq x model
+        q = jax.lax.with_sharding_constraint(q, spec)
+        out = chunked_attention(
+            q, k, v, q_pos, kv_pos, window=window, causal=causal
+        )
+        return jax.lax.with_sharding_constraint(out, spec)
+    if FLAGS.attention_impl == "flash":
+        from repro.models.flash_attention import flash_attention
+
+        return flash_attention(
+            q, k, v, q_pos, kv_pos, window=int(window or 0), causal=causal,
+            q_blk=FLAGS.flash_q_blk, kv_blk=FLAGS.flash_kv_blk,
+            p_dtype=jnp.dtype(FLAGS.flash_p_dtype),
+        )
+    return chunked_attention(
+        q, k, v, q_pos, kv_pos, window=window, causal=causal
+    )
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) masked attention
+# ---------------------------------------------------------------------------
+
+
+def _mask(
+    q_pos: jnp.ndarray, kv_pos: jnp.ndarray, window, causal: bool
+) -> jnp.ndarray:
+    """(..., Sq, Sk) boolean mask. kv_pos < 0 marks empty cache slots."""
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    ok = kp >= 0
+    if causal:
+        ok &= kp <= qp
+    # window <= 0 => global
+    win_ok = jnp.where(window > 0, qp - kp < window, True)
+    return ok & win_ok
+
+
+def chunked_attention(
+    q: jnp.ndarray,  # (B, Sq, Hq, hd)
+    k: jnp.ndarray,  # (B, Sk, Hkv, hd)
+    v: jnp.ndarray,  # (B, Sk, Hkv, vd)
+    q_pos: jnp.ndarray,  # (B, Sq)
+    kv_pos: jnp.ndarray,  # (B, Sk)
+    *,
+    window=0,
+    causal: bool = True,
+    chunk: int = KV_CHUNK,
+) -> jnp.ndarray:
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    vd = v.shape[3]
+    g = hq // hkv
+    scale = hd ** -0.5
+    qf = (q * scale).reshape(b, sq, hkv, g, hd)
+
+    if (sq == 1 or chunk >= sk) and FLAGS.attention_impl == "flash":
+        # one-shot path (decode, optimized impl): no KV loop, so a
+        # sequence-sharded cache contracts via psum partials (the
+        # flash-decoding split-K pattern under GSPMD) instead of per-chunk
+        # dynamic slices that force involuntary gathers
+        s = jnp.einsum("bqhgd,bchd->bhgqc", qf, k,
+                       preferred_element_type=jnp.float32)
+        msk = _mask(q_pos, kv_pos, window, causal)[:, None, None]
+        s = jnp.where(msk, s, -jnp.inf)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        m = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.where(msk, jnp.exp(s - m), 0.0)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        out = jnp.einsum("bhgqc,bchd->bhgqd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        out = out / jnp.maximum(l, 1e-30)
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, vd).astype(
+            q.dtype
+        )
+
+    if sk % chunk != 0:
+        pad = (-sk) % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        sk += pad
+    n_chunks = sk // chunk
+    ks = k.reshape(b, n_chunks, chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, n_chunks, chunk, hkv, vd).transpose(1, 0, 2, 3, 4)
+    ps = kv_pos.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    def step(carry, blk):
+        m_prev, l_prev, acc = carry
+        kc, vc, pc = blk  # (B, c, Hkv, hd), (B, c, Hkv, vd), (B, c)
+        s = jnp.einsum(
+            "bqhgd,bchd->bhgqc", qf, kc, preferred_element_type=jnp.float32
+        )  # (B, Hkv, g, Sq, c)
+        msk = _mask(q_pos, pc, window, causal)[:, None, None]  # (B,1,1,Sq,c)
+        s = jnp.where(msk, s, -jnp.inf)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(msk, p, 0.0)
+        corr = jnp.exp(
+            jnp.where(jnp.isfinite(m_prev), m_prev - m_safe, -jnp.inf)
+        )
+        corr = jnp.where(jnp.isfinite(m_prev), corr, 0.0)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqc,bchd->bhgqd", p, vc.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, vd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (ks, vs, ps))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, vd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg: ArchConfig, dtype, lora_rank: int = 0) -> Params:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "wq": dense_init(ks[0], (d, hq * hd), dtype),
+        "wk": dense_init(ks[1], (d, hkv * hd), dtype),
+        "wv": dense_init(ks[2], (d, hkv * hd), dtype),
+        "wo": dense_init(ks[3], (hq * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    if lora_rank:
+        for nm, width in (("q", hq * hd), ("k", hkv * hd), ("v", hkv * hd)):
+            p[f"lora_{nm}_a"] = dense_init(ks[4], (d, lora_rank), dtype)
+            p[f"lora_{nm}_b"] = jnp.zeros((lora_rank, width), dtype)
+    return p
+
+
+def _project_qkv(p: Params, x, x_kv, cfg: ArchConfig):
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x_kv @ p["wk"]
+    v = x_kv @ p["wv"]
+    if "lora_q_a" in p:
+        q = q + (x @ p["lora_q_a"]) @ p["lora_q_b"]
+        k = k + (x_kv @ p["lora_k_a"]) @ p["lora_k_b"]
+        v = v + (x_kv @ p["lora_v_a"]) @ p["lora_v_b"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    b, sq = x.shape[:2]
+    sk = x_kv.shape[1]
+    q = q.reshape(b, sq, hq, hd)
+    k = k.reshape(b, sk, hkv, hd)
+    v = v.reshape(b, sk, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def attn_forward(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, D)
+    positions: jnp.ndarray,  # (B, S)
+    cfg: ArchConfig,
+    *,
+    window=0,
+    causal: bool = True,
+    cross_x: Optional[jnp.ndarray] = None,  # encoder states for cross-attn
+    cross_pos: Optional[jnp.ndarray] = None,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (train / prefill / encoder)."""
+    x_kv = cross_x if cross_x is not None else x
+    kv_pos = cross_pos if cross_pos is not None else positions
+    q, k, v = _project_qkv(p, x, x_kv, cfg)
+    if cross_x is None:  # self-attention gets rotary
+        q = apply_rotary(q, positions, cfg.rope_theta)
+        k = apply_rotary(k, kv_pos, cfg.rope_theta)
+    out = full_attention(
+        q, k, v, positions, kv_pos, window=window,
+        causal=causal and cross_x is None,
+    )
+    b, s = x.shape[:2]
+    y = out.reshape(b, s, -1) @ p["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def fill_kv_cache(
+    cache: Params, k: jnp.ndarray, v: jnp.ndarray, positions: jnp.ndarray
+) -> Params:
+    """Write prefill K/V (length S) into a cache (length >= S or ring)."""
+    length = cache["k"].shape[1]
+    s = k.shape[1]
+    if s >= length:  # ring cache shorter than the prefix: keep the tail,
+        # rotated so that position p sits at slot p % length (decode layout)
+        tail = s - length
+        shift = (s - length) % length
+        k = jnp.roll(k[:, tail:], shift, axis=1)
+        v = jnp.roll(v[:, tail:], shift, axis=1)
+        positions = jnp.roll(positions[:, tail:], shift, axis=1)
+        s = length
+    return {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1),
+        "pos": jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], positions.astype(jnp.int32), 0, 1
+        ),
+    }
+
+
+def init_kv_cache(
+    cfg: ArchConfig, batch: int, max_len: int, window: int, dtype
+) -> Params:
+    """window > 0 => ring buffer of that length; else dense max_len cache."""
+    length = window if window and window > 0 else max_len
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, length, hkv, hd), dtype),
+        "v": jnp.zeros((batch, length, hkv, hd), dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+    }
+
+
+def attn_decode(
+    p: Params,
+    x: jnp.ndarray,  # (B, 1, D)
+    pos,  # scalar int32 current position
+    cache: Params,
+    cfg: ArchConfig,
+    *,
+    window=0,
+) -> Tuple[jnp.ndarray, Params]:
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, x, cfg)
+    q = apply_rotary(q, positions, cfg.rope_theta)
+    k = apply_rotary(k, positions, cfg.rope_theta)
+    length = cache["k"].shape[1]
+    slot = jnp.mod(pos, length)  # ring for window caches; identity for dense
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1),
+        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1),
+        "pos": jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], positions, slot, 1
+        ),
+    }
+    out = chunked_attention(
+        q, cache["k"], cache["v"], positions, cache["pos"],
+        window=window, causal=True, chunk=min(KV_CHUNK, length),
+    )
+    return out.reshape(b, 1, -1) @ p["wo"], cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ArchConfig, dtype) -> Params:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qd = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_a_norm": jnp.zeros((m.q_lora_rank,), dtype),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, h * qd), dtype),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_dim), dtype),
+        "kv_a_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+        "wk_b": dense_init(ks[3], (m.kv_lora_rank, h * m.qk_nope_dim), dtype),
+        "wv_b": dense_init(ks[4], (m.kv_lora_rank, h * m.v_head_dim), dtype),
+        "wo": dense_init(ks[5], (h * m.v_head_dim, d), dtype),
+    }
+
+
+def _mla_q(p: Params, x, positions, cfg: ArchConfig):
+    m: MLAConfig = cfg.mla
+    b, s = x.shape[:2]
+    h = cfg.n_heads
+    cq = rms_norm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    q_rope = apply_rotary(q_rope, positions, cfg.rope_theta)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _mla_kv_latent(p: Params, x, positions, cfg: ArchConfig):
+    """x -> (c_kv normalised latent, k_rope rotated): the *cache contents*."""
+    m: MLAConfig = cfg.mla
+    ckv = x @ p["wkv_a"]
+    c_kv = rms_norm(ckv[..., : m.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = ckv[..., m.kv_lora_rank :][:, :, None, :]  # (B,S,1,rope)
+    k_rope = apply_rotary(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope[:, :, 0, :]
+
+
+def _mla_expand(p: Params, c_kv, k_rope, cfg: ArchConfig):
+    """latents -> per-head k, v."""
+    m: MLAConfig = cfg.mla
+    b, s = c_kv.shape[:2]
+    h = cfg.n_heads
+    k_nope = (c_kv @ p["wk_b"]).reshape(b, s, h, m.qk_nope_dim)
+    v = (c_kv @ p["wv_b"]).reshape(b, s, h, m.v_head_dim)
+    k_rope_b = jnp.broadcast_to(
+        k_rope[:, :, None, :], (b, s, h, m.qk_rope_dim)
+    )
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return k, v
+
+
+def mla_forward(
+    p: Params, x, positions, cfg: ArchConfig, *, return_latent: bool = False
+):
+    b, s = x.shape[:2]
+    q = _mla_q(p, x, positions, cfg)
+    c_kv, k_rope = _mla_kv_latent(p, x, positions, cfg)
+    k, v = _mla_expand(p, c_kv, k_rope, cfg)
+    out = full_attention(q, k, v, positions, positions, causal=True)
+    y = out.reshape(b, s, -1) @ p["wo"]
+    if return_latent:
+        return y, (c_kv, k_rope)
+    return y
+
+
+def fill_mla_cache(
+    cache: Params, c_kv: jnp.ndarray, k_rope: jnp.ndarray, positions: jnp.ndarray
+) -> Params:
+    return {
+        "c_kv": jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, 0, 1),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope, 0, 1
+        ),
+        "pos": jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], positions.astype(jnp.int32), 0, 1
+        ),
+    }
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> Params:
+    m: MLAConfig = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def mla_decode(
+    p: Params, x, pos, cache: Params, cfg: ArchConfig
+) -> Tuple[jnp.ndarray, Params]:
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = _mla_q(p, x, positions, cfg)
+    c_kv, k_rope = _mla_kv_latent(p, x, positions, cfg)
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, pos, 1),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope, pos, 1
+        ),
+        "pos": jax.lax.dynamic_update_slice_in_dim(cache["pos"], positions, pos, 1),
+    }
+    if FLAGS.mla_absorb:
+        return mla_decode_absorbed(p, q, cache, cfg), cache
+    # baseline: expand latents for the whole cache every step
+    k, v = _mla_expand(p, cache["c_kv"], cache["k_rope"], cfg)
+    out = chunked_attention(
+        q, k, v, positions, cache["pos"], causal=True
+    )
+    return out.reshape(b, 1, -1) @ p["wo"], cache
+
+
+def mla_decode_absorbed(p: Params, q, cache: Params, cfg: ArchConfig):
+    """Weight-absorbed MLA decode (DeepSeek-V3 S2.1 inference form).
+
+    Scores are computed in the 512-dim latent space:
+        s = (q_nope W_uk) . c_kv + q_rope . k_rope
+        o_latent = softmax(s) @ c_kv ;  o = (o_latent W_uv) per head
+    Per-token cost drops from O(S * kv_rank * H * (nope+v)) (re-expanding
+    k/v for the whole cache) to O(S * (kv_rank + rope)) per head -- the
+    useful-FLOPs fix for the deepseek-v3 decode cell (EXPERIMENTS.md SPerf).
+    """
+    m: MLAConfig = cfg.mla
+    b = q.shape[0]
+    h = cfg.n_heads
+    cdtype = cache["c_kv"].dtype  # keep the cache in its native dtype:
+    # bf16 x bf16 -> f32-accum is MXU-native; upcasting the 32k latent cache
+    # to f32 per decoded token was the memory-term offender (SPerf iter 3)
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim :]
+    wk = p["wk_b"].reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    q_lat = jnp.einsum(
+        "bqhn,rhn->bqhr", q_nope.astype(cdtype), wk.astype(cdtype),
+        preferred_element_type=jnp.float32,
+    )
+    ckv = cache["c_kv"]  # (B, S, r)
+    kr = cache["k_rope"]  # (B, S, rope)
+    s = jnp.einsum(
+        "bqhr,bsr->bhqs", q_lat.astype(cdtype), ckv,
+        preferred_element_type=jnp.float32,
+    ) + jnp.einsum(
+        "bqhn,bsn->bhqs", q_rope.astype(cdtype), kr,
+        preferred_element_type=jnp.float32,
+    )
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    s = s * scale
+    valid = (cache["pos"] >= 0)[:, None, None, :]
+    s = jnp.where(valid, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(valid, w, 0.0)
+    o_lat = jnp.einsum(
+        "bhqs,bsr->bqhr", w.astype(cdtype), ckv,
+        preferred_element_type=jnp.float32,
+    )  # (B,1,H,r)
+    wv = p["wv_b"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    o = jnp.einsum(
+        "bqhr,rhv->bqhv", o_lat.astype(cdtype), wv.astype(cdtype),
+        preferred_element_type=jnp.float32,
+    )
+    o = o.reshape(b, 1, h * m.v_head_dim).astype(q.dtype)
+    return o @ p["wo"]

@@ -1,0 +1,422 @@
+"""Layer / super-block / stack assembly.
+
+A model stack is a sequence of *groups*; each group is `lax.scan` over
+`n_repeat` identical *super-blocks*; a super-block is a short static tuple of
+`LayerSpec`s.  This one mechanism expresses every assigned architecture:
+
+  dense / MoE LMs        one group, 1-layer super-block
+  gemma3 (5 local : 1 global)   super-block of 6 attn layers with static
+                                per-position windows + a tail group
+  mamba2                 one group of mamba layers
+  zamba2                 super-block = [shared-attn invocation, 6 x mamba];
+                         the shared block's base weights live at model level,
+                         per-invocation LoRA is scanned
+  seamless (enc-dec)     an encoder stack + a decoder stack w/ cross-attn
+
+Because the window / moe / mixer choices are static per super-block
+*position*, one scanned program covers heterogeneous stacks with no traced
+control flow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models.common import init_rms_scale, rms_norm
+
+Params = Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str  # "attn" | "mla" | "mamba" | "shared_attn"
+    window: int = 0  # 0 = global
+    moe: bool = False
+    has_mlp: bool = True  # mamba blocks carry no MLP
+    cross_attn: bool = False  # decoder-side cross attention (enc-dec)
+    causal: bool = True  # encoder layers are bidirectional
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    n_repeat: int
+    layers: Tuple[LayerSpec, ...]
+
+
+def build_stack_plan(cfg: ArchConfig, role: str = "decoder") -> Tuple[GroupSpec, ...]:
+    if role == "encoder":
+        spec = LayerSpec(mixer="attn", causal=False)
+        return (GroupSpec(cfg.encoder_layers, (spec,)),)
+
+    n = cfg.n_layers
+    if cfg.family == "ssm":
+        return (GroupSpec(n, (LayerSpec(mixer="mamba", has_mlp=False),)),)
+
+    if cfg.shared_attn_period:  # zamba2-style hybrid
+        p = cfg.shared_attn_period
+        mamba = LayerSpec(mixer="mamba", has_mlp=False)
+        shared = LayerSpec(mixer="shared_attn")
+        full, rem = divmod(n, p)
+        groups = []
+        if full:
+            groups.append(GroupSpec(full, (shared,) + (mamba,) * p))
+        if rem:
+            groups.append(GroupSpec(1, (mamba,) * rem))
+        return tuple(groups)
+
+    if cfg.local_global_period:  # gemma3-style 5:1 local:global
+        p = cfg.local_global_period
+        local = LayerSpec(mixer="attn", window=cfg.sliding_window, moe=bool(cfg.moe))
+        glob = LayerSpec(mixer="attn", window=0, moe=bool(cfg.moe))
+        full, rem = divmod(n, p)
+        groups = []
+        if full:
+            groups.append(GroupSpec(full, (local,) * (p - 1) + (glob,)))
+        if rem:
+            groups.append(GroupSpec(1, (local,) * rem))
+        return tuple(groups)
+
+    mixer = "mla" if cfg.mla else "attn"
+    spec = LayerSpec(
+        mixer=mixer, moe=bool(cfg.moe), cross_attn=cfg.is_encoder_decoder
+        and role == "decoder",
+    )
+    return (GroupSpec(n, (spec,)),)
+
+
+def plan_layer_specs(plan: Tuple[GroupSpec, ...]) -> Tuple[LayerSpec, ...]:
+    """Flattened per-layer specs (for inspection / tests)."""
+    out = []
+    for g in plan:
+        for _ in range(g.n_repeat):
+            out.extend(g.layers)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# single-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, spec: LayerSpec, cfg: ArchConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Params = {"ln1": init_rms_scale(d, dtype)}
+    if spec.mixer == "attn":
+        p["attn"] = attn_mod.init_attn(ks[0], cfg, dtype)
+    elif spec.mixer == "mla":
+        p["attn"] = attn_mod.init_mla(ks[0], cfg, dtype)
+    elif spec.mixer == "mamba":
+        p["mamba"] = mamba_mod.init_mamba(ks[0], cfg, dtype)
+    elif spec.mixer == "shared_attn":
+        # base weights are model-level; per-invocation LoRA + norms here
+        hd = cfg.resolved_head_dim
+        r = max(1, cfg.shared_attn_lora_rank)
+        from repro.models.common import dense_init
+
+        for nm, width in (
+            ("q", cfg.n_heads * hd),
+            ("k", cfg.n_kv_heads * hd),
+            ("v", cfg.n_kv_heads * hd),
+        ):
+            p[f"lora_{nm}_a"] = dense_init(ks[1], (d, r), dtype)
+            p[f"lora_{nm}_b"] = jnp.zeros((r, width), dtype)
+        p["ln2"] = init_rms_scale(d, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross_attn:
+        p["ln_cross"] = init_rms_scale(d, dtype)
+        p["cross"] = attn_mod.init_attn(ks[2], cfg, dtype)
+    if spec.has_mlp and spec.mixer != "shared_attn":
+        p["ln2"] = init_rms_scale(d, dtype)
+        if spec.moe:
+            p["moe"] = moe_mod.init_moe(ks[3], cfg, dtype)
+        else:
+            p["mlp"] = mlp_mod.init_mlp(ks[3], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _zero_aux():
+    return {
+        "moe_aux": jnp.zeros((), jnp.float32),
+        "moe_z": jnp.zeros((), jnp.float32),
+    }
+
+
+def _merge_shared_attn(shared: Params, layer_p: Params) -> Params:
+    merged = dict(shared["attn"])
+    for k, v in layer_p.items():
+        if k.startswith("lora_"):
+            merged[k] = v
+    return merged
+
+
+def apply_layer(
+    p: Params,
+    spec: LayerSpec,
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    shared: Optional[Params] = None,
+    *,
+    cross_x: Optional[jnp.ndarray] = None,
+    cross_pos: Optional[jnp.ndarray] = None,
+    build_cache_len: Optional[int] = None,
+    dtype=None,
+):
+    """Full-sequence layer application (train / prefill / encoder).
+
+    Returns (x, aux, cache_or_None).
+    """
+    aux = _zero_aux()
+    cache = None
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    bsz = x.shape[0]
+
+    if spec.mixer in ("attn", "shared_attn"):
+        ap = _merge_shared_attn(shared, p) if spec.mixer == "shared_attn" else p["attn"]
+        if build_cache_len is not None:
+            y, (k, v) = attn_mod.attn_forward(
+                ap, h, positions, cfg, window=spec.window, causal=spec.causal,
+                return_kv=True,
+            )
+            cache = attn_mod.init_kv_cache(
+                cfg, bsz, build_cache_len, spec.window, dtype or x.dtype
+            )
+            cache = attn_mod.fill_kv_cache(cache, k, v, positions)
+        else:
+            y = attn_mod.attn_forward(
+                ap, h, positions, cfg, window=spec.window, causal=spec.causal
+            )
+        x = x + y
+    elif spec.mixer == "mla":
+        if build_cache_len is not None:
+            y, (c_kv, k_rope) = attn_mod.mla_forward(
+                p["attn"], h, positions, cfg, return_latent=True
+            )
+            cache = attn_mod.init_mla_cache(
+                cfg, bsz, build_cache_len, dtype or x.dtype
+            )
+            cache = attn_mod.fill_mla_cache(cache, c_kv, k_rope, positions)
+        else:
+            y = attn_mod.mla_forward(p["attn"], h, positions, cfg)
+        x = x + y
+    elif spec.mixer == "mamba":
+        if build_cache_len is not None:
+            y, cache = mamba_mod.mamba_forward(
+                p["mamba"], h, cfg, return_state=True
+            )
+        else:
+            y = mamba_mod.mamba_forward(p["mamba"], h, cfg)
+        x = x + y
+    else:
+        raise ValueError(spec.mixer)
+
+    if spec.cross_attn:
+        hc = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        x = x + attn_mod.attn_forward(
+            p["cross"], hc, positions, cfg, cross_x=cross_x, cross_pos=cross_pos
+        )
+
+    if spec.has_mlp or spec.mixer == "shared_attn":
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.moe:
+            y2, aux = moe_mod.moe_forward(p["moe"], h2, cfg)
+        elif spec.mixer == "shared_attn":
+            y2 = mlp_mod.mlp_forward(shared["mlp"], h2)
+        else:
+            y2 = mlp_mod.mlp_forward(p["mlp"], h2)
+        x = x + y2
+
+    return x, aux, cache
+
+
+def init_layer_cache(
+    spec: LayerSpec, cfg: ArchConfig, batch: int, max_len: int, dtype
+) -> Params:
+    if spec.mixer in ("attn", "shared_attn"):
+        c = {
+            "self": attn_mod.init_kv_cache(cfg, batch, max_len, spec.window, dtype)
+        }
+    elif spec.mixer == "mla":
+        c = {"self": attn_mod.init_mla_cache(cfg, batch, max_len, dtype)}
+    elif spec.mixer == "mamba":
+        c = {"self": mamba_mod.init_mamba_cache(cfg, batch, dtype)}
+    else:
+        raise ValueError(spec.mixer)
+    return c
+
+
+def apply_layer_decode(
+    p: Params,
+    spec: LayerSpec,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # (B, 1, D)
+    pos,  # scalar
+    cache: Params,
+    shared: Optional[Params] = None,
+    *,
+    cross_x: Optional[jnp.ndarray] = None,
+    cross_pos: Optional[jnp.ndarray] = None,
+):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if spec.mixer in ("attn", "shared_attn"):
+        ap = _merge_shared_attn(shared, p) if spec.mixer == "shared_attn" else p["attn"]
+        y, new_self = attn_mod.attn_decode(
+            ap, h, pos, cache["self"], cfg, window=spec.window
+        )
+    elif spec.mixer == "mla":
+        y, new_self = attn_mod.mla_decode(p["attn"], h, pos, cache["self"], cfg)
+    elif spec.mixer == "mamba":
+        y, new_self = mamba_mod.mamba_decode(p["mamba"], h, cache["self"], cfg)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + y
+    if spec.cross_attn:
+        hc = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        x = x + attn_mod.attn_forward(
+            p["cross"], hc, jnp.full((x.shape[0], 1), pos, jnp.int32), cfg,
+            cross_x=cross_x, cross_pos=cross_pos,
+        )
+    if spec.has_mlp or spec.mixer == "shared_attn":
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if spec.moe:
+            y2, _ = moe_mod.moe_forward(p["moe"], h2, cfg)
+        elif spec.mixer == "shared_attn":
+            y2 = mlp_mod.mlp_forward(shared["mlp"], h2)
+        else:
+            y2 = mlp_mod.mlp_forward(p["mlp"], h2)
+        x = x + y2
+    return x, {"self": new_self}
+
+
+# ---------------------------------------------------------------------------
+# group (scan over super-blocks)
+# ---------------------------------------------------------------------------
+
+
+def init_group(key, gspec: GroupSpec, cfg: ArchConfig, dtype) -> Params:
+    """Per-layer params stacked along the repeat dimension."""
+    def init_one(k):
+        kl = jax.random.split(k, len(gspec.layers))
+        return tuple(
+            init_layer(kl[i], spec, cfg, dtype)
+            for i, spec in enumerate(gspec.layers)
+        )
+
+    keys = jax.random.split(key, gspec.n_repeat)
+    per_repeat = [init_one(k) for k in keys]
+    return {
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *per_repeat)
+    }
+
+
+def apply_group(
+    gp: Params,
+    gspec: GroupSpec,
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    shared: Optional[Params] = None,
+    *,
+    cross_x=None,
+    cross_pos=None,
+    remat: bool = False,
+):
+    """Train/encoder-mode scan.  Returns (x, aux_sums)."""
+
+    def body(carry, layer_slice):
+        x, aux = carry
+        for i, spec in enumerate(gspec.layers):
+            x, a, _ = apply_layer(
+                layer_slice[i], spec, cfg, x, positions, shared,
+                cross_x=cross_x, cross_pos=cross_pos,
+            )
+            aux = {k: aux[k] + a[k] for k in aux}
+        return (x, aux), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, _zero_aux()), gp["layers"])
+    return x, aux
+
+
+def init_group_cache(
+    gspec: GroupSpec, cfg: ArchConfig, batch: int, max_len: int, dtype
+) -> Params:
+    def one():
+        return tuple(
+            init_layer_cache(spec, cfg, batch, max_len, dtype)
+            for spec in gspec.layers
+        )
+
+    per = [one() for _ in range(gspec.n_repeat)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+
+def apply_group_prefill(
+    gp: Params,
+    gspec: GroupSpec,
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    shared: Optional[Params] = None,
+    *,
+    max_len: int,
+    cross_x=None,
+    cross_pos=None,
+    cache_dtype=None,
+):
+    """Prefill: full forward that also builds the decode caches (scan ys)."""
+
+    def body(carry, layer_slice):
+        x, aux = carry
+        caches = []
+        for i, spec in enumerate(gspec.layers):
+            x, a, cache = apply_layer(
+                layer_slice[i], spec, cfg, x, positions, shared,
+                cross_x=cross_x, cross_pos=cross_pos,
+                build_cache_len=max_len, dtype=cache_dtype or x.dtype,
+            )
+            caches.append({"self": cache})
+            aux = {k: aux[k] + a[k] for k in aux}
+        return (x, aux), tuple(caches)
+
+    (x, aux), caches = jax.lax.scan(body, (x, _zero_aux()), gp["layers"])
+    return x, aux, caches
+
+
+def apply_group_decode(
+    gp: Params,
+    gspec: GroupSpec,
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    pos,
+    gcache: Params,
+    shared: Optional[Params] = None,
+    *,
+    cross_x=None,
+    cross_pos=None,
+):
+    def body(x, slices):
+        layer_slice, cache_slice = slices
+        new_caches = []
+        for i, spec in enumerate(gspec.layers):
+            x, nc = apply_layer_decode(
+                layer_slice[i], spec, cfg, x, pos, cache_slice[i], shared,
+                cross_x=cross_x, cross_pos=cross_pos,
+            )
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_gcache = jax.lax.scan(body, x, (gp["layers"], gcache))
+    return x, new_gcache

@@ -1,0 +1,71 @@
+"""Shared model components: norms, rotary embeddings, initialisers."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def init_rms_scale(dim: int, dtype) -> jnp.ndarray:
+    # stored as zeros, applied as (1 + scale) -- gemma-style, robust under
+    # weight decay and friendly to zero-init checkatability
+    return jnp.zeros((dim,), dtype)
+
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None) -> jnp.ndarray:
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jnp.ndarray:
+    # std = 1/sqrt(d_model): keeps tied-head logits O(1) at init
+    std = shape[-1] ** -0.5
+    return (
+        jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std
+    ).astype(dtype)
+
+
+def rotary_angles(positions: jnp.ndarray, dim: int, theta: float) -> jnp.ndarray:
+    """positions (...,) int -> (..., dim//2) angles."""
+    freqs = theta ** (-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rotary(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x (B, S, H, hd), positions (B, S) -> rotated x (half-split convention)."""
+    hd = x.shape[-1]
+    ang = rotary_angles(positions, hd, theta)  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def softmax_cross_entropy(
+    logits: jnp.ndarray, targets: jnp.ndarray, mask: Optional[jnp.ndarray] = None
+) -> jnp.ndarray:
+    """Mean token NLL with f32 logits; targets (B, S) int32; mask optional."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def pad_vocab(vocab_size: int, multiple: int = 2048) -> int:
+    """Pad embedding tables so the vocab axis shards evenly (DESIGN.md S5)."""
+    return -(-vocab_size // multiple) * multiple

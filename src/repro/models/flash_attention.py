@@ -1,0 +1,270 @@
+"""Flash attention in pure JAX: tiled online-softmax with a custom VJP.
+
+This is the paper's L3-fusion insight applied to attention (DESIGN.md S2):
+the standard path materialises the probability matrix P between the QK and
+PV matmuls and -- under scan autodiff -- *stores* every chunk's P for the
+backward pass, an S^2-sized round-trip to slow memory per head per layer
+(the dry-run baseline shows it dominating every training cell).  Here:
+
+  * the (q-block x kv-block) tile loop only visits tiles that intersect
+    the causal / sliding-window band (static pair list -- no FLOPs or
+    traffic on masked-out tiles; 2x on causal, S/w on windowed layers);
+  * the custom VJP recomputes P per tile in the backward pass instead of
+    storing it (flash backward), so residuals are O(S * hd) not O(S^2);
+  * P is cast to bf16 for the PV matmul (f32 softmax statistics).
+
+The Pallas kernel (repro/kernels/flash_attention) is the TPU-native version
+where P additionally never leaves VMEM; this module is the XLA-visible
+form used by the dry-run and the CPU tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _pairs(nq: int, nk: int, q_blk: int, kv_blk: int, causal: bool,
+           window: int, offset: int) -> np.ndarray:
+    """Static list of (i, j) tiles intersecting the mask band.
+
+    offset = kv_len_virtual_start difference; for self-attention with
+    aligned positions it is 0.
+    """
+    out = []
+    for i in range(nq):
+        q_lo, q_hi = i * q_blk + offset, (i + 1) * q_blk - 1 + offset
+        for j in range(nk):
+            k_lo, k_hi = j * kv_blk, (j + 1) * kv_blk - 1
+            if causal and k_lo > q_hi:
+                continue  # tile entirely in the future
+            if window > 0 and k_hi < q_lo - window + 1:
+                continue  # tile entirely behind the window
+            out.append((i, j))
+    return np.asarray(out, np.int32).reshape(-1, 2)
+
+
+def _tile_mask(q_pos, kv_pos, window: int, causal: bool):
+    qp = q_pos[..., :, None]
+    kp = kv_pos[..., None, :]
+    ok = kp >= 0.0
+    if causal:
+        ok &= kp <= qp
+    if window > 0:
+        ok &= qp - kp < float(window)
+    return ok
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9)
+)
+def _flash(q, k, v, q_pos, kv_pos, causal, window, q_blk, kv_blk, p_dtype):
+    o, _, _ = _flash_fwd_impl(
+        q, k, v, q_pos, kv_pos, causal, window, q_blk, kv_blk, p_dtype
+    )
+    return o
+
+
+def _flash_fwd_impl(q, k, v, q_pos, kv_pos, causal, window, q_blk, kv_blk,
+                    p_dtype):
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    vd = v.shape[3]  # may differ from hd (MLA)
+    g = hq // hkv
+    scale = hd ** -0.5
+    nq, nk = sq // q_blk, sk // kv_blk
+    pairs = _pairs(nq, nk, q_blk, kv_blk, causal, window, offset=sk - sq)
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, g, hd)
+    qf = qf.transpose(0, 2, 3, 1, 4)  # (B, Hkv, g, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3)  # (B, Hkv, Sk, hd)
+    vf = v.transpose(0, 2, 1, 3)
+
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, vd), jnp.float32)
+
+    def step(carry, ij):
+        m, l, acc = carry
+        i, j = ij[0], ij[1]
+        qi = jax.lax.dynamic_slice_in_dim(qf, i * q_blk, q_blk, axis=3)
+        kj = jax.lax.dynamic_slice_in_dim(kf, j * kv_blk, kv_blk, axis=2)
+        vj = jax.lax.dynamic_slice_in_dim(vf, j * kv_blk, kv_blk, axis=2)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, i * q_blk, q_blk, axis=1)
+        kp = jax.lax.dynamic_slice_in_dim(kv_pos, j * kv_blk, kv_blk, axis=1)
+        s = jnp.einsum("bhgqd,bhcd->bhgqc", qi,
+                       kj.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        msk = _tile_mask(qp, kp, window, causal)[:, None, None]
+        s = jnp.where(msk, s, -jnp.inf)
+
+        mi = jax.lax.dynamic_slice_in_dim(m, i * q_blk, q_blk, axis=3)
+        li = jax.lax.dynamic_slice_in_dim(l, i * q_blk, q_blk, axis=3)
+        ai = jax.lax.dynamic_slice_in_dim(acc, i * q_blk, q_blk, axis=3)
+
+        m_new = jnp.maximum(mi, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(msk, p, 0.0)
+        corr = jnp.where(
+            jnp.isfinite(mi), jnp.exp(mi - m_safe), 0.0
+        )
+        l_new = li * corr + jnp.sum(p, axis=-1)
+        a_new = ai * corr[..., None] + jnp.einsum(
+            "bhgqc,bhcd->bhgqd", p.astype(p_dtype), vj.astype(p_dtype),
+            preferred_element_type=jnp.float32,
+        )
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, i * q_blk, axis=3)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, i * q_blk, axis=3)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new, i * q_blk, axis=3)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.asarray(pairs))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, vd).astype(q.dtype)
+    lse = jnp.where(l > 0, jnp.log(jnp.maximum(l, 1e-30)), 0.0) + jnp.where(
+        jnp.isfinite(m), m, 0.0
+    )  # (B, Hkv, g, Sq)
+    return o, lse, (m, l)
+
+
+def _flash_fwd(q, k, v, q_pos, kv_pos, causal, window, q_blk, kv_blk,
+               p_dtype):
+    o, lse, _ = _flash_fwd_impl(
+        q, k, v, q_pos, kv_pos, causal, window, q_blk, kv_blk, p_dtype
+    )
+    return o, (q, k, v, o, lse, q_pos, kv_pos)
+
+
+def _flash_bwd(causal, window, q_blk, kv_blk, p_dtype, res, do):
+    q, k, v, o, lse, q_pos, kv_pos = res
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    vd = v.shape[3]
+    g = hq // hkv
+    scale = hd ** -0.5
+    nq, nk = sq // q_blk, sk // kv_blk
+    pairs = _pairs(nq, nk, q_blk, kv_blk, causal, window, offset=sk - sq)
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, g, hd)
+    qf = qf.transpose(0, 2, 3, 1, 4)  # (B,Hkv,g,Sq,hd)
+    kf = k.transpose(0, 2, 1, 3).astype(jnp.float32)
+    vf = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+    dof = do.astype(jnp.float32).reshape(b, sq, hkv, g, vd).transpose(
+        0, 2, 3, 1, 4
+    )
+    of = o.astype(jnp.float32).reshape(b, sq, hkv, g, vd).transpose(
+        0, 2, 3, 1, 4
+    )
+    delta = jnp.sum(dof * of, axis=-1)  # (B,Hkv,g,Sq)
+
+    dq0 = jnp.zeros_like(qf)
+    dk0 = jnp.zeros_like(kf)
+    dv0 = jnp.zeros_like(vf)
+
+    def step(carry, ij):
+        dq, dk, dv = carry
+        i, j = ij[0], ij[1]
+        qi = jax.lax.dynamic_slice_in_dim(qf, i * q_blk, q_blk, axis=3)
+        kj = jax.lax.dynamic_slice_in_dim(kf, j * kv_blk, kv_blk, axis=2)
+        vj = jax.lax.dynamic_slice_in_dim(vf, j * kv_blk, kv_blk, axis=2)
+        qp = jax.lax.dynamic_slice_in_dim(q_pos, i * q_blk, q_blk, axis=1)
+        kp = jax.lax.dynamic_slice_in_dim(kv_pos, j * kv_blk, kv_blk, axis=1)
+        lse_i = jax.lax.dynamic_slice_in_dim(lse, i * q_blk, q_blk, axis=3)
+        do_i = jax.lax.dynamic_slice_in_dim(dof, i * q_blk, q_blk, axis=3)
+        dl_i = jax.lax.dynamic_slice_in_dim(delta, i * q_blk, q_blk, axis=3)
+
+        s = jnp.einsum("bhgqd,bhcd->bhgqc", qi, kj,
+                       preferred_element_type=jnp.float32)
+        msk = _tile_mask(qp, kp, window, causal)[:, None, None]
+        p = jnp.where(msk, jnp.exp(s - lse_i[..., None]), 0.0)
+
+        pc = p.astype(p_dtype)
+        dv_j = jnp.einsum("bhgqc,bhgqd->bhcd", pc.astype(jnp.float32), do_i,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bhgqd,bhcd->bhgqc", do_i, vj,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - dl_i[..., None])  # (B,Hkv,g,q_blk,kv_blk)
+        dq_i = jnp.einsum("bhgqc,bhcd->bhgqd", ds, kj,
+                          preferred_element_type=jnp.float32)
+        dk_j = jnp.einsum("bhgqc,bhgqd->bhcd", ds, qi,
+                          preferred_element_type=jnp.float32)
+
+        dq = jax.lax.dynamic_update_slice_in_dim(
+            dq,
+            jax.lax.dynamic_slice_in_dim(dq, i * q_blk, q_blk, axis=3) + dq_i,
+            i * q_blk, axis=3,
+        )
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk,
+            jax.lax.dynamic_slice_in_dim(dk, j * kv_blk, kv_blk, axis=2) + dk_j,
+            j * kv_blk, axis=2,
+        )
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv,
+            jax.lax.dynamic_slice_in_dim(dv, j * kv_blk, kv_blk, axis=2) + dv_j,
+            j * kv_blk, axis=2,
+        )
+        return (dq, dk, dv), None
+
+    (dq, dk, dv), _ = jax.lax.scan(step, (dq0, dk0, dv0), jnp.asarray(pairs))
+    dq = (dq * scale).transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, hd)
+    # note: dq accumulated over s = (q*scale)K^T, so the scale factor applies
+    dk = dk.transpose(0, 2, 1, 3)
+    dv = dv.transpose(0, 2, 1, 3)
+    return (
+        dq.astype(q.dtype),
+        dk.astype(k.dtype),
+        dv.astype(v.dtype),
+        jnp.zeros_like(q_pos),
+        jnp.zeros_like(kv_pos),
+    )
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    kv_pos: jnp.ndarray,
+    *,
+    window: int = 0,
+    causal: bool = True,
+    q_blk: int = 512,
+    kv_blk: int = 512,
+    p_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Tiled attention, API-compatible with models.attention.chunked_attention.
+
+    q (B,Sq,Hq,hd), k/v (B,Sk,Hkv,hd); positions (B,S*) int or float.
+    Pads S to block multiples internally.
+    """
+    b, sq, hq, hd = q.shape
+    sk = k.shape[1]
+    q_blk = min(q_blk, max(sq, 1))
+    kv_blk = min(kv_blk, max(sk, 1))
+    pad_q = (-sq) % q_blk
+    pad_k = (-sk) % kv_blk
+    qp = q_pos.astype(jnp.float32)
+    kp = kv_pos.astype(jnp.float32)
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        # padded q rows attend to nothing valid; give them huge positions so
+        # causal keeps them harmless, then slice them away
+        qp = jnp.pad(qp, ((0, 0), (0, pad_q)), constant_values=2e9)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kp = jnp.pad(kp, ((0, 0), (0, pad_k)), constant_values=-1.0)
+    out = _flash(
+        q, k, v, qp, kp, causal, int(window or 0), q_blk, kv_blk,
+        jnp.dtype(p_dtype).name,
+    )
+    return out[:, :sq]

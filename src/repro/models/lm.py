@@ -1,0 +1,267 @@
+"""Model-level API: init / loss / prefill / decode for every assigned arch.
+
+    params = init_lm(key, cfg)
+    loss, metrics = lm_loss(params, cfg, batch)          # train step core
+    logits = lm_logits(params, cfg, tokens)              # tests
+    state  = lm_prefill(params, cfg, batch, max_len)     # -> DecodeState
+    logits, state = lm_decode_step(params, cfg, token, pos, state)
+
+Batch keys: tokens/targets/mask (decoder-only) plus src_embeds for the
+encoder-decoder (seamless -- the speech frontend is a stub providing frame
+embeddings, per the brief).  Embedding tables are padded to a shardable
+vocab multiple; padded logits are masked out of the loss.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks
+from repro.models.common import (
+    dense_init,
+    embed_init,
+    init_rms_scale,
+    pad_vocab,
+    rms_norm,
+    softmax_cross_entropy,
+)
+
+Params = Dict
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_lm(key, cfg: ArchConfig) -> Params:
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 12)
+    vpad = pad_vocab(cfg.vocab_size)
+    plan = blocks.build_stack_plan(cfg, "decoder")
+    p: Params = {
+        "embed": embed_init(ks[0], (vpad, cfg.d_model), dtype),
+        "stack": tuple(
+            blocks.init_group(ks[1 + i], g, cfg, dtype)
+            for i, g in enumerate(plan)
+        ),
+        "final_norm": init_rms_scale(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[6], (cfg.d_model, vpad), dtype)
+    if cfg.shared_attn_period:
+        from repro.models import attention as attn_mod
+        from repro.models import mlp as mlp_mod
+
+        p["shared"] = {
+            "attn": attn_mod.init_attn(ks[7], cfg, dtype),
+            "mlp": mlp_mod.init_mlp(ks[8], cfg.d_model, cfg.d_ff, dtype),
+        }
+    if cfg.is_encoder_decoder:
+        enc_plan = blocks.build_stack_plan(cfg, "encoder")
+        p["encoder"] = {
+            "stack": tuple(
+                blocks.init_group(ks[9], g, cfg, dtype) for g in enc_plan
+            ),
+            "final_norm": init_rms_scale(cfg.d_model, dtype),
+        }
+    if cfg.mtp:
+        spec = blocks.LayerSpec(mixer="attn")
+        p["mtp"] = {
+            "proj": dense_init(ks[10], (2 * cfg.d_model, cfg.d_model), dtype),
+            "norm_h": init_rms_scale(cfg.d_model, dtype),
+            "norm_e": init_rms_scale(cfg.d_model, dtype),
+            "block": blocks.init_layer(ks[11], spec, cfg, dtype),
+        }
+    return p
+
+
+def _positions(bsz: int, s: int) -> jnp.ndarray:
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (bsz, s))
+
+
+def _embed(p: Params, cfg: ArchConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["embed"], tokens, axis=0)
+
+
+def _head(p: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    h = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = h @ p["embed"].T
+    else:
+        logits = h @ p["lm_head"]
+    return logits[..., : cfg.vocab_size]
+
+
+def _encode(p: Params, cfg: ArchConfig, src_embeds: jnp.ndarray):
+    enc_plan = blocks.build_stack_plan(cfg, "encoder")
+    x = src_embeds.astype(_dtype(cfg))
+    pos = _positions(x.shape[0], x.shape[1])
+    for gp, gs in zip(p["encoder"]["stack"], enc_plan):
+        x, _ = blocks.apply_group(gp, gs, cfg, x, pos)
+    return rms_norm(x, p["encoder"]["final_norm"], cfg.norm_eps), pos
+
+
+def _backbone(
+    p: Params,
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    cross_x=None,
+    cross_pos=None,
+    remat: bool = False,
+):
+    plan = blocks.build_stack_plan(cfg, "decoder")
+    aux = blocks._zero_aux()
+    shared = p.get("shared")
+    for gp, gs in zip(p["stack"], plan):
+        x, a = blocks.apply_group(
+            gp, gs, cfg, x, positions, shared,
+            cross_x=cross_x, cross_pos=cross_pos, remat=remat,
+        )
+        aux = {k: aux[k] + a[k] for k in aux}
+    return x, aux
+
+
+def lm_logits(
+    p: Params,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,
+    *,
+    src_embeds: Optional[jnp.ndarray] = None,
+    remat: bool = False,
+) -> jnp.ndarray:
+    """Full-sequence logits (B, S, vocab)."""
+    cross_x = cross_pos = None
+    if cfg.is_encoder_decoder:
+        assert src_embeds is not None, "enc-dec arch needs src_embeds"
+        cross_x, cross_pos = _encode(p, cfg, src_embeds)
+    x = _embed(p, cfg, tokens)
+    pos = _positions(tokens.shape[0], tokens.shape[1])
+    x, _ = _backbone(
+        p, cfg, x, pos, cross_x=cross_x, cross_pos=cross_pos, remat=remat
+    )
+    return _head(p, cfg, x)
+
+
+def lm_loss(
+    p: Params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray], *, remat: bool = True
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    tokens, targets = batch["tokens"], batch["targets"]
+    mask = batch.get("mask")
+    cross_x = cross_pos = None
+    if cfg.is_encoder_decoder:
+        cross_x, cross_pos = _encode(p, cfg, batch["src_embeds"])
+    x = _embed(p, cfg, tokens)
+    pos = _positions(tokens.shape[0], tokens.shape[1])
+    x, aux = _backbone(
+        p, cfg, x, pos, cross_x=cross_x, cross_pos=cross_pos, remat=remat
+    )
+    logits = _head(p, cfg, x)
+    nll = softmax_cross_entropy(logits, targets, mask)
+    loss = nll + aux["moe_aux"] + aux["moe_z"]
+    metrics = {"nll": nll, **aux}
+
+    if cfg.mtp:  # DeepSeek-V3 multi-token prediction: predict t+2
+        mp = p["mtp"]
+        h_in = rms_norm(x[:, :-1], mp["norm_h"], cfg.norm_eps)
+        e_in = rms_norm(
+            _embed(p, cfg, targets[:, :-1]), mp["norm_e"], cfg.norm_eps
+        )
+        z = jnp.concatenate([h_in, e_in], axis=-1) @ mp["proj"]
+        spec = blocks.LayerSpec(mixer="attn")
+        z, _, _ = blocks.apply_layer(mp["block"], spec, cfg, z, pos[:, :-1])
+        mtp_logits = _head(p, cfg, z)
+        mtp_mask = None if mask is None else mask[:, 1:]
+        mtp_nll = softmax_cross_entropy(mtp_logits, targets[:, 1:], mtp_mask)
+        loss = loss + 0.3 * mtp_nll
+        metrics["mtp_nll"] = mtp_nll
+
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(
+    cfg: ArchConfig, batch: int, max_len: int, src_len: Optional[int] = None
+) -> Params:
+    """Empty decode caches (shape source for serving + the dry-run specs)."""
+    dtype = _dtype(cfg)
+    plan = blocks.build_stack_plan(cfg, "decoder")
+    state: Params = {
+        "groups": tuple(
+            blocks.init_group_cache(g, cfg, batch, max_len, dtype) for g in plan
+        )
+    }
+    if cfg.is_encoder_decoder:
+        sl = src_len if src_len is not None else 1024
+        state["cross_x"] = jnp.zeros((batch, sl, cfg.d_model), dtype)
+        state["cross_pos"] = jnp.broadcast_to(
+            jnp.arange(sl, dtype=jnp.int32), (batch, sl)
+        )
+    return state
+
+
+def lm_prefill(
+    p: Params,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,
+    max_len: int,
+    *,
+    src_embeds: Optional[jnp.ndarray] = None,
+):
+    """Run the prompt, build caches.  Returns (last_logits, state)."""
+    plan = blocks.build_stack_plan(cfg, "decoder")
+    state: Params = {}
+    cross_x = cross_pos = None
+    if cfg.is_encoder_decoder:
+        cross_x, cross_pos = _encode(p, cfg, src_embeds)
+        state["cross_x"], state["cross_pos"] = cross_x, cross_pos
+    x = _embed(p, cfg, tokens)
+    pos = _positions(tokens.shape[0], tokens.shape[1])
+    shared = p.get("shared")
+    gcaches = []
+    for gp, gs in zip(p["stack"], plan):
+        x, _, caches = blocks.apply_group_prefill(
+            gp, gs, cfg, x, pos, shared,
+            max_len=max_len, cross_x=cross_x, cross_pos=cross_pos,
+            cache_dtype=_dtype(cfg),
+        )
+        gcaches.append(caches)
+    state["groups"] = tuple(gcaches)
+    logits = _head(p, cfg, x[:, -1:])
+    return logits[:, 0], state
+
+
+def lm_decode_step(
+    p: Params,
+    cfg: ArchConfig,
+    token: jnp.ndarray,  # (B,) int32
+    pos,  # scalar int32: position of `token`
+    state: Params,
+):
+    """One decode step.  Returns (logits (B, vocab), new state)."""
+    plan = blocks.build_stack_plan(cfg, "decoder")
+    x = _embed(p, cfg, token[:, None])
+    shared = p.get("shared")
+    cross_x = state.get("cross_x")
+    cross_pos = state.get("cross_pos")
+    new_groups = []
+    for gp, gs, gc in zip(p["stack"], plan, state["groups"]):
+        x, ngc = blocks.apply_group_decode(
+            gp, gs, cfg, x, pos, gc, shared,
+            cross_x=cross_x, cross_pos=cross_pos,
+        )
+        new_groups.append(ngc)
+    new_state = dict(state)
+    new_state["groups"] = tuple(new_groups)
+    logits = _head(p, cfg, x)
+    return logits[:, 0], new_state

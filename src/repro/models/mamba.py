@@ -1,0 +1,217 @@
+"""Mamba2 (SSD -- state-space duality) block: chunked train scan + decode step.
+
+Train/prefill uses the SSD chunked algorithm: within a chunk of Q steps the
+quadratic dual form (C B^T . decay) runs on the MXU; across chunks a
+sequential `lax.scan` carries the (H, P, N) state.  Decode is the O(1)
+recurrent update.  The short depthwise-causal conv is the paper-technique
+touchpoint (DESIGN.md S5): `repro.kernels.conv1d_fused` provides the fused
+taps-stationary Pallas kernel; the jnp path is the dry-run default.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.common import dense_init, rms_norm
+from repro.core.conv import conv1d_depthwise_causal
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _dims(cfg: ArchConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    d_xbc = d_inner + 2 * s.n_groups * s.d_state
+    return s, d_inner, n_heads, d_xbc
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> Params:
+    s, d_inner, h, d_xbc = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    d_in_proj = d_inner + d_xbc + h  # z, xBC, dt
+    return {
+        "in_proj": dense_init(ks[0], (d, d_in_proj), dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, d_xbc), dtype, fan_in=s.d_conv),
+        "conv_b": jnp.zeros((d_xbc,), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),  # A = -exp(A_log) = -1 init
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], (d_inner, d), dtype, fan_in=d_inner),
+    }
+
+
+def _split(cfg: ArchConfig, zxbcdt: jnp.ndarray):
+    s, d_inner, h, d_xbc = _dims(cfg)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : d_inner + d_xbc]
+    dt = zxbcdt[..., d_inner + d_xbc :]
+    return z, xbc, dt
+
+
+def _split_xbc(cfg: ArchConfig, xbc: jnp.ndarray):
+    s, d_inner, h, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    x = xbc[..., :d_inner]
+    bmat = xbc[..., d_inner : d_inner + gn]
+    cmat = xbc[..., d_inner + gn :]
+    return x, bmat, cmat
+
+
+def mamba_forward(
+    p: Params,
+    x_in: jnp.ndarray,
+    cfg: ArchConfig,
+    *,
+    use_pallas_conv: bool = False,
+    return_state: bool = False,
+):
+    """(B, S, D) -> (B, S, D); S must be a multiple of cfg.ssm.chunk (or is
+    padded internally).  With return_state, also returns the decode cache
+    {conv, ssm} at the end of the sequence."""
+    from repro.models.runtime_flags import FLAGS
+
+    s, d_inner, h, d_xbc = _dims(cfg)
+    bsz, seq, _ = x_in.shape
+    chunk = FLAGS.ssm_chunk_override or s.chunk
+    q = min(chunk, seq)
+    pad = (-seq) % q
+    if pad:
+        x_in = jnp.pad(x_in, ((0, 0), (0, pad), (0, 0)))
+    seq_p = seq + pad
+    nc = seq_p // q
+
+    zxbcdt = x_in @ p["in_proj"]
+    z, xbc, dt_raw = _split(cfg, zxbcdt)
+    if use_pallas_conv:
+        from repro.kernels.conv1d_fused import conv1d_fused
+
+        xbc = conv1d_fused(xbc, p["conv_w"], p["conv_b"], activation="silu")
+    else:
+        xbc = jax.nn.silu(
+            conv1d_depthwise_causal(xbc, p["conv_w"]) + p["conv_b"]
+        )
+    xs, bmat, cmat = _split_xbc(cfg, xbc)
+
+    g, n, hd = s.n_groups, s.d_state, s.head_dim
+    xs = xs.reshape(bsz, nc, q, h, hd)
+    bmat = bmat.reshape(bsz, nc, q, g, n)
+    cmat = cmat.reshape(bsz, nc, q, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    if pad:  # padded steps must not decay or feed the state (dt == 0)
+        valid = (jnp.arange(seq_p) < seq).astype(jnp.float32)
+        dt = dt * valid[None, :, None]
+    dt = dt.reshape(bsz, nc, q, h)
+    a = -jnp.exp(p["A_log"])  # (H,)
+    la = jnp.cumsum(dt * a, axis=2)  # (B,nc,Q,H) log-decay within chunk
+    rep = h // g
+
+    def chunk_step(state, blk):
+        xc, bc, cc, dtc, lac = blk  # (B,Q,...) for one chunk
+        # broadcast groups over heads
+        bh = jnp.repeat(bc, rep, axis=2)  # (B,Q,H,N)
+        ch = jnp.repeat(cc, rep, axis=2)
+        # intra-chunk dual (quadratic) form
+        scores = jnp.einsum(
+            "bthn,bshn->bhts", ch.astype(jnp.float32), bh.astype(jnp.float32)
+        )  # (B,H,Q,Q)
+        decay = jnp.exp(
+            lac[:, :, None, :] - lac[:, None, :, :]
+        ).transpose(0, 3, 1, 2)  # (B,H,Q,Q) exp(la[t]-la[s])
+        tri = jnp.tril(jnp.ones((q, q), jnp.float32))
+        w = scores * decay * tri * dtc.transpose(0, 2, 1)[:, :, None, :]
+        xs_f = xc.astype(jnp.float32)
+        y = jnp.einsum("bhts,bshp->bthp", w, xs_f)
+        # inter-chunk contribution from carried state
+        y = y + (
+            jnp.einsum("bthn,bhpn->bthp", ch.astype(jnp.float32), state)
+            * jnp.exp(lac)[..., None]
+        )
+        # new carried state
+        last = lac[:, -1, :]  # (B,H)
+        sc = jnp.einsum(
+            "bshn,bsh,bshp->bhpn",
+            bh.astype(jnp.float32),
+            jnp.exp(last[:, None, :] - lac) * dtc,
+            xs_f,
+        )
+        state = state * jnp.exp(last)[:, :, None, None] + sc
+        return state, y
+
+    state0 = jnp.zeros((bsz, h, hd, n), jnp.float32)
+    blks = (
+        xs.transpose(1, 0, 2, 3, 4),
+        bmat.transpose(1, 0, 2, 3, 4),
+        cmat.transpose(1, 0, 2, 3, 4),
+        dt.transpose(1, 0, 2, 3),
+        la.transpose(1, 0, 2, 3),
+    )
+    step_fn = (
+        jax.checkpoint(chunk_step) if FLAGS.ssm_chunk_remat else chunk_step
+    )  # remat: backward recomputes the (Q,Q) dual-form tensors per chunk
+    state_f, ys = jax.lax.scan(step_fn, state0, blks)  # (nc,B,Q,H,P)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, seq_p, h, hd)
+    y = y + xs.reshape(bsz, seq_p, h, hd).astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(bsz, seq_p, d_inner).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, :seq]
+    if not return_state:
+        return out
+    # decode cache: the raw (pre-conv) xBC tail + the final SSM state
+    # (padded steps carry dt == 0, so the final state is exact).
+    _, xbc_raw, _ = _split(cfg, zxbcdt)
+    xbc_raw = xbc_raw[:, :seq]
+    km1 = s.d_conv - 1
+    conv_tail = xbc_raw[:, seq - km1 : seq] if seq >= km1 else jnp.pad(
+        xbc_raw, ((0, 0), (km1 - seq, 0), (0, 0))
+    )
+    return out, {"conv": conv_tail, "ssm": state_f}
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    s, d_inner, h, d_xbc = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, d_xbc), dtype),
+        "ssm": jnp.zeros((batch, h, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def mamba_decode(
+    p: Params, x_in: jnp.ndarray, cache: Params, cfg: ArchConfig
+) -> Tuple[jnp.ndarray, Params]:
+    """x_in (B, 1, D) single step; O(1) state update."""
+    s, d_inner, h, d_xbc = _dims(cfg)
+    bsz = x_in.shape[0]
+    zxbcdt = x_in[:, 0] @ p["in_proj"]  # (B, *)
+    z, xbc, dt_raw = _split(cfg, zxbcdt[:, None, :])
+    z, xbc, dt_raw = z[:, 0], xbc[:, 0], dt_raw[:, 0]
+
+    conv_win = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    acc = jnp.einsum("bkd,kd->bd", conv_win, p["conv_w"]) + p["conv_b"]
+    xbc_c = jax.nn.silu(acc)
+    new_conv = conv_win[:, 1:]
+
+    xs, bmat, cmat = _split_xbc(cfg, xbc_c[:, None, :])
+    g, n, hd = s.n_groups, s.d_state, s.head_dim
+    xs = xs.reshape(bsz, h, hd).astype(jnp.float32)
+    rep = h // g
+    bh = jnp.repeat(bmat.reshape(bsz, g, n), rep, axis=1).astype(jnp.float32)
+    ch = jnp.repeat(cmat.reshape(bsz, g, n), rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)  # (B,H)
+    state = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xs, bh
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", ch, state)  # (B,H,P)
+    y = y + xs * p["D"][:, None]
+    y = y.reshape(bsz, d_inner).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"conv": new_conv, "ssm": state}

@@ -1,0 +1,26 @@
+"""Dense SwiGLU MLP."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, (d_model, d_ff), dtype),
+        "w3": dense_init(k2, (d_model, d_ff), dtype),
+        "w2": dense_init(k3, (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+
+
+def mlp_forward(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    return h @ p["w2"]

@@ -1,0 +1,67 @@
+"""Global implementation knobs, so baseline vs optimized lowers from the
+same model code (EXPERIMENTS.md SPerf before/after discipline).
+
+Defaults are the OPTIMIZED configuration; `baseline()` restores the
+paper-faithful/naive implementations the baselines were recorded with.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+
+@dataclasses.dataclass
+class Flags:
+    attention_impl: str = "flash"  # "flash" | "chunked"
+    flash_p_dtype: str = "bfloat16"  # P dtype between QK and PV matmuls
+    flash_q_blk: int = 512
+    flash_kv_blk: int = 512
+    mla_absorb: bool = True  # latent-space decode scoring (no k/v expand)
+    moe_shardmap: bool = False  # reserved: explicit a2a dispatch
+    # SSD (mamba2): remat each chunk step (backward recomputes the dual-form
+    # intermediates instead of storing them); 0 = use cfg.ssm.chunk
+    ssm_chunk_remat: bool = True
+    ssm_chunk_override: int = 0
+    # context-parallel attention: shard the q sequence dim over this mesh
+    # axis inside attention (prefill of archs whose head counts don't divide
+    # the model axis -- EXPERIMENTS.md SPerf qwen cell)
+    attention_cp_axis: str = ""
+    # adaptive FSDP: replicate param trees smaller than this (bytes); large
+    # trees shard over (pod, data).  Avoids per-layer all-gathers for models
+    # that fit replicated (gemma3's collective bound).
+    fsdp_min_tree_bytes: int = 3 << 30
+
+
+FLAGS = Flags()
+
+
+def set_baseline() -> None:
+    FLAGS.attention_impl = "chunked"
+    FLAGS.flash_p_dtype = "float32"
+    FLAGS.mla_absorb = False
+    FLAGS.ssm_chunk_remat = False
+    FLAGS.ssm_chunk_override = 0
+    FLAGS.attention_cp_axis = ""
+    FLAGS.fsdp_min_tree_bytes = 0  # baseline: FSDP everything
+
+
+def set_optimized() -> None:
+    FLAGS.attention_impl = "flash"
+    FLAGS.flash_p_dtype = "bfloat16"
+    FLAGS.mla_absorb = True
+    FLAGS.ssm_chunk_remat = True
+    FLAGS.ssm_chunk_override = 128
+    FLAGS.fsdp_min_tree_bytes = 3 << 30
+
+
+@contextlib.contextmanager
+def overrides(**kw):
+    old = {k: getattr(FLAGS, k) for k in kw}
+    try:
+        for k, v in kw.items():
+            setattr(FLAGS, k, v)
+        yield
+    finally:
+        for k, v in old.items():
+            setattr(FLAGS, k, v)

@@ -1,0 +1,157 @@
+"""AdamW from scratch, with low-precision moment options.
+
+Moment dtypes:
+  float32         textbook
+  bfloat16        halves optimizer HBM (DeepSeek-V3-style low-precision)
+  int8            block-wise-quantised moments (8-bit-Adam style): int8
+                  payload + one f32 scale per block of 256 -- 4x smaller
+                  than f32; needed for the 671B config to fit 256 x 16 GB
+                  (DESIGN.md S6).
+
+The update math always runs in f32; only storage is quantised.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+_QBLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"  # float32 | bfloat16 | int8
+
+
+# ---------------------------------------------------------------------------
+# block-wise int8 moment codec
+# ---------------------------------------------------------------------------
+
+
+def _q8_encode(x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % _QBLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)[:, 0]}
+
+
+def _q8_decode(enc: Dict[str, jnp.ndarray], shape, size) -> jnp.ndarray:
+    flat = (enc["q"].astype(jnp.float32) * enc["scale"][:, None]).reshape(-1)
+    return flat[:size].reshape(shape)
+
+
+def _moment_init(p: jnp.ndarray, dtype: str):
+    if dtype == "int8":
+        return _q8_encode(jnp.zeros_like(p, jnp.float32))
+    return jnp.zeros_like(p, jnp.dtype(dtype))
+
+
+def _moment_read(m, p: jnp.ndarray, dtype: str, sqrt_domain: bool = False):
+    if dtype == "int8":
+        val = _q8_decode(m, p.shape, p.size)
+        # the second moment is quantised in sqrt space (halved dynamic
+        # range => far better small-value resolution for 1/sqrt(v))
+        return val * val if sqrt_domain else val
+    return m.astype(jnp.float32)
+
+
+def _moment_write(val: jnp.ndarray, dtype: str, sqrt_domain: bool = False):
+    if dtype == "int8":
+        return _q8_encode(jnp.sqrt(val) if sqrt_domain else val)
+    return val.astype(jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# init / update
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params: Pytree, cfg: AdamWConfig) -> Dict[str, Pytree]:
+    return {
+        "m": jax.tree.map(lambda p: _moment_init(p, cfg.moment_dtype), params),
+        "v": jax.tree.map(lambda p: _moment_init(p, cfg.moment_dtype), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    params: Pytree,
+    grads: Pytree,
+    opt_state: Dict[str, Pytree],
+    cfg: AdamWConfig,
+    lr_scale: jnp.ndarray | float = 1.0,
+) -> Tuple[Pytree, Dict[str, Pytree], Dict[str, jnp.ndarray]]:
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    t = count.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    # moments are a separate tree structure for int8 (dict leaves); walk the
+    # param tree and index the moment trees with the same treedef
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+
+    # exact Adam bounds |update| by ~1/sqrt(1-b2); quantised moments can
+    # break that when a v-block underflows to 0, so clamp (a no-op for
+    # exact moments, the safety rail for int8 ones)
+    update_cap = 2.0 / float(np.sqrt(1.0 - cfg.b2))
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m_enc, v_enc in zip(flat_p, flat_g, flat_m, flat_v):
+        g32 = g.astype(jnp.float32) * clip
+        m = _moment_read(m_enc, p, cfg.moment_dtype)
+        v = _moment_read(v_enc, p, cfg.moment_dtype, sqrt_domain=True)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        update = jnp.clip(update, -update_cap, update_cap)
+        p32 = p.astype(jnp.float32)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            p32 = p32 * (1.0 - lr * cfg.weight_decay)
+        p32 = p32 - lr * update
+        new_p.append(p32.astype(p.dtype))
+        new_m.append(_moment_write(m, cfg.moment_dtype))
+        new_v.append(_moment_write(v, cfg.moment_dtype, sqrt_domain=True))
+
+    params = jax.tree.unflatten(treedef, new_p)
+    opt_state = {
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+        "count": count,
+    }
+    return params, opt_state, {"grad_norm": gnorm, "clip": clip}
+
+
+def warmup_cosine(step, *, peak: float = 1.0, warmup: int = 100, total: int = 10000):
+    """lr multiplier schedule (multiplies AdamWConfig.lr)."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    progress = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(np.pi * progress))
+    return peak * warm * (0.1 + 0.9 * cos)

@@ -1,0 +1,80 @@
+"""Fault tolerance: failure injection, straggler watchdog, supervised retry.
+
+On a real cluster the coordinator restarts failed workers and the job
+resumes from the last committed checkpoint; in this container the same
+control flow is exercised with injected failures (tests/test_fault.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministically fail at the given steps (simulated node loss)."""
+
+    fail_at_steps: tuple = ()
+    fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at_steps and step not in self.fired:
+            self.fired.add(step)
+            raise InjectedFailure(f"injected node failure at step {step}")
+
+
+class StragglerWatchdog:
+    """Step-time tracker: alarms when a step exceeds k x trailing p50.
+
+    On a real deployment the alarm triggers work re-assignment / node
+    replacement; here it records events for the supervisor + tests.
+    """
+
+    def __init__(self, factor: float = 3.0, window: int = 50, min_steps: int = 5):
+        self.factor = factor
+        self.window = window
+        self.min_steps = min_steps
+        self.times: List[float] = []
+        self.alarms: List[dict] = []
+
+    def observe(self, step: int, seconds: float) -> Optional[dict]:
+        alarm = None
+        if len(self.times) >= self.min_steps:
+            hist = sorted(self.times[-self.window :])
+            p50 = hist[len(hist) // 2]
+            if seconds > self.factor * p50:
+                alarm = {"step": step, "seconds": seconds, "p50": p50}
+                self.alarms.append(alarm)
+        self.times.append(seconds)
+        return alarm
+
+
+def run_supervised(
+    work: Callable[[int], int],
+    *,
+    start_step: int,
+    total_steps: int,
+    restore: Callable[[], int],
+    max_restarts: int = 5,
+) -> int:
+    """Supervisor loop: run `work(step) -> next_step` until total_steps,
+    restoring from the last checkpoint (via `restore() -> step`) on failure.
+    Models the cluster-level restart-from-checkpoint policy.
+    """
+    step = start_step
+    restarts = 0
+    while step < total_steps:
+        try:
+            step = work(step)
+        except InjectedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            step = restore()
+    return step

@@ -1,0 +1,116 @@
+"""The training loop: steps + checkpoints + fault handling + watchdog.
+
+This is the single-process core; `launch/train.py` wraps it with mesh
+construction and host-sharded data.  All fault-tolerance behaviour
+(restore-on-failure, SIGTERM save, straggler alarms) is exercised by
+tests/test_fault.py with injected failures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+from repro.runtime.fault import FailureInjector, StragglerWatchdog
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    keep: int = 3
+    log_every: int = 10
+    max_restarts: int = 5
+
+
+def train_loop(
+    *,
+    state: Pytree,
+    train_step: Callable,
+    next_batch: Callable[[int], Dict[str, np.ndarray]],
+    cfg: LoopConfig,
+    injector: Optional[FailureInjector] = None,
+    log: Callable[[str], None] = print,
+) -> Pytree:
+    """Run to cfg.total_steps with restore-on-failure semantics."""
+    ckpt = (
+        ckpt_io.AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep)
+        if cfg.ckpt_dir
+        else None
+    )
+    watchdog = StragglerWatchdog()
+
+    # resume if a checkpoint exists
+    step = 0
+    if cfg.ckpt_dir:
+        last = ckpt_io.latest_step(cfg.ckpt_dir)
+        if last is not None:
+            state, step = ckpt_io.restore(cfg.ckpt_dir, last, state)
+            step += 1
+            log(f"[resume] restored step {step - 1}, continuing at {step}")
+
+    # SIGTERM (preemption) -> synchronous save + clean exit
+    interrupted = {"flag": False}
+
+    def _on_term(signum, frame):
+        interrupted["flag"] = True
+
+    old_handler = signal.signal(signal.SIGTERM, _on_term)
+
+    restarts = 0
+    try:
+        while step < cfg.total_steps:
+            try:
+                batch = next_batch(step)
+                if injector is not None:
+                    injector.check(step)
+                t0 = time.time()
+                state, metrics = train_step(state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.time() - t0
+                alarm = watchdog.observe(step, dt)
+                if alarm:
+                    log(f"[straggler] step {step}: {dt:.3f}s vs p50 "
+                        f"{alarm['p50']:.3f}s -- flagging for reassignment")
+                if step % cfg.log_every == 0:
+                    log(
+                        f"step {step:6d} loss {float(metrics['loss']):.4f} "
+                        f"gnorm {float(metrics.get('grad_norm', 0)):.3f} "
+                        f"({dt:.3f}s)"
+                    )
+                if ckpt and step > 0 and step % cfg.ckpt_every == 0:
+                    ckpt.save(step, state)
+                if interrupted["flag"]:
+                    log(f"[preempt] SIGTERM at step {step}: saving + exiting")
+                    if ckpt:
+                        ckpt.wait()
+                        ckpt_io.save(cfg.ckpt_dir, step, state, keep=cfg.keep)
+                    return state
+                step += 1
+            except Exception as e:
+                if ckpt is None or restarts >= cfg.max_restarts:
+                    raise
+                restarts += 1
+                log(f"[fault] step {step}: {type(e).__name__}: {e} -- "
+                    f"restoring from last checkpoint (restart {restarts})")
+                ckpt.wait()
+                last = ckpt_io.latest_step(cfg.ckpt_dir)
+                if last is None:
+                    raise
+                state, restored = ckpt_io.restore(cfg.ckpt_dir, last, state)
+                step = restored + 1
+        if ckpt:
+            ckpt.wait()
+            ckpt_io.save(cfg.ckpt_dir, cfg.total_steps - 1, state, keep=cfg.keep)
+    finally:
+        signal.signal(signal.SIGTERM, old_handler)
+    return state

@@ -1,0 +1,22 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run sets its own XLA_FLAGS)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.models.runtime_flags import FLAGS
+
+# tests validate numerics against f32 oracles; the perf configuration's
+# bf16 P-matrix (runtime_flags.set_optimized) is exercised explicitly in
+# test_flash_attention.py with appropriate tolerances
+FLAGS.flash_p_dtype = "float32"
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

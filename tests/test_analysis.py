@@ -1,0 +1,41 @@
+"""The paper's S5 analytical model, as assertions."""
+
+from repro.core import analysis as an
+
+
+def test_ai_l3_is_r_over_2():
+    assert an.ai_fast_level(24) == 12.0
+    # paper: SkylakeX CMR_L3 ~ 10 => R >= 20; i7 CMR_L3 ~ 4 => R >= 8
+    assert an.min_r(an.SKYLAKE_X) == 20
+    assert an.min_r(an.MOBILE_I7) == 8
+
+
+def test_dram_cmr_matches_paper():
+    # paper: "Which was 35 for the SkylakeX and 13 for the i7"
+    assert round(an.SKYLAKE_X.cmr_dram) == 35
+    assert round(an.MOBILE_I7.cmr_dram) == 13
+
+
+def test_ai_dram_channel_bound():
+    # AI_dram ~ C C' / (2 (C + C')) >= min(C, C')/4 (paper S5.1)
+    for c, cp in [(32, 32), (64, 128), (256, 64)]:
+        ai = an.ai_dram(c, cp, t=7, t_out=5)
+        assert ai >= min(c, cp) / 4 * 0.5  # T'<T shrinks output bytes a bit
+
+def test_kernel_matrix_footprint():
+    # paper S4.1.1: FFT T=16, 32ch -> ~1MB; Winograd T=8 128ch -> 4MB
+    assert an.kernel_matrix_bytes(32, 32, 16) == 1 * 1024 ** 2
+    assert an.kernel_matrix_bytes(128, 128, 8) == 4 * 1024 ** 2
+
+
+def test_choose_algo_crossover():
+    """Fused wins at low channel counts, 3-stage at high (paper Fig 2)."""
+    hw = an.SKYLAKE_X
+    assert an.choose_algo(hw, 64, 64, 8) == "l3_fused"
+    assert an.choose_algo(hw, 128, 128, 8) == "l3_fused"
+    assert an.choose_algo(hw, 1024, 1024, 8) == "three_stage"
+
+
+def test_tpu_adaptation_cmr():
+    # HBM CMR on v5e ~ 240 -- 7x the SkylakeX DRAM CMR: fusion matters more
+    assert 200 < an.TPU_V5E.cmr_dram < 280

@@ -1,0 +1,72 @@
+"""Checkpoint save/restore: atomicity, keep-k, async, elastic restore."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {
+            "w": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((16,)), jnp.bfloat16),
+        },
+        "step": jnp.int32(7),
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 7, t)
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), t)
+    restored, step = ckpt.restore(tmp_path, None, like)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )
+
+
+def test_keep_k_gc(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(tmp_path, s, t, keep=2)
+    assert ckpt.latest_step(tmp_path) == 5
+    steps = sorted(
+        int(p.stem.split("_")[1]) for p in tmp_path.glob("step_*.done")
+    )
+    assert steps == [4, 5]
+
+
+def test_async_checkpointer(tmp_path):
+    c = ckpt.AsyncCheckpointer(str(tmp_path), keep=3)
+    t = _tree()
+    c.save(1, t)
+    c.save(2, t)  # joins the first
+    c.wait()
+    assert ckpt.latest_step(tmp_path) == 2
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(tmp_path, None, _tree())
+
+
+def test_elastic_restore_new_sharding(tmp_path):
+    """Restore with explicit (different) shardings -- the elastic path."""
+    t = _tree()
+    ckpt.save(tmp_path, 3, t)
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), t)
+    sh = jax.tree.map(
+        lambda x: jax.sharding.SingleDeviceSharding(jax.devices()[0]), like
+    )
+    restored, step = ckpt.restore(tmp_path, 3, like, shardings=sh)
+    assert step == 3
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]), np.asarray(t["params"]["w"])
+    )

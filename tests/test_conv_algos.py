@@ -1,0 +1,69 @@
+"""All convolution algorithms agree with the direct oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import conv2d, conv2d_direct, conv1d_depthwise_causal
+from repro.kernels.fused_winograd.ref import conv2d_ref
+
+ALGOS = ["three_stage", "l3_fused", "fft_fused", "l3_fused_pallas"]
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize(
+    "shape", [(2, 12, 12, 8, 16, 1), (1, 20, 17, 4, 4, 0), (1, 9, 9, 3, 5, 1)]
+)
+def test_conv2d_matches_direct(algo, shape):
+    b, h, w, c, cp, pad = shape
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.standard_normal((b, h, w, c)), jnp.float32)
+    wk = jnp.asarray(rng.standard_normal((3, 3, c, cp)), jnp.float32)
+    ref = conv2d_direct(x, wk, pad=pad)
+    y = conv2d(x, wk, pad=pad, algo=algo, m=4, r_tiles=6)
+    rel = float(jnp.abs(y - ref).max() / jnp.abs(ref).max())
+    assert rel < 5e-5, (algo, shape, rel)
+
+
+def test_direct_matches_manual_ref():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((2, 10, 11, 5)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 5, 7)), jnp.float32)
+    np.testing.assert_allclose(
+        conv2d_direct(x, w, pad=1), conv2d_ref(x, w, pad=1), rtol=2e-4, atol=2e-4
+    )
+
+
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(7, 24),
+    w=st.integers(7, 24),
+    c=st.integers(1, 8),
+    cp=st.integers(1, 8),
+    pad=st.integers(0, 2),
+    m=st.integers(2, 6),
+    r=st.integers(1, 9),
+    algo=st.sampled_from(["three_stage", "l3_fused"]),
+)
+@settings(max_examples=25, deadline=None)
+def test_conv2d_property(b, h, w, c, cp, pad, m, r, algo):
+    rng = np.random.default_rng(b * h * w)
+    x = jnp.asarray(rng.standard_normal((b, h, w, c)), jnp.float32)
+    wk = jnp.asarray(rng.standard_normal((3, 3, c, cp)), jnp.float32)
+    ref = conv2d_direct(x, wk, pad=pad)
+    y = conv2d(x, wk, pad=pad, algo=algo, m=m, r_tiles=r)
+    assert y.shape == ref.shape
+    rel = float(jnp.abs(y - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert rel < 1e-4, (algo, (b, h, w, c, cp, pad, m, r), rel)
+
+
+def test_conv1d_depthwise_causal():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 20, 6)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, 6)), jnp.float32)
+    y = conv1d_depthwise_causal(x, w)
+    # manual: y[t] = sum_k x[t-K+1+k] w[k]
+    xp = np.pad(np.asarray(x), ((0, 0), (3, 0), (0, 0)))
+    ref = sum(xp[:, i : i + 20, :] * np.asarray(w)[i] for i in range(4))
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-5, atol=1e-5)

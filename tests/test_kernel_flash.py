@@ -1,0 +1,63 @@
+"""Pallas flash-attention kernel vs pure-jnp oracle (interpret mode)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import attention_ref, flash_attention_pallas
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,hd,causal,window,qb,kb",
+    [
+        (2, 4, 2, 64, 16, True, 0, 16, 16),
+        (1, 8, 1, 48, 8, True, 12, 16, 8),
+        (1, 2, 2, 60, 8, True, 0, 16, 16),  # padding path
+        (2, 4, 4, 64, 8, False, 0, 32, 16),
+        (1, 4, 2, 96, 16, True, 24, 16, 16),  # banded window
+    ],
+)
+def test_matches_oracle(rng, b, hq, hkv, s, hd, causal, window, qb, kb):
+    q = jnp.asarray(rng.standard_normal((b, hq, s, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, hd)), jnp.float32)
+    y = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_blk=qb, kv_blk=kb
+    )
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    assert y.shape == ref.shape
+    assert float(jnp.abs(y - ref).max()) < 5e-6
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(rng, dtype):
+    q = jnp.asarray(rng.standard_normal((1, 4, 32, 16)), dtype)
+    k = jnp.asarray(rng.standard_normal((1, 2, 32, 16)), dtype)
+    v = jnp.asarray(rng.standard_normal((1, 2, 32, 16)), dtype)
+    y = flash_attention_pallas(q, k, v, q_blk=16, kv_blk=16)
+    ref = attention_ref(q, k, v)
+    assert y.dtype == dtype
+    tol = 3e-2 if dtype == jnp.bfloat16 else 5e-6
+    err = float(
+        jnp.abs(y.astype(jnp.float32) - ref.astype(jnp.float32)).max()
+    )
+    assert err < tol
+
+
+@given(
+    s=st.integers(16, 96),
+    hq=st.sampled_from([2, 4]),
+    hkv=st.sampled_from([1, 2]),
+    window=st.sampled_from([0, 8, 24]),
+    blk=st.sampled_from([8, 16, 32]),
+)
+@settings(max_examples=10, deadline=None)
+def test_property_sweep(s, hq, hkv, window, blk):
+    rng = np.random.default_rng(s + hq)
+    q = jnp.asarray(rng.standard_normal((1, hq, s, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, hkv, s, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, hkv, s, 8)), jnp.float32)
+    y = flash_attention_pallas(q, k, v, window=window, q_blk=blk, kv_blk=blk)
+    ref = attention_ref(q, k, v, window=window)
+    assert float(jnp.abs(y - ref).max()) < 5e-6

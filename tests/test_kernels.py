@@ -1,0 +1,106 @@
+"""Pallas kernels vs their pure-jnp oracles: shape/dtype sweeps (interpret)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.conv1d_fused import conv1d_fused, conv1d_ref
+from repro.kernels.decode_mlp import decode_mlp, decode_mlp_ref
+from repro.kernels.fused_winograd import conv2d_fused_pallas, conv2d_ref
+
+
+@pytest.mark.parametrize(
+    "b,h,w,c,cp,k,pad,m,r",
+    [
+        (1, 16, 16, 8, 16, 3, 1, 5, 2),
+        (2, 13, 21, 4, 8, 3, 0, 4, 3),
+        (1, 30, 30, 16, 8, 3, 1, 6, 4),
+        (1, 7, 7, 3, 3, 3, 1, 2, 2),
+        (1, 24, 24, 8, 8, 5, 2, 4, 4),
+    ],
+)
+def test_fused_winograd_shapes(b, h, w, c, cp, k, pad, m, r):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((b, h, w, c)), jnp.float32)
+    wk = jnp.asarray(rng.standard_normal((k, k, c, cp)), jnp.float32)
+    y = conv2d_fused_pallas(x, wk, pad=pad, m=m, r_tiles=r)
+    ref = conv2d_ref(x, wk, pad=pad)
+    assert y.shape == ref.shape
+    rel = float(jnp.abs(y - ref).max() / jnp.abs(ref).max())
+    assert rel < 1e-4, rel
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_winograd_dtypes(dtype):
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((1, 18, 18, 8)), dtype)
+    wk = jnp.asarray(rng.standard_normal((3, 3, 8, 8)), dtype)
+    y = conv2d_fused_pallas(x, wk, pad=1, m=4, r_tiles=4)
+    ref = conv2d_ref(x, wk, pad=1)
+    assert y.dtype == dtype
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    rel = float(
+        jnp.abs(y.astype(jnp.float32) - ref.astype(jnp.float32)).max()
+        / jnp.abs(ref.astype(jnp.float32)).max()
+    )
+    assert rel < tol, rel
+
+
+@given(
+    h=st.integers(7, 26),
+    w=st.integers(7, 26),
+    c=st.integers(1, 8),
+    cp=st.integers(1, 8),
+    m=st.integers(2, 5),
+    r=st.integers(1, 6),
+)
+@settings(max_examples=20, deadline=None)
+def test_fused_winograd_property(h, w, c, cp, m, r):
+    rng = np.random.default_rng(h * w + c)
+    x = jnp.asarray(rng.standard_normal((1, h, w, c)), jnp.float32)
+    wk = jnp.asarray(rng.standard_normal((3, 3, c, cp)), jnp.float32)
+    y = conv2d_fused_pallas(x, wk, pad=1, m=m, r_tiles=r)
+    ref = conv2d_ref(x, wk, pad=1)
+    assert y.shape == ref.shape
+    rel = float(jnp.abs(y - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert rel < 1e-4
+
+
+@given(
+    b=st.integers(1, 3),
+    l=st.integers(1, 70),
+    d=st.integers(1, 16),
+    k=st.integers(1, 5),
+    lb=st.sampled_from([8, 16, 32]),
+)
+@settings(max_examples=20, deadline=None)
+def test_conv1d_fused_property(b, l, d, k, lb):
+    rng = np.random.default_rng(l * d)
+    x = jnp.asarray(rng.standard_normal((b, l, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+    bias = jnp.asarray(rng.standard_normal((d,)), jnp.float32)
+    y = conv1d_fused(x, w, bias, lb=lb)
+    ref = conv1d_ref(x, w, bias)
+    assert y.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+@given(
+    b=st.integers(1, 9),
+    d=st.integers(4, 32),
+    f=st.integers(4, 64),
+    rb=st.sampled_from([2, 4, 8]),
+    fb=st.sampled_from([8, 16, 64]),
+)
+@settings(max_examples=20, deadline=None)
+def test_decode_mlp_property(b, d, f, rb, fb):
+    rng = np.random.default_rng(b * d + f)
+    x = jnp.asarray(rng.standard_normal((b, d)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((d, f)) * 0.2, jnp.float32)
+    w3 = jnp.asarray(rng.standard_normal((d, f)) * 0.2, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((f, d)) * 0.2, jnp.float32)
+    y = decode_mlp(x, w1, w3, w2, rb=rb, fb=fb)
+    ref = decode_mlp_ref(x, w1, w3, w2)
+    assert y.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,41 @@
+"""Shared-buffer planner: the paper's S4.2 aliasing invariant + savings."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sharedbuf import SharedBufferPlan, max_r_for_budget
+
+
+@given(
+    r=st.integers(1, 64),
+    c_in=st.integers(1, 512),
+    c_out=st.integers(1, 512),
+    t=st.integers(2, 16),
+)
+@settings(max_examples=100, deadline=None)
+def test_aliasing_invariant(r, c_in, c_out, t):
+    plan = SharedBufferPlan(r=r, c_in=c_in, c_out=c_out, t2=t * t)
+    plan.validate()  # result s never touches lhs >= s
+    # buffer is never larger than naive storage, and close to the paper bound
+    assert plan.bytes <= plan.naive_bytes + 4 * plan.r * plan.width
+    assert plan.bytes >= plan.paper_bound_bytes - 4 * plan.r * plan.width
+
+
+def test_savings_match_paper_figure1a():
+    """Fig 1(a): C == C' -> ~(T^2-1)/(2 T^2) saving; for 4 matmuls of equal
+    size the paper reports 37.5% (40 slots vs 64)."""
+    plan = SharedBufferPlan(r=1, c_in=8, c_out=8, t2=4)
+    # rows: (4+1)*1 = 5 of width 8 = 40 slots vs naive 4*(8+8) = 64
+    assert plan.rows * plan.width == 40
+    assert plan.naive_bytes == 64 * 4
+    assert abs(plan.savings - 0.375) < 1e-9
+
+
+def test_max_r_budget_monotonic():
+    r1 = max_r_for_budget(512 * 1024, 64, 64, 8)
+    r2 = max_r_for_budget(1024 * 1024, 64, 64, 8)
+    assert r2 >= r1 >= 1
+    # shared buffer admits ~2x larger R than separate buffers (paper S4.2)
+    r_shared = max_r_for_budget(512 * 1024, 64, 64, 8, shared=True)
+    r_naive = max_r_for_budget(512 * 1024, 64, 64, 8, shared=False)
+    assert r_shared >= int(1.8 * r_naive)

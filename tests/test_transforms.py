@@ -1,0 +1,65 @@
+"""Winograd transform construction: exactness + algebraic properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import transforms
+
+
+def _brute_corr(d, k):
+    m = len(d) - len(k) + 1
+    return np.array([np.dot(d[i : i + len(k)], k) for i in range(m)])
+
+
+@pytest.mark.parametrize("m,r", [(2, 3), (3, 3), (4, 3), (5, 3), (6, 3),
+                                 (2, 5), (4, 5), (8, 3), (1, 3), (5, 4)])
+def test_winograd_identity_float64(m, r):
+    at, g, bt = transforms.winograd_matrices(m, r, np.float64)
+    n = m + r - 1
+    rng = np.random.default_rng(m * 100 + r)
+    d = rng.standard_normal(n)
+    k = rng.standard_normal(r)
+    y = at @ ((g @ k) * (bt @ d))
+    np.testing.assert_allclose(y, _brute_corr(d, k), rtol=1e-10, atol=1e-10)
+
+
+@given(m=st.integers(1, 7), r=st.integers(2, 5), seed=st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_winograd_identity_property(m, r, seed):
+    at, g, bt = transforms.winograd_matrices(m, r, np.float64)
+    n = m + r - 1
+    rng = np.random.default_rng(seed)
+    d = rng.standard_normal(n)
+    k = rng.standard_normal(r)
+    y = at @ ((g @ k) * (bt @ d))
+    np.testing.assert_allclose(y, _brute_corr(d, k), rtol=1e-8, atol=1e-8)
+
+
+def test_matrices_exact_rational():
+    """The exact construction must reproduce the float matrices."""
+    at_e, g_e, bt_e = transforms.winograd_matrices_exact(4, 3)
+    at, g, bt = transforms.winograd_matrices(4, 3, np.float64)
+    for exact, f in ((at_e, at), (g_e, g), (bt_e, bt)):
+        np.testing.assert_allclose(
+            np.array([[float(v) for v in row] for row in exact]), f
+        )
+
+
+def test_bt_is_inverse_transpose():
+    """B^T = E^{-T}: check E^T B^T = I exactly-ish."""
+    m, r = 5, 3
+    n = m + r - 1
+    _, _, bt = transforms.winograd_matrices(m, r, np.float64)
+    pts = transforms.interpolation_points(n - 1)
+    ev = np.array(
+        [[float(p) ** j for j in range(n)] for p in pts]
+        + [[0.0] * (n - 1) + [1.0]]
+    )
+    np.testing.assert_allclose(ev.T @ bt, np.eye(n), atol=1e-9)
+
+
+def test_tile_sizes():
+    assert transforms.tile_size(5, 3) == 7
+    assert transforms.output_tile(7, 3) == 5
+    assert transforms.fft_num_freqs(16) == 9
