@@ -1,0 +1,65 @@
+"""convserve engine benchmark: planned net vs all-direct, cold vs warm.
+
+Rows:
+  convserve/plan  -- plan_net wall time (pure roofline model, no measuring)
+  convserve/cold  -- first wave: jit compile + kernel transforms
+  convserve/warm  -- steady-state per-image serving time, cache hot
+  convserve/direct-- the same net all-direct (vendor baseline)
+
+    PYTHONPATH=src python -m benchmarks.convserve_bench
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.configs.convnets import vgg_mixed_channel
+from repro.convserve import NetExecutor, init_weights, plan_net, run_direct
+from repro.core import analysis
+
+
+def main(batch: int = 2, side: int = 64) -> None:
+    spec = vgg_mixed_channel(c_in=3)
+    ws = init_weights(spec, seed=0)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(
+        rng.standard_normal((batch, side, side, 3)) * 0.1, jnp.float32
+    )
+
+    t0 = time.perf_counter()
+    plan = plan_net(spec, side, side, hw=analysis.SKYLAKE_X)
+    t_plan = time.perf_counter() - t0
+    print(row("convserve/plan", t_plan * 1e6, ";".join(plan.algos())))
+
+    ex = NetExecutor(spec, ws, plan)
+    t0 = time.perf_counter()
+    jax.block_until_ready(ex(x))
+    t_cold = time.perf_counter() - t0
+    print(row("convserve/cold", t_cold * 1e6, f"batch{batch}"))
+
+    t_warm = time_fn(ex, x)
+    print(
+        row(
+            "convserve/warm", t_warm * 1e6,
+            f"{t_warm * 1e3 / batch:.1f}ms/img;"
+            f"hits{ex.cache.stats()['hits']}",
+        )
+    )
+
+    vendor = jax.jit(lambda x: run_direct(spec, ws, x))
+    t_dir = time_fn(vendor, x)
+    print(
+        row(
+            "convserve/direct", t_dir * 1e6,
+            f"{t_dir * 1e3 / batch:.1f}ms/img",
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -71,7 +71,7 @@ def bench_layer(tag: str, c: int, d: int, batch: int):
         "direct_ms": t_direct * 1e3 / batch,
         "speedup_vs_best": best_other / t_fused,
         "predicted_fused_wins": an.choose_algo(an.SKYLAKE_X, c, c, M + 2)
-        == "l3_fused",
+        in ("l3_fused", "fft_fused"),
     }
 
 

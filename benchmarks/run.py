@@ -16,7 +16,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="smaller batches")
     ap.add_argument(
         "--only", default=None,
-        help="comma list: fig2,fig3,analysis,r_sweep,lm,roofline",
+        help="comma list: fig2,fig3,analysis,r_sweep,lm,roofline,convserve",
     )
     args = ap.parse_args()
     batch = 1 if args.quick else 2
@@ -52,6 +52,12 @@ def main() -> None:
         from benchmarks import roofline_report
 
         sections.append(("roofline table (dry-run)", roofline_report.main, ()))
+    if want("convserve"):
+        from benchmarks import convserve_bench
+
+        sections.append(
+            ("convserve engine (planned net)", convserve_bench.main, (batch,))
+        )
 
     failures = 0
     for title, fn, fargs in sections:

@@ -1,0 +1,47 @@
+"""ConvNet specs for the convserve engine (VGG-style stage pipelines).
+
+The mixed-channel nets are the paper's motivating case: early wide-image/
+few-channel layers favour the L3-fused path, late many-channel layers
+overflow the shared fast level and fall back to the 3-stage structure --
+so a single whole-net plan exercises multiple algorithms.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.convserve.graph import NetSpec, conv, maxpool, relu
+
+
+def vgg_style(
+    name: str,
+    c_in: int,
+    widths: Sequence[int],
+    convs_per_stage: int = 2,
+    k: int = 3,
+) -> NetSpec:
+    """Stages of `convs_per_stage` same-padded convs + ReLU, then 2x2 pool."""
+    layers = []
+    c = c_in
+    for width in widths:
+        for _ in range(convs_per_stage):
+            layers.append(conv(c, width, k=k))
+            layers.append(relu())
+            c = width
+        layers.append(maxpool(2))
+    return NetSpec(name=name, layers=tuple(layers))
+
+
+def vgg_mixed_channel(c_in: int = 3) -> NetSpec:
+    """The demo net: 64 -> 128 -> 256 channels across three pooled stages.
+
+    On the paper's CPU models the 64/128-channel stages plan as l3_fused
+    and the 256-channel stage's 4 C C' T^2 kernel matrices overflow the
+    shared level, planning as three_stage.
+    """
+    return vgg_style("vgg-mixed", c_in, widths=(64, 128, 256))
+
+
+def tiny_testnet(c_in: int = 4) -> NetSpec:
+    """Small 4-conv net for tests: two stages, channel step 8 -> 16."""
+    return vgg_style("tiny-testnet", c_in, widths=(8, 16))

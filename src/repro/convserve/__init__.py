@@ -1,0 +1,39 @@
+"""convserve -- ConvNet inference engine over the paper's algorithms.
+
+Pipeline:  NetSpec --plan_net--> NetPlan --NetExecutor(+KernelCache)-->
+one jitted program per input bucket --ConvServer--> batched serving.
+"""
+
+from repro.convserve.cache import KernelCache
+from repro.convserve.executor import NetExecutor
+from repro.convserve.graph import (
+    LayerSpec,
+    NetSpec,
+    conv,
+    init_weights,
+    maxpool,
+    relu,
+    run_direct,
+)
+from repro.convserve.plan import LayerPlan, NetPlan
+from repro.convserve.planner import plan_layer, plan_net
+from repro.convserve.serving import ConvServeConfig, ConvServer, ImageRequest
+
+__all__ = [
+    "LayerSpec",
+    "NetSpec",
+    "conv",
+    "relu",
+    "maxpool",
+    "init_weights",
+    "run_direct",
+    "LayerPlan",
+    "NetPlan",
+    "plan_layer",
+    "plan_net",
+    "KernelCache",
+    "NetExecutor",
+    "ConvServer",
+    "ConvServeConfig",
+    "ImageRequest",
+]

@@ -1,0 +1,115 @@
+"""Pre-transformed kernel cache (the paper's footnote-1 inference path).
+
+Transformed convolutions never touch raw HWIO kernels at serving time:
+the right-hand matrices G W G^T (Winograd) or conj(rfft2(W)) (FFT) are
+computed once and reused by every request.  The cache memoizes them per
+(net, layer, algo, tile, dtype, geometry) so that
+
+  * repeated requests -- and different shape buckets of the same net --
+    hit the cache (the key excludes the activation spatial dims), and
+  * two layers that happen to share a geometry but hold different weights
+    never collide (the layer index is part of the key).
+
+Hit/miss counters make the reuse observable; `stats()` feeds benchmarks
+and the serving front-end's metrics.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fft_conv import transform_kernels_fft
+from repro.core.three_stage import transform_kernels
+from repro.convserve.plan import LayerPlan
+
+_WINO_FAMILY = ("three_stage", "l3_fused", "l3_fused_pallas")
+
+
+def weights_fingerprint(w) -> str:
+    """Content hash of a kernel tensor: ties cache entries to the actual
+    parameter values, so two executors sharing a cache but holding
+    different weights for the same net never serve each other's
+    transforms, while identical weights still share entries."""
+    arr = np.asarray(w)
+    return hashlib.sha1(
+        arr.tobytes() + str(arr.shape).encode() + str(arr.dtype).encode()
+    ).hexdigest()[:16]
+
+
+class KernelCache:
+    """Memoized right-hand (transformed-kernel) matrices."""
+
+    def __init__(self):
+        self._store: Dict[Tuple, jnp.ndarray] = {}
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key(net: str, plan: LayerPlan, dtype, w_fp: str) -> Tuple:
+        return (
+            net, plan.layer, plan.algo, plan.k,
+            plan.c_in, plan.c_out, plan.m, plan.t_fft,
+            jnp.dtype(dtype).name, w_fp,
+        )
+
+    def get(
+        self,
+        net: str,
+        plan: LayerPlan,
+        w: jnp.ndarray,
+        dtype=jnp.float32,
+        w_fp: Optional[str] = None,
+    ) -> Optional[jnp.ndarray]:
+        """Transformed kernels for this layer, building on first use.
+
+        `w_fp` is the weight fingerprint; pass a precomputed one (the
+        executor hashes each layer once at init) to avoid re-hashing per
+        request.  Returns None for algorithms with no pre-transform
+        (direct conv); those are not counted as hits or misses.
+        """
+        if plan.algo == "direct":
+            return None
+        key = self.key(net, plan, dtype, w_fp or weights_fingerprint(w))
+        cached = self._store.get(key)
+        if cached is not None:
+            self.hits += 1
+            return cached
+        self.misses += 1
+        wt = self._transform(plan, jnp.asarray(w, dtype))
+        self._store[key] = wt
+        return wt
+
+    @staticmethod
+    def _transform(plan: LayerPlan, w: jnp.ndarray) -> jnp.ndarray:
+        if plan.algo in _WINO_FAMILY:
+            if plan.m is None:
+                raise ValueError(f"layer {plan.layer}: wino plan without m")
+            return transform_kernels(w, plan.m)
+        if plan.algo == "fft_fused":
+            if plan.t_fft is None:
+                raise ValueError(f"layer {plan.layer}: fft plan without t_fft")
+            return transform_kernels_fft(w, plan.t_fft)
+        raise ValueError(f"no kernel transform for algo {plan.algo!r}")
+
+    def invalidate(self, net: Optional[str] = None) -> None:
+        """Drop entries (all, or one net's) -- call after a weight update."""
+        if net is None:
+            self._store.clear()
+        else:
+            self._store = {k: v for k, v in self._store.items() if k[0] != net}
+
+    @property
+    def nbytes(self) -> int:
+        return sum(v.nbytes for v in self._store.values())
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "entries": len(self._store),
+            "bytes": self.nbytes,
+        }

@@ -1,0 +1,163 @@
+"""Planned-net executor: one jitted program per input bucket.
+
+The whole net -- every conv in its planned algorithm plus the pointwise
+glue -- lowers as ONE XLA program per concrete input shape, so serving a
+bucket is a single dispatch.  Pre-transformed kernels come from the
+`KernelCache` and enter the program as arguments (not constants): a new
+bucket shape recompiles the program but reuses the cached transforms,
+and the cache counters are visible per-request because the fetch happens
+outside the jit boundary.
+
+Ragged batches: images smaller than their bucket ride in zero-padded.
+Zero padding alone is NOT enough for correctness -- the first conv writes
+nonzero values into the padded margin (its taps reach real pixels), and
+later same-padded convs bleed those back across the true-image edge.  So
+when per-sample extents are supplied, the executor re-zeroes everything
+beyond each sample's true extent after every conv (`sizes` is data, not
+shape: masking costs one compare+multiply and never recompiles).  With
+true dims divisible by the pool windows, pooling windows never straddle
+the mask edge, which makes the padded run exactly equal to running each
+image unpadded.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv import conv2d
+from repro.convserve.cache import KernelCache, weights_fingerprint
+from repro.convserve.graph import NetSpec
+from repro.convserve.plan import NetPlan
+
+# algorithms whose conv2d path consumes pre-transformed kernels; the
+# Pallas kernel transforms inside its own jit (constant-folded per compile)
+_CACHED_ALGOS = ("three_stage", "l3_fused", "fft_fused")
+
+
+def _mask_to_extent(x: jnp.ndarray, hs: jnp.ndarray, ws: jnp.ndarray):
+    """Zero rows >= hs[b] and cols >= ws[b] of an NHWC batch."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 2)
+    keep = (rows < hs[:, None, None, None]) & (cols < ws[:, None, None, None])
+    return jnp.where(keep, x, jnp.zeros((), x.dtype))
+
+
+class NetExecutor:
+    """Runs a `NetSpec` under a `NetPlan` with cached kernel transforms."""
+
+    def __init__(
+        self,
+        spec: NetSpec,
+        weights: Dict[int, jnp.ndarray],
+        plan: NetPlan,
+        *,
+        cache: Optional[KernelCache] = None,
+        dtype=jnp.float32,
+    ):
+        missing = [i for i, _ in spec.conv_layers() if i not in weights]
+        if missing:
+            raise ValueError(f"weights missing for conv layers {missing}")
+        if plan.net != spec.name:
+            raise ValueError(
+                f"plan is for net {plan.net!r}, spec is {spec.name!r}"
+            )
+        plans = {p.layer: p for p in plan.layers}
+        for i, layer in spec.conv_layers():
+            p = plans.get(i)
+            if p is None:
+                raise ValueError(f"plan missing conv layer {i}")
+            got = (p.c_in, p.c_out, p.k, p.pad)
+            want = (layer.c_in, layer.c_out, layer.k, layer.pad)
+            if got != want:
+                raise ValueError(
+                    f"plan layer {i} geometry {got} != spec {want} "
+                    "(stale plan file?)"
+                )
+        self.spec = spec
+        self.plan = plan
+        self.dtype = jnp.dtype(dtype)
+        self.cache = cache if cache is not None else KernelCache()
+        self.weights = {i: jnp.asarray(w, dtype) for i, w in weights.items()}
+        # hash once here, not per request: the fingerprint keys the cache
+        # to these parameter values (shared caches stay collision-free)
+        self._weights_fp = {
+            i: weights_fingerprint(w) for i, w in self.weights.items()
+        }
+        self._plans = plans
+        self._compiled: Dict[tuple, object] = {}
+
+    @property
+    def compile_count(self) -> int:
+        """How many programs have been lowered (bounded by bucketing)."""
+        return len(self._compiled)
+
+    def _forward(self, x, ws, wts, sizes):
+        if sizes is not None:
+            hs, wcols = sizes[:, 0], sizes[:, 1]
+            x = _mask_to_extent(x, hs, wcols)
+        for i, layer in enumerate(self.spec.layers):
+            if layer.kind == "conv":
+                x = conv2d(x, ws[i], plan=self._plans[i], wt=wts.get(i))
+                if sizes is not None:
+                    hs = hs + 2 * layer.pad - layer.k + 1
+                    wcols = wcols + 2 * layer.pad - layer.k + 1
+                    x = _mask_to_extent(x, hs, wcols)
+            elif layer.kind == "relu":
+                x = jax.nn.relu(x)  # relu(0) == 0: the mask survives
+            elif layer.kind == "maxpool":
+                b, h, w, c = x.shape
+                v = layer.window
+                x = x.reshape(b, h // v, v, w // v, v, c).max(axis=(2, 4))
+                if sizes is not None:
+                    # true dims divide v (validated at admission), so no
+                    # window straddles the mask edge; masked stays masked
+                    hs, wcols = hs // v, wcols // v
+            else:
+                raise AssertionError(layer.kind)
+        return x
+
+    def _fetch_transforms(self) -> Dict[int, jnp.ndarray]:
+        """Per-request cache fetch: first request per layer transforms and
+        stores; later requests (any bucket) count as hits."""
+        wts = {}
+        for i, _ in self.spec.conv_layers():
+            p = self._plans[i]
+            if p.algo in _CACHED_ALGOS:
+                wt = self.cache.get(
+                    self.plan.net, p, self.weights[i], self.dtype,
+                    w_fp=self._weights_fp[i],
+                )
+                if wt is not None:
+                    wts[i] = wt
+        return wts
+
+    def __call__(
+        self, x: jnp.ndarray, sizes: Optional[jnp.ndarray] = None
+    ) -> jnp.ndarray:
+        """Run one batch.
+
+        x: (B, H, W, C); defines the bucket.  sizes: optional (B, 2) int32
+        true (h, w) per sample for ragged batches -- samples are zeroed
+        beyond their true extent after every conv so padded serving is
+        exact (see module docstring).
+        """
+        if x.ndim != 4:
+            raise ValueError(f"expected NHWC input, got shape {x.shape}")
+        x = jnp.asarray(x, self.dtype)
+        self.spec.infer_shapes(x.shape[1], x.shape[2], x.shape[3])  # validate
+        if sizes is not None:
+            sizes = jnp.asarray(sizes, jnp.int32)
+            if sizes.shape != (x.shape[0], 2):
+                raise ValueError(
+                    f"sizes shape {sizes.shape} != ({x.shape[0]}, 2)"
+                )
+        wts = self._fetch_transforms()
+        key = (tuple(x.shape), sizes is not None)
+        fn = self._compiled.get(key)
+        if fn is None:
+            fn = jax.jit(self._forward)
+            self._compiled[key] = fn
+        return fn(x, self.weights, wts, sizes)

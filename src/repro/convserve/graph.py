@@ -1,0 +1,148 @@
+"""ConvNet layer-graph description for the serving engine.
+
+A net is a sequential tuple of `LayerSpec`s -- convolutions interleaved
+with the pointwise/pooling glue of the VGG/ResNet-stem family.  The spec
+is pure geometry: weights live beside it (`init_weights`) so the same
+spec can be planned once and served with any parameter set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.conv import conv2d_direct
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer.  kind: "conv" | "relu" | "maxpool"."""
+
+    kind: str
+    c_in: int = 0
+    c_out: int = 0
+    k: int = 3
+    pad: int = 1
+    window: int = 2  # maxpool only
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "LayerSpec":
+        return LayerSpec(**d)
+
+
+def conv(c_in: int, c_out: int, k: int = 3, pad: int = -1) -> LayerSpec:
+    """3x3-style conv layer; pad defaults to "same" (k // 2)."""
+    return LayerSpec(
+        kind="conv", c_in=c_in, c_out=c_out, k=k,
+        pad=(k // 2 if pad < 0 else pad),
+    )
+
+
+def relu() -> LayerSpec:
+    return LayerSpec(kind="relu")
+
+
+def maxpool(window: int = 2) -> LayerSpec:
+    return LayerSpec(kind="maxpool", window=window)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetSpec:
+    """A sequential ConvNet: name + layer tuple."""
+
+    name: str
+    layers: Tuple[LayerSpec, ...]
+
+    def conv_layers(self) -> List[Tuple[int, LayerSpec]]:
+        return [(i, l) for i, l in enumerate(self.layers) if l.kind == "conv"]
+
+    @property
+    def pool_factor(self) -> int:
+        """Product of pooling windows: input dims must divide this for the
+        reshape-based pooling in the executor."""
+        f = 1
+        for l in self.layers:
+            if l.kind == "maxpool":
+                f *= l.window
+        return f
+
+    def infer_shapes(self, h: int, w: int, c: int) -> List[Tuple[int, int, int]]:
+        """(H, W, C) after each layer; validates channel wiring."""
+        shapes = []
+        for i, l in enumerate(self.layers):
+            if l.kind == "conv":
+                if l.c_in != c:
+                    raise ValueError(
+                        f"layer {i}: conv expects C={l.c_in}, got {c}"
+                    )
+                h = h + 2 * l.pad - l.k + 1
+                w = w + 2 * l.pad - l.k + 1
+                if h <= 0 or w <= 0:
+                    raise ValueError(f"layer {i}: spatial dims vanished")
+                c = l.c_out
+            elif l.kind == "maxpool":
+                if h % l.window or w % l.window:
+                    raise ValueError(
+                        f"layer {i}: pool window {l.window} does not divide "
+                        f"({h}, {w})"
+                    )
+                h, w = h // l.window, w // l.window
+            elif l.kind != "relu":
+                raise ValueError(f"layer {i}: unknown kind {l.kind!r}")
+            shapes.append((h, w, c))
+        return shapes
+
+    def out_shape(self, h: int, w: int, c: int) -> Tuple[int, int, int]:
+        return self.infer_shapes(h, w, c)[-1]
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "layers": [l.to_dict() for l in self.layers]}
+
+    @staticmethod
+    def from_dict(d: dict) -> "NetSpec":
+        return NetSpec(
+            name=d["name"],
+            layers=tuple(LayerSpec.from_dict(l) for l in d["layers"]),
+        )
+
+
+def init_weights(
+    spec: NetSpec, seed: int = 0, dtype=jnp.float32, scale: float = 0.05
+) -> Dict[int, jnp.ndarray]:
+    """HWIO kernels for every conv layer, keyed by layer index."""
+    rng = np.random.default_rng(seed)
+    ws: Dict[int, jnp.ndarray] = {}
+    for i, l in spec.conv_layers():
+        ws[i] = jnp.asarray(
+            rng.standard_normal((l.k, l.k, l.c_in, l.c_out)) * scale, dtype
+        )
+    return ws
+
+
+def run_direct(
+    spec: NetSpec, weights: Dict[int, jnp.ndarray], x: jnp.ndarray
+) -> jnp.ndarray:
+    """Reference execution with XLA's direct convolution everywhere.
+
+    The single source of the net's semantics outside the planned executor:
+    the oracle that examples, benchmarks, and tests compare against.
+    """
+    for i, layer in enumerate(spec.layers):
+        if layer.kind == "conv":
+            x = conv2d_direct(x, weights[i], pad=layer.pad)
+        elif layer.kind == "relu":
+            x = jax.nn.relu(x)
+        elif layer.kind == "maxpool":
+            b, h, w, c = x.shape
+            v = layer.window
+            x = x.reshape(b, h // v, v, w // v, v, c).max(axis=(2, 4))
+        else:
+            raise ValueError(f"layer {i}: unknown kind {layer.kind!r}")
+    return x

@@ -1,0 +1,117 @@
+"""Serializable per-layer algorithm plans (the net-level "wisdom file").
+
+A `NetPlan` records, for every conv layer of a `NetSpec`, which algorithm
+the roofline planner picked, at what tile size and R, and the predicted
+utilisation -- JSON on disk next to the per-op wisdom file, so a planned
+net can be shipped to serving hosts without re-planning (or re-measuring).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Optional, Tuple
+
+PLAN_ALGOS = ("direct", "three_stage", "l3_fused", "fft_fused", "l3_fused_pallas")
+PLAN_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """The planner's decision for one conv layer.
+
+    Geometry fields (h, w, c_in, c_out, k, pad) record what the layer was
+    planned *for*: the executor applies algo/m/t_fft/r_tiles to whatever
+    shapes arrive, and the kernel cache keys transforms on the geometry.
+    """
+
+    layer: int  # index into NetSpec.layers
+    algo: str
+    pad: int
+    r_tiles: int
+    c_in: int
+    c_out: int
+    k: int
+    h: int  # planned input spatial dims (reference bucket)
+    w: int
+    m: Optional[int] = None  # Winograd output-tile size (wino family)
+    t_fft: Optional[int] = None  # FFT tile size (fft family)
+    predicted_util: float = 0.0
+    tuned: bool = False  # R came from measurement, not the model
+
+    def __post_init__(self):
+        if self.algo not in PLAN_ALGOS:
+            raise ValueError(f"unknown algo {self.algo!r}")
+
+    @property
+    def t(self) -> Optional[int]:
+        """Transform tile size T, whichever family is planned."""
+        if self.algo == "fft_fused":
+            return self.t_fft
+        if self.m is not None:
+            return self.m + self.k - 1
+        return None
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "LayerPlan":
+        return LayerPlan(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetPlan:
+    """All layer plans for one net on one hardware model."""
+
+    net: str  # NetSpec.name
+    hw: str  # HardwareModel.name the plan was derived for
+    dtype: str
+    input_hw: Tuple[int, int]  # reference (H, W) the plan was derived at
+    layers: Tuple[LayerPlan, ...]
+
+    def layer_plan(self, idx: int) -> Optional[LayerPlan]:
+        for p in self.layers:
+            if p.layer == idx:
+                return p
+        return None
+
+    def algos(self) -> Tuple[str, ...]:
+        return tuple(p.algo for p in self.layers)
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "version": PLAN_VERSION,
+                "net": self.net,
+                "hw": self.hw,
+                "dtype": self.dtype,
+                "input_hw": list(self.input_hw),
+                "layers": [p.to_dict() for p in self.layers],
+            },
+            indent=1,
+            sort_keys=True,
+        )
+
+    @staticmethod
+    def from_json(text: str) -> "NetPlan":
+        d = json.loads(text)
+        if d.get("version") != PLAN_VERSION:
+            raise ValueError(f"plan version {d.get('version')} != {PLAN_VERSION}")
+        return NetPlan(
+            net=d["net"],
+            hw=d["hw"],
+            dtype=d["dtype"],
+            input_hw=tuple(d["input_hw"]),
+            layers=tuple(LayerPlan.from_dict(l) for l in d["layers"]),
+        )
+
+    def save(self, path) -> None:
+        from repro.core.ioutil import atomic_write_text
+
+        atomic_write_text(pathlib.Path(path), self.to_json())
+
+    @staticmethod
+    def load(path) -> "NetPlan":
+        return NetPlan.from_json(pathlib.Path(path).read_text())

@@ -1,0 +1,112 @@
+"""Batched image-serving front-end: queue + shape bucketing over the
+planned executor (the convnet analogue of serve/engine.py's wave loop).
+
+Requests carry variably-sized HWC images.  Each is assigned the smallest
+spatial bucket that holds it, zero-padded there, and batched with
+like-bucketed requests into waves of at most `max_batch`; wave sizes are
+rounded up to powers of two.  Compiled-program count is therefore bounded
+by  #buckets x log2(max_batch)  regardless of traffic, and every wave
+after the first reuses the kernel cache's pre-transformed matrices.
+Per-sample true extents ride along to the executor, whose post-conv
+masking makes padded serving *exact* -- each output equals the net run
+on that image alone (see executor module docstring).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.convserve.executor import NetExecutor
+
+
+@dataclasses.dataclass
+class ImageRequest:
+    rid: int
+    image: np.ndarray  # (H, W, C)
+
+
+@dataclasses.dataclass
+class ConvServeConfig:
+    max_batch: int = 8
+    # spatial buckets (square); must be multiples of the net's pool factor.
+    buckets: Sequence[int] = (32, 64, 128, 224)
+    pad_batch: bool = True  # round wave sizes up to a power of two
+
+
+class ConvServer:
+    def __init__(self, executor: NetExecutor, cfg: ConvServeConfig):
+        pf = executor.spec.pool_factor
+        bad = [b for b in cfg.buckets if b % pf]
+        if bad:
+            raise ValueError(
+                f"buckets {bad} not divisible by pool factor {pf}"
+            )
+        self.executor = executor
+        self.cfg = cfg
+        self.waves_served = 0
+
+    def _bucket_for(self, h: int, w: int) -> int:
+        for b in sorted(self.cfg.buckets):
+            if h <= b and w <= b:
+                return b
+        raise ValueError(
+            f"image ({h}, {w}) exceeds largest bucket {max(self.cfg.buckets)}"
+        )
+
+    def _wave_batch(self, n: int) -> int:
+        if not self.cfg.pad_batch:
+            return n
+        b = 1
+        while b < n:
+            b *= 2
+        return min(b, self.cfg.max_batch)
+
+    def run(self, requests: List[ImageRequest]) -> Dict[int, np.ndarray]:
+        """Serve all requests in bucketed waves; rid -> output (H', W', C')."""
+        by_bucket: Dict[int, List[ImageRequest]] = {}
+        for r in requests:
+            h, w, c = r.image.shape
+            # admission-time validation: a bad request must fail here, not
+            # at crop time after its wave-mates have already been computed
+            self.executor.spec.infer_shapes(h, w, c)
+            by_bucket.setdefault(self._bucket_for(h, w), []).append(r)
+        results: Dict[int, np.ndarray] = {}
+        for bucket in sorted(by_bucket):
+            queue = by_bucket[bucket]
+            while queue:
+                wave = queue[: self.cfg.max_batch]
+                queue = queue[self.cfg.max_batch :]
+                results.update(self._run_wave(bucket, wave))
+        return results
+
+    def _run_wave(
+        self, bucket: int, wave: List[ImageRequest]
+    ) -> Dict[int, np.ndarray]:
+        c = wave[0].image.shape[2]
+        b = self._wave_batch(len(wave))
+        batch = np.zeros((b, bucket, bucket, c), wave[0].image.dtype)
+        # batch-padding rows carry extent 0 -> fully masked in the executor
+        sizes = np.zeros((b, 2), np.int32)
+        for i, r in enumerate(wave):
+            h, w, rc = r.image.shape
+            if rc != c:
+                raise ValueError(f"request {r.rid}: channel mismatch {rc}!={c}")
+            batch[i, :h, :w, :] = r.image
+            sizes[i] = (h, w)
+        y = np.asarray(self.executor(batch, sizes))
+        self.waves_served += 1
+        out: Dict[int, np.ndarray] = {}
+        for i, r in enumerate(wave):
+            h, w, _ = r.image.shape
+            oh, ow, _ = self.executor.spec.out_shape(h, w, c)
+            out[r.rid] = y[i, :oh, :ow, :]
+        return out
+
+    def stats(self) -> dict:
+        s = dict(self.executor.cache.stats())
+        s["waves"] = self.waves_served
+        s["compiled_buckets"] = self.executor.compile_count
+        return s

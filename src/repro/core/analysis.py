@@ -122,13 +122,63 @@ def fused_is_feasible(
     return kernel_matrix_bytes(c_in, c_out, t) <= frac * hw.fast_shared_bytes
 
 
-def choose_algo(
-    hw: HardwareModel, c_in: int, c_out: int, t: int
-) -> Literal["l3_fused", "three_stage"]:
-    """The "wisdom file": fused where the kernel matrices fit the shared
-    level AND a feasible R exists between the bounds."""
+def flops_per_output_px(t: int, t_out: int, alpha: int = 1) -> float:
+    """Matmul FLOPs per output pixel, in units of C*C' (the common factor):
+    alpha 2 T^2 / T'^2.  Lets transform families with different tile sizes
+    and alpha be compared on equal footing (time ~ flops/px / utilisation)."""
+    return alpha * 2.0 * t * t / float(t_out * t_out)
+
+
+def _fused_candidate(
+    hw: HardwareModel, c_in: int, c_out: int, t: int, k: int, alpha: int,
+    r_floor: int,
+):
+    """(algo-feasibility, modeled cost) of one fused transform family.
+
+    Cost is time per output pixel up to the common C*C' factor:
+    flops/px divided by predicted utilisation at the best feasible R.
+    Returns None when infeasible (matrices overflow the shared level, or
+    no useful R fits the private-memory budget).
+    """
+    if t <= k:
+        return None
     if not fused_is_feasible(hw, c_in, c_out, t):
+        return None
+    r_hi = max_r(hw, c_in, c_out, t)
+    if r_hi < r_floor:
+        return None
+    r = min(r_hi, max(min_r(hw), r_floor))
+    t_out = t - k + 1
+    u = predicted_utilization(hw, r, c_in, c_out, t, t_out, alpha)
+    return flops_per_output_px(t, t_out, alpha) / max(u, 1e-9)
+
+
+def choose_algo(
+    hw: HardwareModel,
+    c_in: int,
+    c_out: int,
+    t: int,
+    *,
+    k: int = 3,
+    t_fft: int = 16,
+    consider_fft: bool = True,
+) -> Literal["l3_fused", "fft_fused", "three_stage"]:
+    """The "wisdom file" choice across all three transformed paths.
+
+    Winograd-fused and FFT-fused are feasible where their right-hand
+    matrices fit the shared level AND a useful R exists between the bounds;
+    among feasible fused paths the one with the lower modeled time per
+    output pixel (alpha=2 FLOP accounting for FFT) wins.  When no fused
+    path is feasible the vendor 3-stage structure is the fallback.
+    """
+    wino = _fused_candidate(hw, c_in, c_out, t, k, 1, max(8, min_r(hw) // 2))
+    fft = None
+    if consider_fft:
+        fft = _fused_candidate(
+            hw, c_in, c_out, t_fft, k, 2, max(4, min_r(hw) // 2)
+        )
+    if wino is None and fft is None:
         return "three_stage"
-    if max_r(hw, c_in, c_out, t) < max(8, min_r(hw) // 2):
-        return "three_stage"
-    return "l3_fused"
+    if fft is None or (wino is not None and wino <= fft):
+        return "l3_fused"
+    return "fft_fused"

@@ -7,6 +7,9 @@
     conv2d(x, w, pad=1, algo="fft_fused")     # FFT-basis fused variant
     conv2d(x, w, pad=1, algo="l3_fused_pallas")  # the Pallas TPU kernel
     conv2d(x, w, pad=1, algo="auto")          # paper's wisdom-file choice
+    conv2d(x, w, plan=layer_plan, wt=cached)  # convserve engine path: a
+                                              # planned layer with its
+                                              # pre-transformed kernels
 
 Layout: NHWC activations, HWIO kernels (TPU-native).  `conv1d` covers the
 depthwise-causal short convs of the SSM architectures.
@@ -14,7 +17,7 @@ depthwise-causal short convs of the SSM architectures.
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +26,9 @@ from repro.core import analysis
 from repro.core.fft_conv import conv2d_fft_fused
 from repro.core.fused import conv2d_l3_fused
 from repro.core.three_stage import conv2d_three_stage
+
+if TYPE_CHECKING:  # convserve imports core; keep the runtime edge one-way
+    from repro.convserve.plan import LayerPlan
 
 ALGOS = ("direct", "three_stage", "l3_fused", "fft_fused", "l3_fused_pallas", "auto")
 
@@ -44,24 +50,39 @@ def conv2d(
     pad: int = 0,
     algo: str = "auto",
     m: Optional[int] = None,
+    t_fft: int = 16,
     r_tiles: int = 24,
     hw: analysis.HardwareModel = analysis.TPU_V5E,
+    plan: "Optional[LayerPlan]" = None,
+    wt: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
-    """2-D convolution, NHWC x HWIO -> NHWC."""
+    """2-D convolution, NHWC x HWIO -> NHWC.
+
+    A `plan` (convserve.plan.LayerPlan) overrides algo/pad/tile/R with the
+    planner's per-layer decision; `wt` supplies pre-transformed right-hand
+    matrices (the inference-time kernel-cache path) for the transformed
+    algorithms and is ignored by `direct`.
+    """
+    if plan is not None:
+        algo, pad, r_tiles = plan.algo, plan.pad, plan.r_tiles
+        if plan.m is not None:
+            m = plan.m
+        if plan.t_fft is not None:
+            t_fft = plan.t_fft
     if algo not in ALGOS:
         raise ValueError(f"unknown algo {algo!r}, expected one of {ALGOS}")
     if algo == "auto":
         k = w.shape[0]
         t = (m if m is not None else 5) + k - 1
-        algo = analysis.choose_algo(hw, x.shape[3], w.shape[3], t)
+        algo = analysis.choose_algo(hw, x.shape[3], w.shape[3], t, k=k, t_fft=t_fft)
     if algo == "direct":
         return conv2d_direct(x, w, pad=pad)
     if algo == "three_stage":
-        return conv2d_three_stage(x, w, pad=pad, m=m)
+        return conv2d_three_stage(x, w, pad=pad, m=m, wt=wt)
     if algo == "l3_fused":
-        return conv2d_l3_fused(x, w, pad=pad, m=m, r_tiles=r_tiles)
+        return conv2d_l3_fused(x, w, pad=pad, m=m, r_tiles=r_tiles, wt=wt)
     if algo == "fft_fused":
-        return conv2d_fft_fused(x, w, pad=pad, r_tiles=r_tiles)
+        return conv2d_fft_fused(x, w, pad=pad, t=t_fft, r_tiles=r_tiles, wt=wt)
     if algo == "l3_fused_pallas":
         from repro.kernels.fused_winograd import ops as fw_ops
 

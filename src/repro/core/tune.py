@@ -1,11 +1,15 @@
 """The paper's "wisdom file" (S7): measured R tuning, cached on disk.
 
-    from repro.core.tune import tuned_r
+    from repro.core.tune import tuned_r, predict_r
     r = tuned_r(h=56, w=56, c_in=64, c_out=64)   # measures once, caches
+    r = predict_r(c_in=64, c_out=64)             # analytic only, no timing
 
 The analytical bounds (core.analysis) give the feasible range; within it we
 time the fused convolution at a few candidate R values and store the
-winner keyed by (layer geometry, tile size, backend).
+winner keyed by (layer geometry, tile size, backend).  `predict_r` is the
+non-measuring path used by the convserve planner when tuning is disabled:
+it picks the candidate that satisfies the R >= 2 CMR_fast lower bound while
+staying within the private-memory upper bound.
 """
 
 from __future__ import annotations
@@ -22,6 +26,7 @@ import numpy as np
 
 from repro.core import analysis
 from repro.core.fused import conv2d_l3_fused
+from repro.core.ioutil import atomic_write_text
 
 _DEFAULT_WISDOM = pathlib.Path.home() / ".cache" / "repro_wisdom.json"
 _CANDIDATES = (4, 8, 16, 24, 32, 48)
@@ -38,6 +43,49 @@ def _load(path: pathlib.Path) -> dict:
         return {}
 
 
+def default_hw() -> analysis.HardwareModel:
+    """Hardware model for the current backend (paper machines on CPU)."""
+    return (
+        analysis.TPU_V5E
+        if jax.default_backend() == "tpu"
+        else analysis.SKYLAKE_X
+    )
+
+
+def feasible_candidates(
+    c_in: int, c_out: int, *, k: int = 3, m: int = 5,
+    t: Optional[int] = None,
+    hw: Optional[analysis.HardwareModel] = None,
+    candidates: Sequence[int] = _CANDIDATES,
+) -> list:
+    """Candidates within the private-memory upper bound; never empty --
+    the smallest candidate survives even when the bound excludes all, so a
+    degenerate geometry still tunes rather than erroring.  `t` overrides
+    the Winograd tile size m + k - 1 (used for the FFT tile)."""
+    hw = hw or default_hw()
+    r_max = analysis.max_r(hw, c_in, c_out, t if t is not None else m + k - 1)
+    feas = [r for r in candidates if r <= r_max]
+    return feas or [min(candidates)]
+
+
+def predict_r(
+    c_in: int, c_out: int, *, k: int = 3, m: int = 5,
+    t: Optional[int] = None,
+    hw: Optional[analysis.HardwareModel] = None,
+    candidates: Sequence[int] = _CANDIDATES,
+) -> int:
+    """Analytic (non-measuring) R choice: the smallest feasible candidate
+    at or above the R >= 2 CMR_fast lower bound, else the largest feasible
+    one.  Used when tuning is disabled; `tuned_r` refines it by timing."""
+    hw = hw or default_hw()
+    feas = feasible_candidates(
+        c_in, c_out, k=k, m=m, t=t, hw=hw, candidates=candidates
+    )
+    target = analysis.min_r(hw)
+    at_or_above = [r for r in feas if r >= target]
+    return min(at_or_above) if at_or_above else max(feas)
+
+
 def measure_r(
     h: int, w: int, c_in: int, c_out: int, *, k: int = 3, m: int = 5,
     batch: int = 1, candidates: Sequence[int] = _CANDIDATES, reps: int = 3,
@@ -46,12 +94,8 @@ def measure_r(
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((batch, h, w, c_in)) * 0.1, jnp.float32)
     wk = jnp.asarray(rng.standard_normal((k, k, c_in, c_out)) * 0.1, jnp.float32)
-    hw = analysis.TPU_V5E if jax.default_backend() == "tpu" else analysis.SKYLAKE_X
-    r_max = analysis.max_r(hw, c_in, c_out, m + k - 1)
     best_r, best_t = None, float("inf")
-    for r in candidates:
-        if r > max(r_max, min(candidates)):
-            continue
+    for r in feasible_candidates(c_in, c_out, k=k, m=m, candidates=candidates):
         fn = jax.jit(
             functools.partial(conv2d_l3_fused, pad=1, m=m, r_tiles=r)
         )
@@ -78,7 +122,7 @@ def tuned_r(
     if key in wisdom:
         return int(wisdom[key])
     r = measure_r(h, w, c_in, c_out, k=k, m=m)
+    wisdom = _load(path)  # re-read: another tuner may have written meanwhile
     wisdom[key] = int(r)
-    path.parent.mkdir(parents=True, exist_ok=True)
-    path.write_text(json.dumps(wisdom, indent=1, sort_keys=True))
+    atomic_write_text(path, json.dumps(wisdom, indent=1, sort_keys=True))
     return r

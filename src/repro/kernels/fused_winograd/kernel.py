@@ -116,14 +116,27 @@ def fused_winograd_call(
         _kernel_body, m=m, k=k, c_in=c_in, c_out=c_out, r=r
     )
     strip_w = r * m + k - 1
+    # The input strip is element-indexed (offset stride T' < extent T, the
+    # overlap-add overlap).  Newer jax spells this per-dim via pl.Element;
+    # older releases only offer whole-spec unblocked indexing -- equivalent
+    # here because the blocked dims are size-1 (batch) or zero-offset
+    # (channels), so the same element-offset index map serves both.
+    if hasattr(pl, "Element"):
+        strip_spec = pl.BlockSpec(
+            (1, pl.Element(t), pl.Element(strip_w), c_in),
+            lambda bi, i, j: (bi, i * m, j * (r * m), 0),
+        )
+    else:
+        strip_spec = pl.BlockSpec(
+            (1, t, strip_w, c_in),
+            lambda bi, i, j: (bi, i * m, j * (r * m), 0),
+            indexing_mode=pl.unblocked,
+        )
     return pl.pallas_call(
         body,
         grid=(b, n_tiles_h, n_col_blocks),
         in_specs=[
-            pl.BlockSpec(
-                (1, pl.Element(t), pl.Element(strip_w), c_in),
-                lambda bi, i, j: (bi, i * m, j * (r * m), 0),
-            ),
+            strip_spec,
             # constant index map == VMEM-stationary right-hand matrices
             pl.BlockSpec((t2, c_in, c_out), lambda bi, i, j: (0, 0, 0)),
             pl.BlockSpec((t, t), lambda bi, i, j: (0, 0)),

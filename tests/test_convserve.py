@@ -1,0 +1,426 @@
+"""convserve engine: planner decisions, kernel cache, plan round-trip,
+numerical agreement with the direct oracle, and the serving front-end."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.convnets import tiny_testnet, vgg_style
+from repro.convserve import (
+    ConvServeConfig,
+    ConvServer,
+    ImageRequest,
+    KernelCache,
+    NetExecutor,
+    NetPlan,
+    NetSpec,
+    conv,
+    init_weights,
+    maxpool,
+    plan_layer,
+    plan_net,
+    relu,
+    run_direct,
+)
+from repro.core import analysis
+
+# Synthetic machines that force each decision regardless of host backend:
+# BIG's shared level swallows any kernel matrices (fused paths feasible);
+# TINY's 2 KB shared level rejects them all (three_stage everywhere).
+BIG_HW = analysis.HardwareModel(
+    name="big", peak_flops=1e12, dram_bw=1e11, fast_shared_bw=5e11,
+    fast_shared_bytes=1 << 30, private_bytes=1 << 24,
+)
+TINY_HW = analysis.HardwareModel(
+    name="tiny", peak_flops=1e12, dram_bw=1e11, fast_shared_bw=5e11,
+    fast_shared_bytes=2048, private_bytes=4096,
+)
+
+
+# ---------------------------------------------------------------- planner
+
+
+def test_planner_three_stage_when_kernels_overflow_shared_level():
+    spec = tiny_testnet(4)
+    plan = plan_net(spec, 16, 16, hw=TINY_HW)
+    assert plan.algos() == ("three_stage",) * 4
+    # sanity: the same net on a huge shared level plans fused
+    plan_big = plan_net(spec, 16, 16, hw=BIG_HW, consider_fft=False)
+    assert plan_big.algos() == ("l3_fused",) * 4
+
+
+def test_planner_fused_r_within_bounds():
+    plan = plan_net(tiny_testnet(4), 16, 16, hw=BIG_HW, consider_fft=False)
+    for p in plan.layers:
+        assert p.algo == "l3_fused"
+        assert 1 <= p.r_tiles <= analysis.max_r(BIG_HW, p.c_in, p.c_out, p.t)
+        assert 0.0 < p.predicted_util <= 1.0
+
+
+def test_planner_direct_for_degenerate_spatial():
+    spec = NetSpec("dot", (conv(4, 8, k=3, pad=0),))
+    plan = plan_net(spec, 4, 4, hw=BIG_HW)  # 4x4 input < 7x7 tile
+    assert plan.algos() == ("direct",)
+
+
+def test_planner_mixed_algorithms_across_channel_widths():
+    """The paper's crossover: few-channel layers fuse, many-channel layers
+    overflow the shared level and fall back to the vendor structure."""
+    spec = vgg_style("mix", 3, widths=(64, 256), convs_per_stage=2)
+    plan = plan_net(spec, 32, 32, hw=analysis.SKYLAKE_X)
+    assert len(set(plan.algos())) >= 2
+    assert plan.layer_plan(spec.conv_layers()[0][0]).algo == "l3_fused"
+    assert plan.layer_plan(spec.conv_layers()[-1][0]).algo == "three_stage"
+
+
+def test_choose_algo_considers_fft():
+    # K=5 shrinks the Winograd output tile (T'=4 at T=8) while FFT at T=16
+    # keeps T'=12: FFT wins on the i7 model despite alpha=2 FLOPs.
+    assert (
+        analysis.choose_algo(analysis.MOBILE_I7, 16, 16, 8, k=5) == "fft_fused"
+    )
+    # existing Winograd-vs-3-stage crossover is unchanged by the extension
+    assert analysis.choose_algo(analysis.SKYLAKE_X, 64, 64, 8) == "l3_fused"
+    assert (
+        analysis.choose_algo(analysis.SKYLAKE_X, 1024, 1024, 8)
+        == "three_stage"
+    )
+
+
+# ------------------------------------------------------------ plan format
+
+
+def test_netplan_json_roundtrip(tmp_path):
+    plan = plan_net(tiny_testnet(4), 16, 16, hw=BIG_HW)
+    again = NetPlan.from_json(plan.to_json())
+    assert again == plan
+    path = tmp_path / "plans" / "tiny.json"
+    plan.save(path)
+    assert NetPlan.load(path) == plan
+    # the on-disk form is plain JSON with per-layer records
+    raw = json.loads(path.read_text())
+    assert raw["net"] == "tiny-testnet"
+    assert len(raw["layers"]) == 4
+
+
+def test_netplan_rejects_unknown_algo():
+    plan = plan_net(tiny_testnet(4), 16, 16, hw=BIG_HW)
+    d = json.loads(plan.to_json())
+    d["layers"][0]["algo"] = "warp_drive"
+    with pytest.raises(ValueError):
+        NetPlan.from_json(json.dumps(d))
+
+
+# ----------------------------------------------------------- kernel cache
+
+
+def test_kernel_cache_hit_miss_accounting():
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=1)
+    plan = plan_net(spec, 16, 16, hw=BIG_HW, consider_fft=False)
+    cache = KernelCache()
+    for i, _ in spec.conv_layers():
+        cache.get(plan.net, plan.layer_plan(i), ws[i])
+    assert cache.stats()["misses"] == 4 and cache.stats()["hits"] == 0
+    for i, _ in spec.conv_layers():
+        cache.get(plan.net, plan.layer_plan(i), ws[i])
+    assert cache.stats()["misses"] == 4 and cache.stats()["hits"] == 4
+    assert cache.stats()["entries"] == 4
+    cache.invalidate(plan.net)
+    assert cache.stats()["entries"] == 0
+
+
+def test_shared_cache_isolates_executors_with_different_weights():
+    """Two executors serving the same net from one cache but with
+    different parameters must not serve each other's transforms."""
+    spec = tiny_testnet(4)
+    plan = plan_net(spec, 16, 16, hw=BIG_HW)
+    cache = KernelCache()
+    ws1 = init_weights(spec, seed=1)
+    ws2 = init_weights(spec, seed=2)
+    ex1 = NetExecutor(spec, ws1, plan, cache=cache)
+    ex2 = NetExecutor(spec, ws2, plan, cache=cache)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 16, 16, 4)) * 0.1, jnp.float32)
+    ex1(x)
+    y2 = ex2(x)
+    ref2 = run_direct(spec, ws2, x)
+    rel = float(jnp.abs(y2 - ref2).max() / jnp.abs(ref2).max())
+    assert rel < 1e-3, rel  # would be ~1.4 if ex2 hit ex1's entries
+    # distinct weights -> distinct entries; identical weights -> shared
+    assert cache.stats()["entries"] == 8
+    ex3 = NetExecutor(spec, init_weights(spec, seed=1), plan, cache=cache)
+    ex3(x)
+    assert cache.stats()["entries"] == 8  # ex3 reused ex1's transforms
+
+
+def test_planner_skips_fft_below_tile_size():
+    """FFT's T=16 tile must not be planned for layers whose padded input
+    cannot fill it (the cost model assumes full output tiles)."""
+    p = plan_layer(BIG_HW, 0, 8, 8, 16, 16, 3, 1)  # 10x10 padded < 16
+    assert p.algo != "fft_fused"
+    p = plan_layer(BIG_HW, 0, 16, 16, 16, 16, 3, 1)  # 18x18 covers a tile
+    assert p.algo == "fft_fused"
+
+
+def test_kernel_cache_distinguishes_layers_with_same_geometry():
+    """Layers 2 and 4 of the testnet share (c_in, c_out, k) but hold
+    different weights: the cache must keep separate entries."""
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=1)
+    plan = plan_net(spec, 16, 16, hw=BIG_HW, consider_fft=False)
+    cache = KernelCache()
+    convs = spec.conv_layers()
+    same_geom = [
+        (i, l) for i, l in convs if (l.c_in, l.c_out) == (8, 8)
+    ] or convs[:2]
+    (i1, _), (i2, _) = same_geom[0], convs[-1]
+    wt1 = cache.get(plan.net, plan.layer_plan(i1), ws[i1])
+    wt2 = cache.get(plan.net, plan.layer_plan(i2), ws[i2])
+    assert cache.stats()["misses"] == 2
+    assert wt1 is not wt2
+
+
+# -------------------------------------------------------------- executor
+
+
+@pytest.mark.parametrize(
+    "hw,kwargs",
+    [
+        (BIG_HW, {"consider_fft": False}),  # all l3_fused
+        (BIG_HW, {}),  # fft_fused wins on this model
+        (TINY_HW, {}),  # all three_stage
+    ],
+)
+def test_planned_net_matches_direct(hw, kwargs):
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=3)
+    plan = plan_net(spec, 16, 16, hw=hw, **kwargs)
+    ex = NetExecutor(spec, ws, plan)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 16, 16, 4)) * 0.1, jnp.float32)
+    y = ex(x)
+    ref = run_direct(spec, ws, x)
+    assert y.shape == ref.shape
+    rel = float(jnp.abs(y - ref).max() / jnp.abs(ref).max())
+    assert rel < 1e-3, (plan.algos(), rel)
+
+
+def test_executor_reuses_cache_across_buckets():
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=3)
+    plan = plan_net(spec, 16, 16, hw=BIG_HW)
+    ex = NetExecutor(spec, ws, plan)
+    rng = np.random.default_rng(0)
+    ex(jnp.asarray(rng.standard_normal((1, 16, 16, 4)), jnp.float32))
+    assert ex.cache.stats() == dict(
+        hits=0, misses=4, entries=4, bytes=ex.cache.nbytes
+    )
+    # second request, same bucket: pure hits, no recompile
+    ex(jnp.asarray(rng.standard_normal((1, 16, 16, 4)), jnp.float32))
+    assert ex.cache.stats()["hits"] == 4
+    assert ex.compile_count == 1
+    # new bucket: recompiles the program but the transforms still hit
+    ex(jnp.asarray(rng.standard_normal((1, 32, 32, 4)), jnp.float32))
+    assert ex.cache.stats()["hits"] == 8
+    assert ex.cache.stats()["misses"] == 4
+    assert ex.compile_count == 2
+
+
+def test_executor_validates_weights_and_input():
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=0)
+    plan = plan_net(spec, 16, 16, hw=BIG_HW)
+    missing = dict(ws)
+    missing.pop(spec.conv_layers()[0][0])
+    with pytest.raises(ValueError):
+        NetExecutor(spec, missing, plan)
+    ex = NetExecutor(spec, ws, plan)
+    with pytest.raises(ValueError):
+        ex(jnp.zeros((16, 16, 4)))  # not NHWC
+
+
+def test_executor_rejects_stale_or_incomplete_plan():
+    import dataclasses
+
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=0)
+    plan = plan_net(spec, 16, 16, hw=BIG_HW)
+    # plan missing a conv layer fails at init, not at request time
+    truncated = dataclasses.replace(plan, layers=plan.layers[:-1])
+    with pytest.raises(ValueError, match="plan missing conv layer"):
+        NetExecutor(spec, ws, truncated)
+    # plan whose geometry disagrees with the spec (stale plan file)
+    bad_layer = dataclasses.replace(plan.layers[0], c_out=32)
+    stale = dataclasses.replace(
+        plan, layers=(bad_layer,) + plan.layers[1:]
+    )
+    with pytest.raises(ValueError, match="geometry"):
+        NetExecutor(spec, ws, stale)
+    # plan for a different net
+    other = dataclasses.replace(plan, net="other-net")
+    with pytest.raises(ValueError, match="plan is for net"):
+        NetExecutor(spec, ws, other)
+
+
+def test_executor_masked_ragged_batch_matches_per_image_runs():
+    """Images smaller than the bucket must serve exactly: the extent mask
+    stops conv outputs in the padded margin from bleeding back across the
+    true-image edge (without it, a 48x48 image in a 64 bucket is ~0.24
+    relative error at the edges)."""
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=7)
+    plan = plan_net(spec, 64, 64, hw=BIG_HW)
+    ex = NetExecutor(spec, ws, plan)
+    rng = np.random.default_rng(4)
+    small = jnp.asarray(rng.standard_normal((48, 48, 4)) * 0.1, jnp.float32)
+    full = jnp.asarray(rng.standard_normal((64, 64, 4)) * 0.1, jnp.float32)
+    batch = jnp.zeros((2, 64, 64, 4), jnp.float32)
+    batch = batch.at[0, :48, :48].set(small).at[1].set(full)
+    y = ex(batch, sizes=jnp.asarray([[48, 48], [64, 64]], jnp.int32))
+    ref_small = run_direct(spec, ws, small[None])[0]
+    ref_full = run_direct(spec, ws, full[None])[0]
+    oh, ow, _ = ref_small.shape
+    rel_small = float(
+        jnp.abs(y[0, :oh, :ow] - ref_small).max() / jnp.abs(ref_small).max()
+    )
+    rel_full = float(jnp.abs(y[1] - ref_full).max() / jnp.abs(ref_full).max())
+    assert rel_small < 1e-3, rel_small
+    assert rel_full < 1e-3, rel_full
+
+
+# ---------------------------------------------------------------- serving
+
+
+def test_server_buckets_pads_and_crops():
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=5)
+    plan = plan_net(spec, 16, 16, hw=BIG_HW)
+    srv = ConvServer(
+        NetExecutor(spec, ws, plan),
+        ConvServeConfig(max_batch=4, buckets=(16, 32)),
+    )
+    rng = np.random.default_rng(1)
+    imgs = {
+        0: rng.standard_normal((16, 16, 4)).astype(np.float32),
+        1: rng.standard_normal((32, 32, 4)).astype(np.float32),
+        2: rng.standard_normal((16, 16, 4)).astype(np.float32),
+        3: rng.standard_normal((24, 24, 4)).astype(np.float32),  # ragged:
+        # rides zero-padded in the 32 bucket, exercising the extent mask
+    }
+    out = srv.run([ImageRequest(rid, im) for rid, im in imgs.items()])
+    assert set(out) == {0, 1, 2, 3}
+    assert out[0].shape == (4, 4, 16)  # 16 -> /2 -> /2 through two pools
+    assert out[1].shape == (8, 8, 16)
+    assert out[3].shape == (6, 6, 16)
+    # each output equals the net run on that image alone
+    for rid, im in imgs.items():
+        ref = run_direct(spec, ws, jnp.asarray(im)[None])[0]
+        rel = float(jnp.abs(out[rid] - ref).max() / jnp.abs(ref).max())
+        assert rel < 1e-3, (rid, rel)
+
+
+def test_server_second_request_hits_kernel_cache():
+    """Acceptance criterion: repeated shapes reuse cached transforms."""
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=5)
+    plan = plan_net(spec, 16, 16, hw=BIG_HW)
+    srv = ConvServer(
+        NetExecutor(spec, ws, plan),
+        ConvServeConfig(max_batch=2, buckets=(16,)),
+    )
+    rng = np.random.default_rng(2)
+    img = rng.standard_normal((16, 16, 4)).astype(np.float32)
+    srv.run([ImageRequest(0, img)])
+    first = srv.stats()
+    assert first["misses"] == 4 and first["hits"] == 0
+    srv.run([ImageRequest(1, img)])
+    second = srv.stats()
+    assert second["misses"] == 4  # nothing re-transformed
+    assert second["hits"] == 4
+    assert second["compiled_buckets"] == 1  # same bucket, no recompile
+
+
+def test_server_bounded_compilation_across_traffic():
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=5)
+    plan = plan_net(spec, 16, 16, hw=BIG_HW)
+    ex = NetExecutor(spec, ws, plan)
+    srv = ConvServer(ex, ConvServeConfig(max_batch=4, buckets=(16, 32)))
+    rng = np.random.default_rng(3)
+    reqs = []
+    for rid in range(11):  # ragged sizes within two buckets
+        side = [12, 16, 20, 28, 32][rid % 5]
+        reqs.append(
+            ImageRequest(
+                rid, rng.standard_normal((side, side, 4)).astype(np.float32)
+            )
+        )
+    out = srv.run(reqs)
+    assert len(out) == 11
+    # 2 buckets x at most 3 power-of-two wave sizes (1, 2, 4)
+    assert ex.compile_count <= 6
+
+
+def test_server_rejects_oversized_and_misaligned_buckets():
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=0)
+    plan = plan_net(spec, 16, 16, hw=BIG_HW)
+    ex = NetExecutor(spec, ws, plan)
+    with pytest.raises(ValueError):
+        ConvServer(ex, ConvServeConfig(buckets=(18,)))  # pool factor 4
+    srv = ConvServer(ex, ConvServeConfig(buckets=(16,)))
+    big = ImageRequest(0, np.zeros((64, 64, 4), np.float32))
+    with pytest.raises(ValueError):
+        srv.run([big])
+
+
+# ------------------------------------------------- tune.py satellite fixes
+
+
+def test_predict_r_within_bounds():
+    from repro.core.tune import _CANDIDATES, predict_r
+
+    for hw in (analysis.SKYLAKE_X, analysis.MOBILE_I7, BIG_HW):
+        for c in (16, 64, 256, 1024):
+            r = predict_r(c, c, hw=hw)
+            assert r in _CANDIDATES
+            r_max = analysis.max_r(hw, c, c, 7)
+            # never above the private-memory bound unless nothing fits
+            assert r <= r_max or r == min(_CANDIDATES)
+
+
+def test_feasible_candidates_respects_r_max():
+    """Seed bug: candidates above r_max were admitted whenever
+    r_max < min(candidates)."""
+    from repro.core.tune import feasible_candidates
+
+    feas = feasible_candidates(
+        1024, 1024, hw=analysis.MOBILE_I7, candidates=(4, 8, 16)
+    )
+    assert feas == [4]  # r_max ~ 0: only the floor survives
+    feas = feasible_candidates(
+        16, 16, hw=analysis.SKYLAKE_X, candidates=(4, 8, 16, 1024)
+    )
+    assert 1024 not in feas
+
+
+def test_wisdom_write_is_atomic(tmp_path, monkeypatch):
+    from repro.core import tune
+
+    calls = {"n": 0}
+    monkeypatch.setattr(tune, "measure_r", lambda *a, **k: 16)
+    path = tmp_path / "wisdom.json"
+    r = tune.tuned_r(8, 8, 4, 4, wisdom_path=path)
+    assert r == 16
+    assert json.loads(path.read_text())  # valid JSON, no .tmp leftovers
+    assert list(tmp_path.iterdir()) == [path]
+    # cached: no re-measure
+    monkeypatch.setattr(
+        tune, "measure_r", lambda *a, **k: calls.__setitem__("n", 1)
+    )
+    assert tune.tuned_r(8, 8, 4, 4, wisdom_path=path) == 16
+    assert calls["n"] == 0

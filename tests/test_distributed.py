@@ -16,7 +16,10 @@ def _run(code: str) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(_ROOT, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # pin the child to CPU: auto-detection on TPU-toolchain images hangs
+    # retrying the metadata service; the forced host-platform count still
+    # provides the 8 fake devices these tests need
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True, text=True, env=env, timeout=300,
@@ -90,6 +93,6 @@ def test_mesh_construction_subprocess():
         import jax
         from repro.launch.mesh import make_host_mesh
         m = make_host_mesh(model=2)
-        print(m.shape)
+        print(dict(m.shape))  # plain dict: stable repr across jax versions
     """)
     assert "'data': 4" in out.replace('"', "'") and "'model': 2" in out.replace('"', "'")

@@ -3,7 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.kernels.conv1d_fused import conv1d_fused, conv1d_ref
 from repro.kernels.decode_mlp import decode_mlp, decode_mlp_ref
@@ -101,6 +101,30 @@ def test_decode_mlp_property(b, d, f, rb, fb):
     w3 = jnp.asarray(rng.standard_normal((d, f)) * 0.2, jnp.float32)
     w2 = jnp.asarray(rng.standard_normal((f, d)) * 0.2, jnp.float32)
     y = decode_mlp(x, w1, w3, w2, rb=rb, fb=fb)
+    ref = decode_mlp_ref(x, w1, w3, w2)
+    assert y.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+def test_conv1d_fused_smoke():
+    """Example-based coverage so the kernel is exercised without hypothesis."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((2, 48, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+    bias = jnp.asarray(rng.standard_normal((8,)), jnp.float32)
+    y = conv1d_fused(x, w, bias, lb=16)
+    ref = conv1d_ref(x, w, bias)
+    assert y.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+def test_decode_mlp_smoke():
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(rng.standard_normal((4, 16)), jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((16, 32)) * 0.2, jnp.float32)
+    w3 = jnp.asarray(rng.standard_normal((16, 32)) * 0.2, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((32, 16)) * 0.2, jnp.float32)
+    y = decode_mlp(x, w1, w3, w2, rb=4, fb=16)
     ref = decode_mlp_ref(x, w1, w3, w2)
     assert y.shape == ref.shape
     np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4, atol=1e-5)

@@ -1,7 +1,7 @@
 """Shared-buffer planner: the paper's S4.2 aliasing invariant + savings."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core.sharedbuf import SharedBufferPlan, max_r_for_budget
 
