@@ -1,12 +1,18 @@
-"""convserve engine benchmark: planned net vs all-direct, cold vs warm.
+"""convserve engine benchmark: planned nets vs all-direct, cold vs warm.
 
-Rows:
-  convserve/plan  -- plan_net wall time (pure roofline model, no measuring)
-  convserve/cold  -- first wave: jit compile + kernel transforms
-  convserve/warm  -- steady-state per-image serving time, cache hot
-  convserve/direct-- the same net all-direct (vendor baseline)
+Per net (the mixed-channel VGG and the stride-2 ResNet-style
+downsampling net), rows:
+
+  convserve/<net>/plan  -- plan_net wall time (pure roofline model)
+  convserve/<net>/cold  -- first wave: jit compile + kernel transforms
+  convserve/<net>/warm  -- steady-state per-image serving time, cache hot
+  convserve/<net>/direct-- the same net all-direct (vendor baseline)
 
     PYTHONPATH=src python -m benchmarks.convserve_bench
+
+`smoke=True` (the CI path, `benchmarks.run --smoke`) runs the tiny test
+net at a tiny geometry: it exists to catch dispatcher regressions that
+only bite at execution time, not to produce meaningful numbers.
 """
 
 from __future__ import annotations
@@ -18,34 +24,38 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, time_fn
-from repro.configs.convnets import vgg_mixed_channel
+from repro.configs.convnets import (
+    resnet_downsample,
+    tiny_testnet,
+    vgg_mixed_channel,
+)
 from repro.convserve import NetExecutor, init_weights, plan_net, run_direct
 from repro.core import analysis
 
 
-def main(batch: int = 2, side: int = 64) -> None:
-    spec = vgg_mixed_channel(c_in=3)
+def bench_net(spec, batch: int, side: int, c_in: int) -> None:
     ws = init_weights(spec, seed=0)
     rng = np.random.default_rng(0)
     x = jnp.asarray(
-        rng.standard_normal((batch, side, side, 3)) * 0.1, jnp.float32
+        rng.standard_normal((batch, side, side, c_in)) * 0.1, jnp.float32
     )
 
     t0 = time.perf_counter()
     plan = plan_net(spec, side, side, hw=analysis.SKYLAKE_X)
     t_plan = time.perf_counter() - t0
-    print(row("convserve/plan", t_plan * 1e6, ";".join(plan.algos())))
+    print(row(f"convserve/{spec.name}/plan", t_plan * 1e6,
+              ";".join(plan.algos())))
 
     ex = NetExecutor(spec, ws, plan)
     t0 = time.perf_counter()
     jax.block_until_ready(ex(x))
     t_cold = time.perf_counter() - t0
-    print(row("convserve/cold", t_cold * 1e6, f"batch{batch}"))
+    print(row(f"convserve/{spec.name}/cold", t_cold * 1e6, f"batch{batch}"))
 
     t_warm = time_fn(ex, x)
     print(
         row(
-            "convserve/warm", t_warm * 1e6,
+            f"convserve/{spec.name}/warm", t_warm * 1e6,
             f"{t_warm * 1e3 / batch:.1f}ms/img;"
             f"hits{ex.cache.stats()['hits']}",
         )
@@ -55,10 +65,18 @@ def main(batch: int = 2, side: int = 64) -> None:
     t_dir = time_fn(vendor, x)
     print(
         row(
-            "convserve/direct", t_dir * 1e6,
+            f"convserve/{spec.name}/direct", t_dir * 1e6,
             f"{t_dir * 1e3 / batch:.1f}ms/img",
         )
     )
+
+
+def main(batch: int = 2, side: int = 64, smoke: bool = False) -> None:
+    if smoke:  # CI: tiny geometry, dispatcher correctness under time
+        bench_net(tiny_testnet(4), batch=1, side=16, c_in=4)
+        return
+    bench_net(vgg_mixed_channel(c_in=3), batch, side, c_in=3)
+    bench_net(resnet_downsample(c_in=3), batch, side, c_in=3)
 
 
 if __name__ == "__main__":

@@ -15,11 +15,19 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="smaller batches")
     ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny-geometry CI smoke: catches dispatcher regressions that "
+        "only bite at execution time (implies --only convserve unless "
+        "--only is given)",
+    )
+    ap.add_argument(
         "--only", default=None,
         help="comma list: fig2,fig3,analysis,r_sweep,lm,roofline,convserve",
     )
     args = ap.parse_args()
-    batch = 1 if args.quick else 2
+    batch = 1 if (args.quick or args.smoke) else 2
+    if args.smoke and args.only is None:
+        args.only = "convserve"
     only = set(args.only.split(",")) if args.only else None
 
     def want(name):
@@ -56,7 +64,11 @@ def main() -> None:
         from benchmarks import convserve_bench
 
         sections.append(
-            ("convserve engine (planned net)", convserve_bench.main, (batch,))
+            (
+                "convserve engine (planned nets)",
+                convserve_bench.main,
+                (batch, 64, args.smoke),
+            )
         )
 
     failures = 0

@@ -35,11 +35,11 @@ def main():
 
     print(f"net {spec.name!r} planned for {hw.name}:")
     for p in plan.layers:
-        tile = f"T={p.t}" if p.t else ""
+        s = p.spec
+        stride = f"/{s.stride}" if s.stride > 1 else "  "
         print(
-            f"  layer {p.layer:2d}  {p.c_in:4d}->{p.c_out:<4d} "
-            f"{p.algo:12s} {tile:5s} R={p.r_tiles:<3d} "
-            f"util~{p.predicted_util:.2f}"
+            f"  layer {p.layer:2d}  {s.c_in:4d}->{s.c_out:<4d}{stride} "
+            f"{p.algo:12s} params={p.params} util~{p.predicted_util:.2f}"
         )
     algos = set(plan.algos())
     print(f"distinct algorithms in plan: {sorted(algos)}")
@@ -91,6 +91,29 @@ def main():
             jax.block_until_ready(fn(x))
             ts.append(time.perf_counter() - t0)
         print(f"{name:15s} {sorted(ts)[len(ts) // 2] * 1e3 / 4:8.1f} ms/img")
+
+    # the registry makes new scenarios one plan away: a stride-2
+    # ResNet-style downsampling net plans transformed paths too (tile
+    # decimation), with grouped layers falling back per capability
+    from repro.configs.convnets import resnet_downsample
+
+    rspec = resnet_downsample(c_in=3)
+    rplan = plan_net(rspec, 64, 64, hw=hw)
+    print(f"\nnet {rspec.name!r}:")
+    for p in rplan.layers:
+        s = p.spec
+        stride = f"/{s.stride}" if s.stride > 1 else "  "
+        print(
+            f"  layer {p.layer:2d}  {s.c_in:4d}->{s.c_out:<4d}{stride} "
+            f"{p.algo:12s} params={p.params}"
+        )
+    rws = init_weights(rspec, seed=1)
+    rex = NetExecutor(rspec, rws, rplan)
+    xr = jnp.asarray(rng.standard_normal((2, 64, 64, 3)) * 0.1, jnp.float32)
+    rref = run_direct(rspec, rws, xr)
+    rel = float(jnp.abs(rex(xr) - rref).max() / jnp.abs(rref).max())
+    print(f"stride-2 net planned-engine vs direct rel err {rel:.2e}")
+    assert rel < 1e-3
 
 
 if __name__ == "__main__":

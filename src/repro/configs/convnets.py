@@ -45,3 +45,34 @@ def vgg_mixed_channel(c_in: int = 3) -> NetSpec:
 def tiny_testnet(c_in: int = 4) -> NetSpec:
     """Small 4-conv net for tests: two stages, channel step 8 -> 16."""
     return vgg_style("tiny-testnet", c_in, widths=(8, 16))
+
+
+def resnet_downsample(c_in: int = 3) -> NetSpec:
+    """ResNet-style stem: stride-2 convs downsample instead of pooling.
+
+    The new-scenario net for the registry API: its stride-2 layers reach
+    the transformed paths through tile-decimation (the planner charges the
+    stride^2 decimation waste in the cost model), and on the paper's CPU
+    models the 64/128-channel stages still plan fused.
+    """
+    layers = (
+        conv(c_in, 64), relu(),
+        conv(64, 64), relu(),
+        conv(64, 128, stride=2), relu(),  # /2 downsample
+        conv(128, 128), relu(),
+        conv(128, 256, stride=2), relu(),  # /4 total
+        conv(256, 256), relu(),
+    )
+    return NetSpec(name="resnet-downsample", layers=layers)
+
+
+def resnext_grouped(c_in: int = 4, groups: int = 4) -> NetSpec:
+    """Grouped-conv (ResNeXt-style) net: exercises the registry's
+    capability-based fallback -- grouped layers plan `direct` until a
+    transformed algorithm registers grouped support."""
+    layers = (
+        conv(c_in, 32), relu(),
+        conv(32, 32, groups=groups), relu(),
+        conv(32, 64, stride=2, groups=groups), relu(),
+    )
+    return NetSpec(name="resnext-grouped", layers=layers)

@@ -4,6 +4,7 @@ Pipeline:  NetSpec --plan_net--> NetPlan --NetExecutor(+KernelCache)-->
 one jitted program per input bucket --ConvServer--> batched serving.
 """
 
+from repro.core.registry import ConvSpec
 from repro.convserve.cache import KernelCache
 from repro.convserve.executor import NetExecutor
 from repro.convserve.graph import (
@@ -20,6 +21,7 @@ from repro.convserve.planner import plan_layer, plan_net
 from repro.convserve.serving import ConvServeConfig, ConvServer, ImageRequest
 
 __all__ = [
+    "ConvSpec",
     "LayerSpec",
     "NetSpec",
     "conv",

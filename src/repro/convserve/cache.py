@@ -1,14 +1,19 @@
 """Pre-transformed kernel cache (the paper's footnote-1 inference path).
 
 Transformed convolutions never touch raw HWIO kernels at serving time:
-the right-hand matrices G W G^T (Winograd) or conj(rfft2(W)) (FFT) are
-computed once and reused by every request.  The cache memoizes them per
-(net, layer, algo, tile, dtype, geometry) so that
+the right-hand matrices are computed once by the owning algorithm's
+`prepare_weights` and reused by every request.  The cache is fully
+algorithm-agnostic -- it asks the registry which algorithms consume
+pre-transformed kernels and which params shape the transform
+(`Algorithm.prepare_key`), so a newly registered algorithm is cached
+correctly with zero changes here.  Entries are memoized per
+(net, layer, algo, geometry, weight-params, dtype, weight-fingerprint)
+so that
 
   * repeated requests -- and different shape buckets of the same net --
     hit the cache (the key excludes the activation spatial dims), and
   * two layers that happen to share a geometry but hold different weights
-    never collide (the layer index is part of the key).
+    never collide (the layer index and weight hash are part of the key).
 
 Hit/miss counters make the reuse observable; `stats()` feeds benchmarks
 and the serving front-end's metrics.
@@ -22,11 +27,8 @@ from typing import Dict, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fft_conv import transform_kernels_fft
-from repro.core.three_stage import transform_kernels
+from repro.core import registry
 from repro.convserve.plan import LayerPlan
-
-_WINO_FAMILY = ("three_stage", "l3_fused", "l3_fused_pallas")
 
 
 def weights_fingerprint(w) -> str:
@@ -50,9 +52,12 @@ class KernelCache:
 
     @staticmethod
     def key(net: str, plan: LayerPlan, dtype, w_fp: str) -> Tuple:
+        alg = registry.get(plan.algo)
+        s = plan.spec
         return (
-            net, plan.layer, plan.algo, plan.k,
-            plan.c_in, plan.c_out, plan.m, plan.t_fft,
+            net, plan.layer, plan.algo,
+            s.k, s.c_in, s.c_out, s.groups,
+            alg.prepare_key(plan.params),
             jnp.dtype(dtype).name, w_fp,
         )
 
@@ -68,10 +73,12 @@ class KernelCache:
 
         `w_fp` is the weight fingerprint; pass a precomputed one (the
         executor hashes each layer once at init) to avoid re-hashing per
-        request.  Returns None for algorithms with no pre-transform
-        (direct conv); those are not counted as hits or misses.
+        request.  Returns None for algorithms with no consumable
+        pre-transform (direct conv, the Pallas kernel); those are not
+        counted as hits or misses.
         """
-        if plan.algo == "direct":
+        alg = registry.get(plan.algo)
+        if not alg.consumes_wt:
             return None
         key = self.key(net, plan, dtype, w_fp or weights_fingerprint(w))
         cached = self._store.get(key)
@@ -79,21 +86,9 @@ class KernelCache:
             self.hits += 1
             return cached
         self.misses += 1
-        wt = self._transform(plan, jnp.asarray(w, dtype))
+        wt = alg.prepare_weights(jnp.asarray(w, dtype), plan.algo_plan())
         self._store[key] = wt
         return wt
-
-    @staticmethod
-    def _transform(plan: LayerPlan, w: jnp.ndarray) -> jnp.ndarray:
-        if plan.algo in _WINO_FAMILY:
-            if plan.m is None:
-                raise ValueError(f"layer {plan.layer}: wino plan without m")
-            return transform_kernels(w, plan.m)
-        if plan.algo == "fft_fused":
-            if plan.t_fft is None:
-                raise ValueError(f"layer {plan.layer}: fft plan without t_fft")
-            return transform_kernels_fft(w, plan.t_fft)
-        raise ValueError(f"no kernel transform for algo {plan.algo!r}")
 
     def invalidate(self, net: Optional[str] = None) -> None:
         """Drop entries (all, or one net's) -- call after a weight update."""

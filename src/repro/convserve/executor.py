@@ -6,7 +6,9 @@ bucket is a single dispatch.  Pre-transformed kernels come from the
 `KernelCache` and enter the program as arguments (not constants): a new
 bucket shape recompiles the program but reuses the cached transforms,
 and the cache counters are visible per-request because the fetch happens
-outside the jit boundary.
+outside the jit boundary.  The executor never names an algorithm: which
+layers have cacheable transforms, and how each conv runs, is decided by
+the registry through the layer's plan.
 
 Ragged batches: images smaller than their bucket ride in zero-padded.
 Zero padding alone is NOT enough for correctness -- the first conv writes
@@ -31,10 +33,6 @@ from repro.core.conv import conv2d
 from repro.convserve.cache import KernelCache, weights_fingerprint
 from repro.convserve.graph import NetSpec
 from repro.convserve.plan import NetPlan
-
-# algorithms whose conv2d path consumes pre-transformed kernels; the
-# Pallas kernel transforms inside its own jit (constant-folded per compile)
-_CACHED_ALGOS = ("three_stage", "l3_fused", "fft_fused")
 
 
 def _mask_to_extent(x: jnp.ndarray, hs: jnp.ndarray, ws: jnp.ndarray):
@@ -69,8 +67,12 @@ class NetExecutor:
             p = plans.get(i)
             if p is None:
                 raise ValueError(f"plan missing conv layer {i}")
-            got = (p.c_in, p.c_out, p.k, p.pad)
-            want = (layer.c_in, layer.c_out, layer.k, layer.pad)
+            s = p.spec
+            got = (s.c_in, s.c_out, s.k, s.pad, s.stride, s.groups)
+            want = (
+                layer.c_in, layer.c_out, layer.k, layer.pad,
+                layer.stride, layer.groups,
+            )
             if got != want:
                 raise ValueError(
                     f"plan layer {i} geometry {got} != spec {want} "
@@ -102,8 +104,10 @@ class NetExecutor:
             if layer.kind == "conv":
                 x = conv2d(x, ws[i], plan=self._plans[i], wt=wts.get(i))
                 if sizes is not None:
-                    hs = hs + 2 * layer.pad - layer.k + 1
-                    wcols = wcols + 2 * layer.pad - layer.k + 1
+                    hs = (hs + 2 * layer.pad - layer.k) // layer.stride + 1
+                    wcols = (
+                        wcols + 2 * layer.pad - layer.k
+                    ) // layer.stride + 1
                     x = _mask_to_extent(x, hs, wcols)
             elif layer.kind == "relu":
                 x = jax.nn.relu(x)  # relu(0) == 0: the mask survives
@@ -121,17 +125,17 @@ class NetExecutor:
 
     def _fetch_transforms(self) -> Dict[int, jnp.ndarray]:
         """Per-request cache fetch: first request per layer transforms and
-        stores; later requests (any bucket) count as hits."""
+        stores; later requests (any bucket) count as hits.  The cache
+        itself knows (via the registry) which algorithms have nothing to
+        prepare and returns None for those."""
         wts = {}
         for i, _ in self.spec.conv_layers():
-            p = self._plans[i]
-            if p.algo in _CACHED_ALGOS:
-                wt = self.cache.get(
-                    self.plan.net, p, self.weights[i], self.dtype,
-                    w_fp=self._weights_fp[i],
-                )
-                if wt is not None:
-                    wts[i] = wt
+            wt = self.cache.get(
+                self.plan.net, self._plans[i], self.weights[i], self.dtype,
+                w_fp=self._weights_fp[i],
+            )
+            if wt is not None:
+                wts[i] = wt
         return wts
 
     def __call__(

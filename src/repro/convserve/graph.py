@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.conv import conv2d_direct
+from repro.core.registry import ConvSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,6 +28,8 @@ class LayerSpec:
     c_out: int = 0
     k: int = 3
     pad: int = 1
+    stride: int = 1  # conv only
+    groups: int = 1  # conv only (grouped / ResNeXt-style)
     window: int = 2  # maxpool only
 
     def to_dict(self) -> dict:
@@ -37,11 +40,14 @@ class LayerSpec:
         return LayerSpec(**d)
 
 
-def conv(c_in: int, c_out: int, k: int = 3, pad: int = -1) -> LayerSpec:
+def conv(
+    c_in: int, c_out: int, k: int = 3, pad: int = -1,
+    stride: int = 1, groups: int = 1,
+) -> LayerSpec:
     """3x3-style conv layer; pad defaults to "same" (k // 2)."""
     return LayerSpec(
         kind="conv", c_in=c_in, c_out=c_out, k=k,
-        pad=(k // 2 if pad < 0 else pad),
+        pad=(k // 2 if pad < 0 else pad), stride=stride, groups=groups,
     )
 
 
@@ -82,10 +88,15 @@ class NetSpec:
                     raise ValueError(
                         f"layer {i}: conv expects C={l.c_in}, got {c}"
                     )
-                h = h + 2 * l.pad - l.k + 1
-                w = w + 2 * l.pad - l.k + 1
-                if h <= 0 or w <= 0:
-                    raise ValueError(f"layer {i}: spatial dims vanished")
+                try:
+                    # ConvSpec owns conv geometry: output dims, groups
+                    # divisibility, kernel-vs-padded-input validation
+                    h, w = ConvSpec(
+                        h=h, w=w, c_in=l.c_in, c_out=l.c_out, k=l.k,
+                        pad=l.pad, stride=l.stride, groups=l.groups,
+                    ).out_hw
+                except ValueError as e:
+                    raise ValueError(f"layer {i}: {e}") from None
                 c = l.c_out
             elif l.kind == "maxpool":
                 if h % l.window or w % l.window:
@@ -120,8 +131,11 @@ def init_weights(
     rng = np.random.default_rng(seed)
     ws: Dict[int, jnp.ndarray] = {}
     for i, l in spec.conv_layers():
+        # HWIO with grouping: the kernel sees C/groups input channels
         ws[i] = jnp.asarray(
-            rng.standard_normal((l.k, l.k, l.c_in, l.c_out)) * scale, dtype
+            rng.standard_normal((l.k, l.k, l.c_in // l.groups, l.c_out))
+            * scale,
+            dtype,
         )
     return ws
 
@@ -136,7 +150,10 @@ def run_direct(
     """
     for i, layer in enumerate(spec.layers):
         if layer.kind == "conv":
-            x = conv2d_direct(x, weights[i], pad=layer.pad)
+            x = conv2d_direct(
+                x, weights[i],
+                pad=layer.pad, stride=layer.stride, groups=layer.groups,
+            )
         elif layer.kind == "relu":
             x = jax.nn.relu(x)
         elif layer.kind == "maxpool":

@@ -1,9 +1,14 @@
 """Serializable per-layer algorithm plans (the net-level "wisdom file").
 
-A `NetPlan` records, for every conv layer of a `NetSpec`, which algorithm
-the roofline planner picked, at what tile size and R, and the predicted
-utilisation -- JSON on disk next to the per-op wisdom file, so a planned
-net can be shipped to serving hosts without re-planning (or re-measuring).
+A `NetPlan` records, for every conv layer of a `NetSpec`, the problem it
+was planned for (a `ConvSpec`), which algorithm the roofline planner
+picked, and that algorithm's own params dict -- JSON on disk next to the
+per-op wisdom file, so a planned net can be shipped to serving hosts
+without re-planning (or re-measuring).
+
+A `LayerPlan` is exactly `ConvSpec + algorithm name + algorithm-owned
+params`: nothing in this module (or the cache/executor that consume it)
+interprets the params -- only the owning registry algorithm does.
 """
 
 from __future__ import annotations
@@ -11,54 +16,127 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
-from typing import Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
-PLAN_ALGOS = ("direct", "three_stage", "l3_fused", "fft_fused", "l3_fused_pallas")
-PLAN_VERSION = 1
+from repro.core import registry
+from repro.core.registry import AlgoPlan, ConvSpec
+
+PLAN_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
 class LayerPlan:
     """The planner's decision for one conv layer.
 
-    Geometry fields (h, w, c_in, c_out, k, pad) record what the layer was
-    planned *for*: the executor applies algo/m/t_fft/r_tiles to whatever
-    shapes arrive, and the kernel cache keys transforms on the geometry.
+    `spec` records what the layer was planned *for*: the executor applies
+    algo + params to whatever shape bucket arrives, and the kernel cache
+    keys transforms on the spec geometry plus the algorithm's declared
+    weight params.  Convenience properties expose the common fields.
     """
 
     layer: int  # index into NetSpec.layers
     algo: str
-    pad: int
-    r_tiles: int
-    c_in: int
-    c_out: int
-    k: int
-    h: int  # planned input spatial dims (reference bucket)
-    w: int
-    m: Optional[int] = None  # Winograd output-tile size (wino family)
-    t_fft: Optional[int] = None  # FFT tile size (fft family)
+    spec: ConvSpec
+    params: Dict[str, Any]
     predicted_util: float = 0.0
     tuned: bool = False  # R came from measurement, not the model
 
     def __post_init__(self):
-        if self.algo not in PLAN_ALGOS:
-            raise ValueError(f"unknown algo {self.algo!r}")
+        if self.algo not in registry.names():
+            raise ValueError(
+                f"unknown algo {self.algo!r}, expected one of "
+                f"{registry.names()}"
+            )
+
+    # ----- convenience views (geometry lives in spec, knobs in params)
+
+    @property
+    def pad(self) -> int:
+        return self.spec.pad
+
+    @property
+    def stride(self) -> int:
+        return self.spec.stride
+
+    @property
+    def groups(self) -> int:
+        return self.spec.groups
+
+    @property
+    def c_in(self) -> int:
+        return self.spec.c_in
+
+    @property
+    def c_out(self) -> int:
+        return self.spec.c_out
+
+    @property
+    def k(self) -> int:
+        return self.spec.k
+
+    @property
+    def h(self) -> int:
+        return self.spec.h
+
+    @property
+    def w(self) -> int:
+        return self.spec.w
+
+    @property
+    def r_tiles(self) -> int:
+        return int(self.params.get("r_tiles", 0))
+
+    @property
+    def m(self) -> Optional[int]:
+        return self.params.get("m")
+
+    @property
+    def t_fft(self) -> Optional[int]:
+        return self.params.get("t_fft")
 
     @property
     def t(self) -> Optional[int]:
         """Transform tile size T, whichever family is planned."""
-        if self.algo == "fft_fused":
-            return self.t_fft
-        if self.m is not None:
-            return self.m + self.k - 1
+        if "t_fft" in self.params:
+            return self.params["t_fft"]
+        if "m" in self.params:
+            return self.params["m"] + self.spec.k - 1
         return None
 
+    def algo_plan(self) -> AlgoPlan:
+        """The registry-level view: what execute()/prepare_weights() take."""
+        return AlgoPlan(
+            algo=self.algo, spec=self.spec, params=dict(self.params),
+            predicted_util=self.predicted_util, tuned=self.tuned,
+        )
+
+    @staticmethod
+    def from_algo_plan(layer: int, ap: AlgoPlan) -> "LayerPlan":
+        return LayerPlan(
+            layer=layer, algo=ap.algo, spec=ap.spec, params=dict(ap.params),
+            predicted_util=ap.predicted_util, tuned=ap.tuned,
+        )
+
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        return {
+            "layer": self.layer,
+            "algo": self.algo,
+            "spec": self.spec.to_dict(),
+            "params": dict(self.params),
+            "predicted_util": self.predicted_util,
+            "tuned": self.tuned,
+        }
 
     @staticmethod
     def from_dict(d: dict) -> "LayerPlan":
-        return LayerPlan(**d)
+        return LayerPlan(
+            layer=d["layer"],
+            algo=d["algo"],
+            spec=ConvSpec.from_dict(d["spec"]),
+            params=dict(d["params"]),
+            predicted_util=d.get("predicted_util", 0.0),
+            tuned=d.get("tuned", False),
+        )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,19 +1,22 @@
 """Roofline planner: per-layer algorithm + R selection for a whole net.
 
-For every conv layer the planner asks the S5 analytical model
-(`analysis.choose_algo`) which of the three transformed paths wins --
-L3-fused Winograd, L3-fused FFT, or the vendor 3-stage structure -- and
-falls back to the direct convolution when the layer is too small to tile.
-R comes from `tune.predict_r` (pure model) or, with `tune_r=True`, from
-the measuring `tune.tuned_r` pass that refines the model's pick against
-the wisdom file.
+For every conv layer the planner poses a `ConvSpec` to the algorithm
+registry (`registry.plan_conv`), which ranks every supporting, feasible
+algorithm by the S5 analytical model -- L3-fused Winograd, L3-fused FFT,
+the vendor 3-stage structure, or the direct convolution when the layer is
+too small to tile.  R comes from the registry's plan step: an explicit
+hint, the wisdom file (`tune.lookup_r` / the measuring `tune.tuned_r`
+with ``tune_r=True``), or the analytic `tune.predict_r`.
+
+The planner itself names no algorithm: a newly registered algorithm is
+planned for automatically.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence
 
-from repro.core import analysis
+from repro.core import analysis, registry
 from repro.core import tune as tune_mod
 from repro.convserve.graph import NetSpec
 from repro.convserve.plan import LayerPlan, NetPlan
@@ -22,73 +25,29 @@ from repro.convserve.plan import LayerPlan, NetPlan
 def plan_layer(
     hw: analysis.HardwareModel,
     layer: int,
-    h: int,
-    w: int,
-    c_in: int,
-    c_out: int,
-    k: int,
-    pad: int,
+    spec: registry.ConvSpec,
     *,
     m: int = 5,
     t_fft: int = 16,
     consider_fft: bool = True,
     tune_r: bool = False,
     wisdom_path=None,
+    allowed: Optional[Sequence[str]] = None,
 ) -> LayerPlan:
-    """Plan one conv layer of input (h, w, c_in) -> c_out."""
-    t_wino = m + k - 1
-    # Too small to tile profitably: the padded input must cover at least
-    # one Winograd tile, else the transform overhead swamps the matmuls.
-    if min(h, w) + 2 * pad < t_wino:
-        return LayerPlan(
-            layer=layer, algo="direct", pad=pad, r_tiles=0,
-            c_in=c_in, c_out=c_out, k=k, h=h, w=w, predicted_util=1.0,
-        )
-    # FFT is only a candidate when the padded input covers a full T_fft
-    # tile: below that the tile is mostly padding and the cost model's
-    # flops-per-output-pixel comparison no longer holds.
-    fft_fits = min(h, w) + 2 * pad >= t_fft
-    algo = analysis.choose_algo(
-        hw, c_in, c_out, t_wino, k=k, t_fft=t_fft,
-        consider_fft=consider_fft and fft_fits,
+    """Plan one conv layer posed as a ConvSpec."""
+    if allowed is None:
+        allowed = registry.names()
+    if not consider_fft:
+        allowed = tuple(n for n in allowed if n != "fft_fused")
+    ap = registry.plan_conv(
+        spec, hw,
+        algo="auto",
+        hints={"m": m, "t_fft": t_fft},
+        allowed=allowed,
+        tune_r=tune_r,
+        wisdom_path=wisdom_path,
     )
-    if algo == "fft_fused":
-        r = tune_mod.predict_r(c_in, c_out, k=k, t=t_fft, hw=hw)
-        util = analysis.predicted_utilization(
-            hw, r, c_in, c_out, t_fft, t_fft - k + 1, alpha=2
-        )
-        return LayerPlan(
-            layer=layer, algo=algo, pad=pad, r_tiles=r,
-            c_in=c_in, c_out=c_out, k=k, h=h, w=w,
-            t_fft=t_fft, predicted_util=util,
-        )
-    if algo == "l3_fused":
-        tuned = False
-        if tune_r:
-            r = tune_mod.tuned_r(
-                h, w, c_in, c_out, k=k, m=m, wisdom_path=wisdom_path
-            )
-            tuned = True
-        else:
-            r = tune_mod.predict_r(c_in, c_out, k=k, m=m, hw=hw)
-        util = analysis.predicted_utilization(
-            hw, r, c_in, c_out, t_wino, m, alpha=1
-        )
-        return LayerPlan(
-            layer=layer, algo=algo, pad=pad, r_tiles=r,
-            c_in=c_in, c_out=c_out, k=k, h=h, w=w,
-            m=m, predicted_util=util, tuned=tuned,
-        )
-    # three_stage: R is irrelevant (stages run over all tiles); the DRAM
-    # roofline bounds utilisation since U and M round-trip main memory.
-    util = min(
-        1.0, analysis.ai_dram(c_in, c_out, t_wino, m) / hw.cmr_dram
-    )
-    return LayerPlan(
-        layer=layer, algo="three_stage", pad=pad, r_tiles=0,
-        c_in=c_in, c_out=c_out, k=k, h=h, w=w,
-        m=m, predicted_util=util,
-    )
+    return LayerPlan.from_algo_plan(layer, ap)
 
 
 def plan_net(
@@ -115,10 +74,15 @@ def plan_net(
     cur_h, cur_w = h, w
     for i, layer in enumerate(spec.layers):
         if layer.kind == "conv":
+            cspec = registry.ConvSpec(
+                h=cur_h, w=cur_w,
+                c_in=layer.c_in, c_out=layer.c_out, k=layer.k,
+                pad=layer.pad, stride=layer.stride, groups=layer.groups,
+                dtype=dtype,
+            )
             plans.append(
                 plan_layer(
-                    hw, i, cur_h, cur_w, layer.c_in, layer.c_out,
-                    layer.k, layer.pad,
+                    hw, i, cspec,
                     m=m, t_fft=t_fft, consider_fft=consider_fft,
                     tune_r=tune_r, wisdom_path=wisdom_path,
                 )

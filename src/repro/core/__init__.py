@@ -1,10 +1,20 @@
-"""repro.core -- the paper's contribution: L3-fused transformed convolutions."""
+"""repro.core -- the paper's contribution: L3-fused transformed convolutions.
+
+The public surface is `ConvSpec` (the problem), the algorithm registry
+(`repro.core.registry`: plan/prepare/execute lifecycle), and `conv2d`
+(the thin dispatcher).
+"""
 
 from repro.core.conv import conv1d_depthwise_causal, conv2d, conv2d_direct
 from repro.core.fused import conv2d_l3_fused
+from repro.core.registry import AlgoPlan, Algorithm, ConvSpec, plan_conv
 from repro.core.three_stage import conv2d_three_stage
 
 __all__ = [
+    "Algorithm",
+    "AlgoPlan",
+    "ConvSpec",
+    "plan_conv",
     "conv2d",
     "conv2d_direct",
     "conv2d_l3_fused",

@@ -129,7 +129,7 @@ def flops_per_output_px(t: int, t_out: int, alpha: int = 1) -> float:
     return alpha * 2.0 * t * t / float(t_out * t_out)
 
 
-def _fused_candidate(
+def fused_cost(
     hw: HardwareModel, c_in: int, c_out: int, t: int, k: int, alpha: int,
     r_floor: int,
 ):
@@ -138,7 +138,10 @@ def _fused_candidate(
     Cost is time per output pixel up to the common C*C' factor:
     flops/px divided by predicted utilisation at the best feasible R.
     Returns None when infeasible (matrices overflow the shared level, or
-    no useful R fits the private-memory budget).
+    no useful R fits the private-memory budget).  This is the registry's
+    cost entry for the fused algorithms (`core.registry`); `choose_algo`
+    below is the original closed-form three-way choice kept for the
+    paper-table benchmarks and the algebra tests.
     """
     if t <= k:
         return None
@@ -171,10 +174,10 @@ def choose_algo(
     output pixel (alpha=2 FLOP accounting for FFT) wins.  When no fused
     path is feasible the vendor 3-stage structure is the fallback.
     """
-    wino = _fused_candidate(hw, c_in, c_out, t, k, 1, max(8, min_r(hw) // 2))
+    wino = fused_cost(hw, c_in, c_out, t, k, 1, max(8, min_r(hw) // 2))
     fft = None
     if consider_fft:
-        fft = _fused_candidate(
+        fft = fused_cost(
             hw, c_in, c_out, t_fft, k, 2, max(4, min_r(hw) // 2)
         )
     if wino is None and fft is None:

@@ -1,15 +1,23 @@
-"""Public convolution API with algorithm selection.
+"""Public convolution API: a thin dispatcher over the algorithm registry.
 
-    conv2d(x, w, pad=1, algo="l3_fused")      # the paper's contribution
-    conv2d(x, w, pad=1, algo="three_stage")   # vendor-structure baseline
-    conv2d(x, w, pad=1, algo="direct")        # XLA direct conv (the "DNNL"
-                                              # stand-in on this backend)
-    conv2d(x, w, pad=1, algo="fft_fused")     # FFT-basis fused variant
-    conv2d(x, w, pad=1, algo="l3_fused_pallas")  # the Pallas TPU kernel
-    conv2d(x, w, pad=1, algo="auto")          # paper's wisdom-file choice
-    conv2d(x, w, plan=layer_plan, wt=cached)  # convserve engine path: a
-                                              # planned layer with its
-                                              # pre-transformed kernels
+    conv2d(x, w, pad=1)                        # algo="auto": registry cost
+                                               # model + wisdom file
+    conv2d(x, w, pad=1, algo="l3_fused")       # the paper's contribution
+    conv2d(x, w, pad=1, algo="three_stage")    # vendor-structure baseline
+    conv2d(x, w, pad=1, algo="fft_fused")      # FFT-basis fused variant
+    conv2d(x, w, pad=1, algo="l3_fused_pallas")# the Pallas TPU kernel
+    conv2d(x, w, pad=1, algo="direct")         # XLA direct conv
+    conv2d(x, w, pad=1, stride=2)              # strided (ResNet downsample)
+    conv2d(x, w, pad=1, groups=4)              # grouped (ResNeXt-style)
+    conv2d(x, w, plan=layer_plan, wt=cached)   # convserve engine path: a
+                                               # planned layer with its
+                                               # pre-transformed kernels
+
+`conv2d` itself knows no algorithm: every path -- capability checks, the
+roofline cost ranking, R resolution through the wisdom file, weight
+pre-transforms, execution -- goes through `repro.core.registry`.  Adding
+an algorithm is a single `registry.register()` call; this module never
+changes.
 
 Layout: NHWC activations, HWIO kernels (TPU-native).  `conv1d` covers the
 depthwise-causal short convs of the SSM architectures.
@@ -17,30 +25,71 @@ depthwise-causal short convs of the SSM architectures.
 
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Optional
+from typing import TYPE_CHECKING, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import analysis
-from repro.core.fft_conv import conv2d_fft_fused
-from repro.core.fused import conv2d_l3_fused
-from repro.core.three_stage import conv2d_three_stage
+from repro.core import analysis, registry
+from repro.core.fft_conv import conv2d_fft_fused  # noqa: F401  (re-export +
+from repro.core.fused import conv2d_l3_fused  # noqa: F401      registers the
+from repro.core.three_stage import conv2d_three_stage  # noqa: F401  algos)
+from repro.kernels.fused_winograd import ops as _pallas_ops  # noqa: F401
 
 if TYPE_CHECKING:  # convserve imports core; keep the runtime edge one-way
     from repro.convserve.plan import LayerPlan
 
-ALGOS = ("direct", "three_stage", "l3_fused", "fft_fused", "l3_fused_pallas", "auto")
 
+def conv2d_direct(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    pad: int = 0,
+    stride: int = 1,
+    groups: int = 1,
+) -> jnp.ndarray:
+    """XLA's own convolution -- the vendor-library stand-in.
 
-def conv2d_direct(x: jnp.ndarray, w: jnp.ndarray, *, pad: int = 0) -> jnp.ndarray:
-    """XLA's own convolution -- the vendor-library stand-in."""
+    Supports the full problem space: strided, grouped (HWIO kernels carry
+    C/groups input channels), non-square, any float dtype.
+    """
     return jax.lax.conv_general_dilated(
         x, w,
-        window_strides=(1, 1),
+        window_strides=(stride, stride),
         padding=((pad, pad), (pad, pad)),
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
     )
+
+
+class DirectAlgorithm(registry.Algorithm):
+    """Tier 2: the universal fallback.  Supports everything (stride,
+    groups, non-square, any dtype); chosen by auto only when no
+    transformed path is roofline-feasible (e.g. spatial dims too small
+    to cover one tile)."""
+
+    name = "direct"
+    tier = 2
+    rank = 50
+    consumes_wt = False
+
+    def supports(self, spec: registry.ConvSpec) -> bool:
+        return True
+
+    def plan(self, spec, hw, *, hints=None, tune_r=False, wisdom_path=None):
+        return registry.AlgoPlan(
+            self.name, spec, {}, predicted_util=1.0, cost=0.0
+        )
+
+    def execute(self, x, w, wt, plan):
+        return conv2d_direct(
+            x, w,
+            pad=plan.spec.pad, stride=plan.spec.stride,
+            groups=plan.spec.groups,
+        )
+
+
+registry.register(DirectAlgorithm())
 
 
 def conv2d(
@@ -48,46 +97,54 @@ def conv2d(
     w: jnp.ndarray,
     *,
     pad: int = 0,
+    stride: int = 1,
+    groups: int = 1,
     algo: str = "auto",
     m: Optional[int] = None,
-    t_fft: int = 16,
-    r_tiles: int = 24,
+    t_fft: Optional[int] = None,
+    r_tiles: Optional[int] = None,
     hw: analysis.HardwareModel = analysis.TPU_V5E,
-    plan: "Optional[LayerPlan]" = None,
+    plan: "Optional[Union[LayerPlan, registry.AlgoPlan]]" = None,
     wt: Optional[jnp.ndarray] = None,
+    wisdom_path=None,
 ) -> jnp.ndarray:
     """2-D convolution, NHWC x HWIO -> NHWC.
 
-    A `plan` (convserve.plan.LayerPlan) overrides algo/pad/tile/R with the
-    planner's per-layer decision; `wt` supplies pre-transformed right-hand
-    matrices (the inference-time kernel-cache path) for the transformed
-    algorithms and is ignored by `direct`.
+    With algo="auto" the registry ranks every feasible algorithm by the
+    S5 roofline model and resolves R through the wisdom file (a tuned R
+    for this geometry is used when one exists; `tune.predict_r`
+    otherwise).  `m`/`t_fft`/`r_tiles` are optional hints overriding the
+    planned algorithm's own defaults.
+
+    A `plan` (convserve LayerPlan or a registry AlgoPlan) overrides
+    algo/pad/stride/groups and all params with the planner's per-layer
+    decision; `wt` supplies pre-transformed right-hand matrices (the
+    inference-time kernel-cache path).  Supplying `wt` to an algorithm
+    that cannot consume it (direct, the Pallas kernel) is an error --
+    precomputed work is never silently dropped.
     """
     if plan is not None:
-        algo, pad, r_tiles = plan.algo, plan.pad, plan.r_tiles
-        if plan.m is not None:
-            m = plan.m
-        if plan.t_fft is not None:
-            t_fft = plan.t_fft
-    if algo not in ALGOS:
-        raise ValueError(f"unknown algo {algo!r}, expected one of {ALGOS}")
-    if algo == "auto":
-        k = w.shape[0]
-        t = (m if m is not None else 5) + k - 1
-        algo = analysis.choose_algo(hw, x.shape[3], w.shape[3], t, k=k, t_fft=t_fft)
-    if algo == "direct":
-        return conv2d_direct(x, w, pad=pad)
-    if algo == "three_stage":
-        return conv2d_three_stage(x, w, pad=pad, m=m, wt=wt)
-    if algo == "l3_fused":
-        return conv2d_l3_fused(x, w, pad=pad, m=m, r_tiles=r_tiles, wt=wt)
-    if algo == "fft_fused":
-        return conv2d_fft_fused(x, w, pad=pad, t=t_fft, r_tiles=r_tiles, wt=wt)
-    if algo == "l3_fused_pallas":
-        from repro.kernels.fused_winograd import ops as fw_ops
-
-        return fw_ops.conv2d_fused_pallas(x, w, pad=pad, m=m, r_tiles=r_tiles)
-    raise AssertionError(algo)
+        aplan = plan.algo_plan() if hasattr(plan, "algo_plan") else plan
+    else:
+        spec = registry.ConvSpec.from_tensors(
+            x, w, pad=pad, stride=stride, groups=groups
+        )
+        hints = {
+            name: val
+            for name, val in (("m", m), ("t_fft", t_fft), ("r_tiles", r_tiles))
+            if val is not None
+        }
+        aplan = registry.plan_conv(
+            spec, hw, algo=algo, hints=hints, wisdom_path=wisdom_path
+        )
+    alg = registry.get(aplan.algo)
+    if wt is not None and not alg.consumes_wt:
+        raise ValueError(
+            f"algo {aplan.algo!r} does not consume pre-transformed kernels: "
+            "a supplied `wt` would silently drop precomputed work.  Pass "
+            "wt=None, or plan an algorithm with consumes_wt=True."
+        )
+    return alg.execute(x, w, wt, aplan)
 
 
 def conv1d_depthwise_causal(

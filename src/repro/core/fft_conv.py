@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import tiling
+from repro.core import analysis, registry, tiling
 
 
 def transform_kernels_fft(w: jnp.ndarray, t: int) -> jnp.ndarray:
@@ -69,3 +69,63 @@ def conv2d_fft_fused(
         batch, plan.n_tiles_h, plan.n_tiles_w, plan.t_out, plan.t_out, c_out
     )
     return tiling.assemble_tiles(y_tiles, plan).astype(x.dtype)
+
+
+class FFTFusedAlgorithm(registry.Algorithm):
+    """The FFT transform family as a registry algorithm (tier 0).
+
+    alpha = 2 in the cost entry (complex channel-mix matmuls); feasible
+    only when the padded input covers a full T_fft tile -- below that the
+    tile is mostly padding and the flops-per-pixel comparison collapses.
+    """
+
+    name = "fft_fused"
+    tier = 0
+    rank = 20
+    consumes_wt = True
+    weight_params = ("t_fft",)
+    default_t = 16  # the paper: T >= 16 works well for FFT
+
+    def supports(self, spec: registry.ConvSpec) -> bool:
+        # lax.fft computes in f32/f64 only; bf16 problems go to the
+        # Winograd family (capability-based fallback, not a cast)
+        return spec.groups == 1 and spec.dtype in ("float32", "float64")
+
+    def plan(self, spec, hw, *, hints=None, tune_r=False, wisdom_path=None):
+        hints = hints or {}
+        t = int(hints.get("t_fft") or self.default_t)
+        from repro.core import tune  # deferred: tune imports core.fused
+
+        r_hint = hints.get("r_tiles")
+        r = (
+            int(r_hint)
+            if r_hint is not None
+            else tune.predict_r(spec.c_in, spec.c_out, k=spec.k, t=t, hw=hw)
+        )
+        util = analysis.predicted_utilization(
+            hw, r, spec.c_in, spec.c_out, t, t - spec.k + 1, alpha=2
+        )
+        cost = registry.fused_auto_cost(
+            spec, hw, t, 2, max(4, analysis.min_r(hw) // 2)
+        )
+        return registry.AlgoPlan(
+            self.name, spec, {"t_fft": t, "r_tiles": int(r)},
+            predicted_util=util, cost=cost,
+        )
+
+    def prepare_weights(self, w, plan):
+        t = plan.params.get("t_fft")
+        if t is None:
+            raise ValueError(f"{self.name} plan without t_fft: {plan.params}")
+        return transform_kernels_fft(w, t)
+
+    def execute(self, x, w, wt, plan):
+        y = conv2d_fft_fused(
+            x, w, pad=plan.spec.pad,
+            t=plan.params.get("t_fft", self.default_t),
+            r_tiles=plan.params.get("r_tiles", 16), wt=wt,
+        )
+        return registry.decimate(y, plan.spec.stride)
+
+
+registry.register(FFTFusedAlgorithm())

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import tiling, transforms
+from repro.core import analysis, registry, tiling, transforms
 from repro.core.three_stage import transform_kernels
 
 
@@ -124,3 +124,105 @@ def conv2d_l3_fused(
         batch, plan.n_tiles_h, plan.n_tiles_w, plan.t_out, plan.t_out, c_out
     )
     return tiling.assemble_tiles(y_tiles, plan)
+
+
+def resolve_wino_r(
+    spec: registry.ConvSpec,
+    hw: analysis.HardwareModel,
+    *,
+    m: int,
+    hints,
+    tune_r: bool = False,
+    wisdom_path=None,
+):
+    """R for a Winograd-family plan: explicit hint > measured (tune_r) >
+    wisdom-file lookup > analytic prediction.  Returns (r, tuned) where
+    `tuned` marks an R that came from measurement (fresh or cached in the
+    wisdom file) rather than the model."""
+    from repro.core import tune  # deferred: tune times this module's conv
+
+    r_hint = hints.get("r_tiles")
+    if r_hint is not None:
+        return int(r_hint), False
+    if tune_r:
+        r = tune.tuned_r(
+            spec.h, spec.w, spec.c_in, spec.c_out, k=spec.k, m=m,
+            wisdom_path=wisdom_path,
+        )
+        return int(r), True
+    r = tune.lookup_r(
+        spec.h, spec.w, spec.c_in, spec.c_out, k=spec.k, m=m,
+        wisdom_path=wisdom_path,
+    )
+    if r is not None:
+        # clamp a wisdom R measured elsewhere into this hw's feasible range
+        r_max = analysis.max_r(hw, spec.c_in, spec.c_out, m + spec.k - 1)
+        return (max(1, min(int(r), r_max)) if r_max >= 1 else int(r)), True
+    return tune.predict_r(spec.c_in, spec.c_out, k=spec.k, m=m, hw=hw), False
+
+
+def plan_wino_family(
+    name: str,
+    spec: registry.ConvSpec,
+    hw: analysis.HardwareModel,
+    *,
+    default_m: int,
+    hints,
+    tune_r: bool = False,
+    wisdom_path=None,
+) -> registry.AlgoPlan:
+    """Shared plan step for the Winograd-family algorithms (the pure-JAX
+    l3_fused and the Pallas kernel): same m/T resolution, same wisdom-file
+    R, same alpha=1 utilisation and auto-ranking cost."""
+    hints = hints or {}
+    m = int(hints.get("m") or default_m)
+    t = m + spec.k - 1
+    r, tuned = resolve_wino_r(
+        spec, hw, m=m, hints=hints, tune_r=tune_r, wisdom_path=wisdom_path
+    )
+    util = analysis.predicted_utilization(
+        hw, r, spec.c_in, spec.c_out, t, m, alpha=1
+    )
+    cost = registry.fused_auto_cost(
+        spec, hw, t, 1, max(8, analysis.min_r(hw) // 2)
+    )
+    return registry.AlgoPlan(
+        name, spec, {"m": m, "r_tiles": int(r)},
+        predicted_util=util, cost=cost, tuned=tuned,
+    )
+
+
+class L3FusedAlgorithm(registry.Algorithm):
+    """The paper's contribution as a registry algorithm (tier 0)."""
+
+    name = "l3_fused"
+    tier = 0
+    rank = 10
+    consumes_wt = True
+    weight_params = ("m",)
+    default_m = 5  # T = 7, the paper's benchmark configuration
+
+    def supports(self, spec: registry.ConvSpec) -> bool:
+        return spec.groups == 1
+
+    def plan(self, spec, hw, *, hints=None, tune_r=False, wisdom_path=None):
+        return plan_wino_family(
+            self.name, spec, hw, default_m=self.default_m, hints=hints,
+            tune_r=tune_r, wisdom_path=wisdom_path,
+        )
+
+    def prepare_weights(self, w, plan):
+        m = plan.params.get("m")
+        if m is None:
+            raise ValueError(f"{self.name} plan without m: {plan.params}")
+        return transform_kernels(w, m)
+
+    def execute(self, x, w, wt, plan):
+        y = conv2d_l3_fused(
+            x, w, pad=plan.spec.pad, m=plan.params.get("m"),
+            r_tiles=plan.params.get("r_tiles", 24), wt=wt,
+        )
+        return registry.decimate(y, plan.spec.stride)
+
+
+registry.register(L3FusedAlgorithm())

@@ -1,0 +1,331 @@
+"""Unified convolution-algorithm registry.
+
+The paper's central claim is that one transformed-conv *problem* admits
+several interchangeable *realizations* (3-stage, L3-fused Winograd,
+L3-fused FFT, direct) whose winner flips with layer geometry.  This module
+makes that interchangeability first-class:
+
+  * `ConvSpec` -- the problem: spatial dims, channels, kernel, pad,
+    stride, groups, dtype.  Pure data, JSON-serializable.
+  * `Algorithm` -- one realization: capabilities (`supports`), a cost
+    entry wrapping the S5 roofline model, and the lifecycle
+
+        plan(spec, hw)            -> AlgoPlan (algorithm-owned params)
+        prepare_weights(w, plan)  -> right-hand matrices (or None)
+        execute(x, w, wt, plan)   -> output
+
+  * the registry itself -- `register`/`get`/`names`, and `plan_conv`,
+    which resolves ``algo="auto"`` by ranking every supporting algorithm
+    on (tier, modeled cost, rank) and resolves R through the wisdom file.
+
+Adding an algorithm (or a new scenario: strided, grouped, ...) is a single
+`register()` call -- `conv2d`, the convserve planner, the kernel cache,
+and the executor all dispatch through here and never name algorithms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import analysis
+
+
+# --------------------------------------------------------------- ConvSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """A 2-D convolution problem: NHWC x HWIO -> NHWC.
+
+    `h`/`w` are the (possibly non-square) input spatial dims the problem
+    was posed at; executors may apply a plan to other runtime shapes --
+    the structural fields (k, pad, stride, groups, dtype) are what the
+    algorithms condition on.
+    """
+
+    h: int
+    w: int
+    c_in: int
+    c_out: int
+    k: int
+    pad: int = 0
+    stride: int = 1
+    groups: int = 1
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if min(self.h, self.w, self.c_in, self.c_out, self.k) < 1:
+            raise ValueError(f"non-positive dimension in {self}")
+        if self.pad < 0 or self.stride < 1 or self.groups < 1:
+            raise ValueError(f"bad pad/stride/groups in {self}")
+        if self.c_in % self.groups or self.c_out % self.groups:
+            raise ValueError(
+                f"channels ({self.c_in}->{self.c_out}) not divisible by "
+                f"groups {self.groups}"
+            )
+        if self.h + 2 * self.pad < self.k or self.w + 2 * self.pad < self.k:
+            raise ValueError(f"kernel larger than padded input: {self}")
+
+    @staticmethod
+    def from_tensors(
+        x, w, *, pad: int = 0, stride: int = 1, groups: int = 1
+    ) -> "ConvSpec":
+        """Describe the problem posed by concrete NHWC x / HWIO w tensors."""
+        if x.ndim != 4 or w.ndim != 4:
+            raise ValueError(f"expected NHWC x and HWIO w, got {x.shape}, {w.shape}")
+        if w.shape[0] != w.shape[1]:
+            raise ValueError(f"only square kernels supported, got {w.shape}")
+        if w.shape[2] * groups != x.shape[3]:
+            raise ValueError(
+                f"kernel c_in {w.shape[2]} x groups {groups} != input "
+                f"channels {x.shape[3]}"
+            )
+        return ConvSpec(
+            h=int(x.shape[1]), w=int(x.shape[2]),
+            c_in=int(x.shape[3]), c_out=int(w.shape[3]), k=int(w.shape[0]),
+            pad=pad, stride=stride, groups=groups,
+            dtype=jnp.dtype(x.dtype).name,
+        )
+
+    @property
+    def out_hw(self) -> Tuple[int, int]:
+        return (
+            (self.h + 2 * self.pad - self.k) // self.stride + 1,
+            (self.w + 2 * self.pad - self.k) // self.stride + 1,
+        )
+
+    @property
+    def padded_min(self) -> int:
+        """Smallest padded spatial extent -- the tile-fit criterion."""
+        return min(self.h, self.w) + 2 * self.pad
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: Mapping) -> "ConvSpec":
+        return ConvSpec(**d)
+
+
+# --------------------------------------------------------------- AlgoPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoPlan:
+    """One algorithm's resolved decision for one ConvSpec.
+
+    `params` is algorithm-owned (m, t_fft, r_tiles, ...): nothing outside
+    the owning algorithm interprets it, which is what lets the cache and
+    executor stay algorithm-agnostic.  `cost` is the roofline-modeled time
+    per output pixel used for auto ranking (inf == excluded from auto);
+    it is not serialized.
+    """
+
+    algo: str
+    spec: ConvSpec
+    params: Dict[str, Any]
+    predicted_util: float = 0.0
+    cost: float = math.inf
+    tuned: bool = False
+
+
+def fused_auto_cost(
+    spec: ConvSpec,
+    hw: analysis.HardwareModel,
+    t: int,
+    alpha: int,
+    r_floor: int,
+) -> float:
+    """Auto-ranking cost of one fused transform family on `spec`: inf when
+    the padded input cannot cover a single T-tile or the roofline deems the
+    family infeasible (`analysis.fused_cost`), else the modeled time per
+    output pixel with the stride^2 decimation waste charged.  Shared by
+    every fused algorithm so the feasibility gate cannot diverge."""
+    if spec.padded_min < t:
+        return math.inf
+    fc = analysis.fused_cost(
+        hw, spec.c_in, spec.c_out, t, spec.k, alpha, r_floor
+    )
+    return math.inf if fc is None else fc * spec.stride**2
+
+
+def decimate(y: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """Stride-s conv == stride-1 conv decimated: y_s[i,j] = y_1[s*i, s*j].
+
+    The transformed algorithms (whose OLA tiling is inherently stride-1)
+    gain strided output through this post-pass; their cost entries charge
+    the stride^2 wasted pixels so auto ranking stays honest.
+    """
+    if stride == 1:
+        return y
+    return y[:, ::stride, ::stride, :]
+
+
+# -------------------------------------------------------------- Algorithm
+
+
+class Algorithm:
+    """Base class: one convolution realization.
+
+    Class attributes:
+      name           registry key (also the `algo=` string).
+      tier           auto-resolution tier: 0 fused, 1 staged fallback,
+                     2 direct.  Lower tier wins regardless of cost --
+                     this encodes the paper's preference order (fused
+                     where feasible, vendor structure as fallback).
+      rank           deterministic tie-break within a tier.
+      consumes_wt    execute() accepts pre-transformed kernels (`wt`);
+                     False means a supplied wt is an error, never ignored.
+      weight_params  param names that shape `prepare_weights` output --
+                     the kernel cache keys transforms on exactly these.
+      auto_candidate False for explicit-only algorithms (the Pallas
+                     kernel: correct everywhere via interpret mode, but
+                     only profitable on its native backend).
+    """
+
+    name: str = ""
+    tier: int = 0
+    rank: int = 0
+    consumes_wt: bool = False
+    weight_params: Tuple[str, ...] = ()
+    auto_candidate: bool = True
+
+    def supports(self, spec: ConvSpec) -> bool:
+        """Correctness domain: can this algorithm compute `spec` at all?"""
+        raise NotImplementedError
+
+    def plan(
+        self,
+        spec: ConvSpec,
+        hw: analysis.HardwareModel,
+        *,
+        hints: Optional[Mapping[str, Any]] = None,
+        tune_r: bool = False,
+        wisdom_path=None,
+    ) -> AlgoPlan:
+        """Resolve algorithm-owned params (and modeled cost) for `spec`."""
+        raise NotImplementedError
+
+    def prepare_weights(self, w: jnp.ndarray, plan: AlgoPlan):
+        """HWIO kernels -> right-hand matrices; None when the algorithm
+        has no ahead-of-time transform (direct, the Pallas kernel)."""
+        return None
+
+    def execute(
+        self,
+        x: jnp.ndarray,
+        w: Optional[jnp.ndarray],
+        wt: Optional[jnp.ndarray],
+        plan: AlgoPlan,
+    ) -> jnp.ndarray:
+        """Run the convolution.  Geometry comes from the runtime `x`
+        (plans apply to whole shape buckets); structure (pad, stride,
+        groups) and params come from the plan."""
+        raise NotImplementedError
+
+    def prepare_key(self, params: Mapping[str, Any]) -> Tuple:
+        """The params subtuple that identifies `prepare_weights` output
+        (cache key component).  R never fragments the cache."""
+        return tuple((p, params.get(p)) for p in self.weight_params)
+
+
+# --------------------------------------------------------------- registry
+
+
+_REGISTRY: Dict[str, Algorithm] = {}
+
+
+def register(alg: Algorithm) -> Algorithm:
+    if not alg.name:
+        raise ValueError(f"algorithm {alg!r} has no name")
+    _REGISTRY[alg.name] = alg
+    return alg
+
+
+def _ensure_registered() -> None:
+    """Algorithms self-register when their module is imported; importing
+    the dispatcher pulls in every built-in algorithm module."""
+    if "direct" not in _REGISTRY:
+        import repro.core.conv  # noqa: F401
+
+
+def get(name: str) -> Algorithm:
+    _ensure_registered()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown algo {name!r}, expected one of {names()} or 'auto'"
+        ) from None
+
+
+def names() -> Tuple[str, ...]:
+    _ensure_registered()
+    return tuple(_REGISTRY)
+
+
+def supporting(spec: ConvSpec) -> Tuple[str, ...]:
+    """Names of algorithms whose correctness domain covers `spec`."""
+    _ensure_registered()
+    return tuple(n for n, a in _REGISTRY.items() if a.supports(spec))
+
+
+def plan_conv(
+    spec: ConvSpec,
+    hw: analysis.HardwareModel,
+    *,
+    algo: str = "auto",
+    hints: Optional[Mapping[str, Any]] = None,
+    allowed: Optional[Sequence[str]] = None,
+    tune_r: bool = False,
+    wisdom_path=None,
+) -> AlgoPlan:
+    """Resolve `spec` to a concrete AlgoPlan.
+
+    algo="auto" ranks every supporting, feasible algorithm by
+    (tier, modeled cost, rank) -- the registry form of the paper's wisdom
+    choice.  An explicit algo plans unconditionally (feasibility heuristics
+    only gate auto); unsupported specs raise.  `tune_r` measures R for the
+    winner only, never for losing candidates.
+    """
+    _ensure_registered()
+    hints = dict(hints or {})
+    if algo != "auto":
+        alg = get(algo)
+        if not alg.supports(spec):
+            raise ValueError(
+                f"algo {algo!r} does not support {spec} "
+                f"(supported here: {supporting(spec)})"
+            )
+        return alg.plan(
+            spec, hw, hints=hints, tune_r=tune_r, wisdom_path=wisdom_path
+        )
+    best: Optional[AlgoPlan] = None
+    best_key = None
+    for name in (allowed if allowed is not None else names()):
+        alg = get(name)
+        if not alg.auto_candidate or not alg.supports(spec):
+            continue
+        cand = alg.plan(spec, hw, hints=hints, wisdom_path=wisdom_path)
+        if not math.isfinite(cand.cost):
+            continue  # roofline-infeasible: excluded from auto
+        key = (alg.tier, cand.cost, alg.rank)
+        if best_key is None or key < best_key:
+            best, best_key = cand, key
+    if best is None:
+        raise ValueError(
+            f"auto found no feasible algorithm for {spec}: supporting "
+            f"algorithms are {supporting(spec)}, but the candidate set "
+            f"was restricted to {tuple(allowed) if allowed is not None else names()} "
+            "and roofline-infeasible candidates are excluded -- widen "
+            "`allowed` or request an algorithm explicitly"
+        )
+    if tune_r:  # measure only the winner (the wisdom-file pass)
+        best = get(best.algo).plan(
+            spec, hw, hints=hints, tune_r=True, wisdom_path=wisdom_path
+        )
+    return best

@@ -17,13 +17,14 @@ which is exactly the materialisation behaviour of the vendor libraries.
 
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import tiling, transforms
+from repro.core import analysis, registry, tiling, transforms
 
 
 def transform_kernels(w: jnp.ndarray, m: int) -> jnp.ndarray:
@@ -99,6 +100,60 @@ def conv2d_three_stage(
     u = stage1_input_transform(xp, plan)
     mm = stage2_multiply(u, wt)
     return stage3_inverse_transform(mm, plan, x.shape[0])
+
+
+class ThreeStageAlgorithm(registry.Algorithm):
+    """The vendor-structure baseline as a registry algorithm.
+
+    Tier 1: always roofline-feasible (stages stream through DRAM), so it
+    is the fallback whenever every fused path is infeasible -- but never
+    beats a feasible fused path regardless of modeled cost, matching the
+    paper's preference order.
+    """
+
+    name = "three_stage"
+    tier = 1
+    rank = 30
+    consumes_wt = True
+    weight_params = ("m",)
+    default_m = 6  # T = 8, this module's historical default
+
+    def supports(self, spec: registry.ConvSpec) -> bool:
+        return spec.groups == 1
+
+    def plan(self, spec, hw, *, hints=None, tune_r=False, wisdom_path=None):
+        hints = hints or {}
+        m = int(hints.get("m") or self.default_m)
+        t = m + spec.k - 1
+        # DRAM roofline bounds utilisation: U and M round-trip main memory.
+        util = min(
+            1.0, analysis.ai_dram(spec.c_in, spec.c_out, t, m) / hw.cmr_dram
+        )
+        cost = math.inf
+        if spec.padded_min >= t:  # tile-fit heuristic gates auto only
+            cost = (
+                analysis.flops_per_output_px(t, m)
+                / max(util, 1e-9)
+                * spec.stride**2
+            )
+        return registry.AlgoPlan(
+            self.name, spec, {"m": m}, predicted_util=util, cost=cost
+        )
+
+    def prepare_weights(self, w, plan):
+        m = plan.params.get("m")
+        if m is None:
+            raise ValueError(f"{self.name} plan without m: {plan.params}")
+        return transform_kernels(w, m)
+
+    def execute(self, x, w, wt, plan):
+        y = conv2d_three_stage(
+            x, w, pad=plan.spec.pad, m=plan.params.get("m"), wt=wt
+        )
+        return registry.decimate(y, plan.spec.stride)
+
+
+registry.register(ThreeStageAlgorithm())
 
 
 class ThreeStageStaged:

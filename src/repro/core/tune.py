@@ -43,6 +43,27 @@ def _load(path: pathlib.Path) -> dict:
         return {}
 
 
+_WISDOM_CACHE: dict = {}  # path -> (mtime_ns, parsed wisdom)
+
+
+def _load_cached(path: pathlib.Path) -> dict:
+    """mtime-validated wisdom read: `lookup_r` runs on every auto-dispatch
+    plan, so it must not re-read and re-parse the file per call.  Writers
+    (`tuned_r`) go through the uncached `_load` -- the atomic replace
+    bumps mtime_ns, which invalidates this cache."""
+    try:
+        stamp = path.stat().st_mtime_ns
+    except OSError:
+        stamp = None
+    key = str(path)
+    hit = _WISDOM_CACHE.get(key)
+    if hit is not None and hit[0] == stamp:
+        return hit[1]
+    wisdom = _load(path) if stamp is not None else {}
+    _WISDOM_CACHE[key] = (stamp, wisdom)
+    return wisdom
+
+
 def default_hw() -> analysis.HardwareModel:
     """Hardware model for the current backend (paper machines on CPU)."""
     return (
@@ -84,6 +105,20 @@ def predict_r(
     target = analysis.min_r(hw)
     at_or_above = [r for r in feas if r >= target]
     return min(at_or_above) if at_or_above else max(feas)
+
+
+def lookup_r(
+    h: int, w: int, c_in: int, c_out: int, *, k: int = 3, m: int = 5,
+    wisdom_path: Optional[pathlib.Path] = None,
+) -> Optional[int]:
+    """Non-measuring wisdom read: the tuned R for this layer geometry if a
+    previous `tuned_r` pass stored one, else None.  This is how
+    ``algo="auto"`` benefits from the wisdom file without ever paying a
+    measurement at dispatch time."""
+    path = pathlib.Path(wisdom_path or _DEFAULT_WISDOM)
+    wisdom = _load_cached(path)
+    key = _key(h, w, c_in, c_out, k, m)
+    return int(wisdom[key]) if key in wisdom else None
 
 
 def measure_r(

@@ -9,7 +9,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import tiling
+from repro.core import registry, tiling
+from repro.core.fused import plan_wino_family
 from repro.core.three_stage import transform_kernels
 from repro.kernels.fused_winograd.kernel import fused_winograd_call
 
@@ -59,3 +60,43 @@ def conv2d_fused_pallas(
         interpret=interpret,
     )
     return y[:, : plan.h_out, : plan.w_out, :]
+
+
+class L3FusedPallasAlgorithm(registry.Algorithm):
+    """The hand-written Pallas TPU kernel as a registry algorithm.
+
+    Explicit-only (`auto_candidate = False`): correct on every backend via
+    interpret mode, but only profitable where the kernel lowers natively --
+    auto resolution should not hand CPU hosts an interpreted kernel.  The
+    kernel transforms its own weights inside the jit (constant-folded per
+    compile), so it has no ahead-of-time prepare step and never consumes a
+    cached `wt`.
+    """
+
+    name = "l3_fused_pallas"
+    tier = 0
+    rank = 15
+    consumes_wt = False
+    auto_candidate = False
+    default_m = 5
+
+    def supports(self, spec: registry.ConvSpec) -> bool:
+        return spec.groups == 1
+
+    def plan(self, spec, hw, *, hints=None, tune_r=False, wisdom_path=None):
+        # shares the Winograd wisdom family: a tuned R for l3_fused is the
+        # best available estimate for the kernel's task width too
+        return plan_wino_family(
+            self.name, spec, hw, default_m=self.default_m, hints=hints,
+            tune_r=tune_r, wisdom_path=wisdom_path,
+        )
+
+    def execute(self, x, w, wt, plan):
+        y = conv2d_fused_pallas(
+            x, w, pad=plan.spec.pad, m=plan.params.get("m"),
+            r_tiles=plan.params.get("r_tiles", 16),
+        )
+        return registry.decimate(y, plan.spec.stride)
+
+
+registry.register(L3FusedPallasAlgorithm())

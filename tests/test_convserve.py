@@ -11,6 +11,7 @@ import pytest
 from repro.configs.convnets import tiny_testnet, vgg_style
 from repro.convserve import (
     ConvServeConfig,
+    ConvSpec,
     ConvServer,
     ImageRequest,
     KernelCache,
@@ -160,9 +161,11 @@ def test_shared_cache_isolates_executors_with_different_weights():
 def test_planner_skips_fft_below_tile_size():
     """FFT's T=16 tile must not be planned for layers whose padded input
     cannot fill it (the cost model assumes full output tiles)."""
-    p = plan_layer(BIG_HW, 0, 8, 8, 16, 16, 3, 1)  # 10x10 padded < 16
+    small = ConvSpec(h=8, w=8, c_in=16, c_out=16, k=3, pad=1)
+    p = plan_layer(BIG_HW, 0, small)  # 10x10 padded < 16
     assert p.algo != "fft_fused"
-    p = plan_layer(BIG_HW, 0, 16, 16, 16, 16, 3, 1)  # 18x18 covers a tile
+    big = ConvSpec(h=16, w=16, c_in=16, c_out=16, k=3, pad=1)
+    p = plan_layer(BIG_HW, 0, big)  # 18x18 covers a tile
     assert p.algo == "fft_fused"
 
 
@@ -254,7 +257,10 @@ def test_executor_rejects_stale_or_incomplete_plan():
     with pytest.raises(ValueError, match="plan missing conv layer"):
         NetExecutor(spec, ws, truncated)
     # plan whose geometry disagrees with the spec (stale plan file)
-    bad_layer = dataclasses.replace(plan.layers[0], c_out=32)
+    bad_layer = dataclasses.replace(
+        plan.layers[0],
+        spec=dataclasses.replace(plan.layers[0].spec, c_out=32),
+    )
     stale = dataclasses.replace(
         plan, layers=(bad_layer,) + plan.layers[1:]
     )

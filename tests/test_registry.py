@@ -1,0 +1,255 @@
+"""The unified algorithm registry: ConvSpec -> plan/prepare/execute.
+
+Covers the api_redesign acceptance criteria: registry dispatch parity
+with `lax.conv_general_dilated` across stride/groups/non-square/bf16,
+ConvSpec + LayerPlan JSON round-trips with identical replans, wisdom-file
+R resolution in ``algo="auto"``, and the no-silent-drop `wt` contract.
+"""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.convnets import resnet_downsample, resnext_grouped
+from repro.convserve import (
+    NetExecutor,
+    NetPlan,
+    init_weights,
+    plan_layer,
+    plan_net,
+    run_direct,
+)
+from repro.core import analysis, conv2d, registry
+from repro.core.registry import AlgoPlan, ConvSpec
+from repro.convserve.plan import LayerPlan
+
+BIG_HW = analysis.HardwareModel(
+    name="big", peak_flops=1e12, dram_bw=1e11, fast_shared_bw=5e11,
+    fast_shared_bytes=1 << 30, private_bytes=1 << 24,
+)
+
+TRANSFORMED = ("three_stage", "l3_fused", "fft_fused", "l3_fused_pallas")
+
+
+def _lax_ref(x, w, pad, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def _rel(y, ref):
+    return float(jnp.abs(y - ref).max() / (jnp.abs(ref).max() + 1e-9))
+
+
+# ------------------------------------------------------------- registry
+
+
+def test_all_algorithms_registered():
+    names = registry.names()
+    for expected in ("direct",) + TRANSFORMED:
+        assert expected in names
+    with pytest.raises(ValueError, match="unknown algo"):
+        registry.get("warp_drive")
+
+
+def test_supports_capability_filtering():
+    plain = ConvSpec(h=16, w=16, c_in=8, c_out=8, k=3, pad=1)
+    assert set(registry.supporting(plain)) == set(registry.names())
+    grouped = dataclasses.replace(plain, groups=4)
+    assert registry.supporting(grouped) == ("direct",)
+
+
+def test_convspec_validation():
+    with pytest.raises(ValueError):
+        ConvSpec(h=16, w=16, c_in=6, c_out=8, k=3, groups=4)  # 6 % 4
+    with pytest.raises(ValueError):
+        ConvSpec(h=2, w=2, c_in=4, c_out=4, k=5, pad=0)  # kernel > input
+    with pytest.raises(ValueError):
+        ConvSpec(h=16, w=16, c_in=4, c_out=4, k=3, stride=0)
+
+
+def test_auto_resolution_prefers_fused_then_falls_back():
+    spec = ConvSpec(h=32, w=32, c_in=8, c_out=8, k=3, pad=1)
+    ap = registry.plan_conv(spec, BIG_HW, hints={"m": 5})
+    assert registry.get(ap.algo).tier == 0  # a fused path wins here
+    tiny = ConvSpec(h=4, w=4, c_in=8, c_out=8, k=3, pad=0)
+    ap = registry.plan_conv(tiny, BIG_HW, hints={"m": 5})
+    assert ap.algo == "direct"  # nothing can tile a 4x4/pad-0 input
+
+
+def test_explicit_unsupported_algo_raises():
+    grouped = ConvSpec(h=16, w=16, c_in=8, c_out=8, k=3, pad=1, groups=4)
+    with pytest.raises(ValueError, match="does not support"):
+        registry.plan_conv(grouped, BIG_HW, algo="l3_fused")
+
+
+# ----------------------------------------------- dispatch parity vs lax
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("algo", TRANSFORMED + ("auto",))
+def test_conv2d_strided_matches_lax(algo, stride):
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((2, 17, 12, 6)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 6, 8)), jnp.float32)
+    ref = _lax_ref(x, w, pad=1, stride=stride)
+    y = conv2d(x, w, pad=1, stride=stride, algo=algo, m=4, r_tiles=6)
+    assert y.shape == ref.shape
+    assert _rel(y, ref) < 5e-5, (algo, stride)
+
+
+@pytest.mark.parametrize("groups", [1, 4])
+def test_conv2d_grouped_matches_lax(groups):
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(rng.standard_normal((2, 14, 19, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 8 // groups, 16)), jnp.float32)
+    ref = _lax_ref(x, w, pad=1, groups=groups)
+    y = conv2d(x, w, pad=1, groups=groups, algo="auto")
+    assert _rel(y, ref) < 5e-5
+
+
+def test_conv2d_bf16():
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.standard_normal((1, 16, 16, 8)), jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal((3, 3, 8, 8)), jnp.bfloat16)
+    ref = _lax_ref(x, w, pad=1).astype(jnp.float32)
+    for algo in ("auto", "l3_fused", "direct"):
+        y = conv2d(x, w, pad=1, algo=algo, m=4, r_tiles=6)
+        assert y.shape == ref.shape
+        # bf16 has ~3 decimal digits; transformed paths accumulate more
+        assert _rel(y.astype(jnp.float32), ref) < 0.1, algo
+
+
+def test_conv2d_rejects_wt_for_nonconsuming_algo():
+    """Satellite fix: a supplied `wt` must never be silently dropped."""
+    rng = np.random.default_rng(14)
+    x = jnp.asarray(rng.standard_normal((1, 12, 12, 4)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 4, 4)), jnp.float32)
+    fake_wt = jnp.zeros((36, 4, 4), jnp.float32)
+    for algo in ("direct", "l3_fused_pallas"):
+        with pytest.raises(ValueError, match="pre-transformed"):
+            conv2d(x, w, pad=1, algo=algo, wt=fake_wt)
+    # and through the planned path too
+    spec = ConvSpec(h=12, w=12, c_in=4, c_out=4, k=3, pad=1)
+    lp = LayerPlan.from_algo_plan(
+        0, registry.plan_conv(spec, BIG_HW, algo="direct")
+    )
+    with pytest.raises(ValueError, match="pre-transformed"):
+        conv2d(x, w, plan=lp, wt=fake_wt)
+    # consuming algorithms do accept a (correct) precomputed wt
+    alg = registry.get("l3_fused")
+    ap = registry.plan_conv(spec, BIG_HW, algo="l3_fused", hints={"m": 4})
+    wt = alg.prepare_weights(w, ap)
+    y = conv2d(x, w, plan=ap, wt=wt)
+    assert _rel(y, _lax_ref(x, w, pad=1)) < 5e-5
+
+
+# ------------------------------------------------------- serialization
+
+
+def test_convspec_json_roundtrip():
+    spec = ConvSpec(
+        h=56, w=48, c_in=64, c_out=128, k=3, pad=1, stride=2, groups=2,
+        dtype="bfloat16",
+    )
+    again = ConvSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert again == spec
+
+
+def test_netplan_roundtrip_and_replan_identical():
+    """A shipped plan file must reload equal AND replan equal: the plan
+    is a pure function of (spec, hw, wisdom state)."""
+    spec = resnet_downsample(c_in=3)
+    plan = plan_net(spec, 32, 32, hw=analysis.SKYLAKE_X)
+    again = NetPlan.from_json(plan.to_json())
+    assert again == plan
+    assert plan_net(spec, 32, 32, hw=analysis.SKYLAKE_X) == plan
+    # params survive as algorithm-owned dicts
+    for p in again.layers:
+        assert isinstance(p.params, dict)
+        assert p.spec.stride in (1, 2)
+
+
+# ------------------------------------------------------- wisdom in auto
+
+
+def test_auto_resolves_r_through_wisdom_file(tmp_path, monkeypatch):
+    """Satellite fix: algo="auto" must use a tuned R when the wisdom file
+    has one for this geometry (the seed dispatcher always ran the default
+    R).  No measuring may happen at dispatch time."""
+    from repro.core import tune
+
+    spec = ConvSpec(h=32, w=32, c_in=8, c_out=8, k=3, pad=1)
+    path = tmp_path / "wisdom.json"
+    # without wisdom: the analytic prediction
+    ap = registry.plan_conv(spec, BIG_HW, hints={"m": 5}, wisdom_path=path)
+    assert ap.algo in ("l3_fused", "fft_fused")
+    assert not ap.tuned
+    # write a tuned entry for the winning wino geometry and replan
+    key = tune._key(32, 32, 8, 8, 3, 5)
+    path.write_text(json.dumps({key: 16}))
+    monkeypatch.setattr(
+        tune, "measure_r",
+        lambda *a, **k: (_ for _ in ()).throw(AssertionError("measured!")),
+    )
+    ap2 = registry.plan_conv(
+        spec, BIG_HW, algo="l3_fused", hints={"m": 5}, wisdom_path=path
+    )
+    assert ap2.params["r_tiles"] == 16
+    assert ap2.tuned
+    # the planner surfaces the same R without tune_r=True
+    lp = plan_layer(BIG_HW, 0, spec, consider_fft=False, wisdom_path=path)
+    assert lp.algo == "l3_fused"
+    assert lp.r_tiles == 16 and lp.tuned
+
+
+# --------------------------------------------- new-scenario end-to-end
+
+
+def test_stride2_net_plans_transformed_and_matches_direct():
+    """Acceptance: the stride-2 downsampling net must plan at least one
+    transformed-path layer and serve to fp32 tolerance vs the oracle."""
+    spec = resnet_downsample(c_in=3)
+    plan = plan_net(spec, 32, 32, hw=analysis.SKYLAKE_X)
+    tiers = [registry.get(a).tier for a in plan.algos()]
+    assert 0 in tiers or 1 in tiers  # transformed path planned
+    assert any(p.spec.stride == 2 and registry.get(p.algo).tier < 2
+               for p in plan.layers)
+    ws = init_weights(spec, seed=2)
+    ex = NetExecutor(spec, ws, plan)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((2, 32, 32, 3)) * 0.1, jnp.float32)
+    y = ex(x)
+    ref = run_direct(spec, ws, x)
+    assert y.shape == ref.shape
+    assert _rel(y, ref) < 1e-3, plan.algos()
+
+
+def test_grouped_net_plans_direct_fallback_and_matches():
+    spec = resnext_grouped(c_in=4, groups=4)
+    plan = plan_net(spec, 16, 16, hw=BIG_HW)
+    grouped_layers = [p for p in plan.layers if p.spec.groups > 1]
+    assert grouped_layers and all(p.algo == "direct" for p in grouped_layers)
+    ws = init_weights(spec, seed=4)
+    ex = NetExecutor(spec, ws, plan)
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.standard_normal((1, 16, 16, 4)) * 0.1, jnp.float32)
+    assert _rel(ex(x), run_direct(spec, ws, x)) < 1e-3
+
+
+def test_layerplan_properties_view_spec_and_params():
+    spec = ConvSpec(h=16, w=16, c_in=8, c_out=8, k=3, pad=1, stride=2)
+    lp = LayerPlan.from_algo_plan(
+        3, AlgoPlan("l3_fused", spec, {"m": 4, "r_tiles": 6})
+    )
+    assert (lp.h, lp.w, lp.c_in, lp.c_out, lp.k) == (16, 16, 8, 8, 3)
+    assert (lp.pad, lp.stride, lp.groups) == (1, 2, 1)
+    assert (lp.m, lp.r_tiles, lp.t_fft, lp.t) == (4, 6, None, 6)
+    assert LayerPlan.from_dict(lp.to_dict()) == lp
