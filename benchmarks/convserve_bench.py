@@ -1,22 +1,32 @@
-"""convserve engine benchmark: planned nets vs all-direct, cold vs warm.
+"""convserve engine benchmark: planned nets vs all-direct, cold vs warm,
+fused vs unfused -- with a machine-readable JSON artifact.
 
 Per net (the mixed-channel VGG and the stride-2 ResNet-style
-downsampling net), rows:
+downsampling net), CSV rows:
 
-  convserve/<net>/plan  -- plan_net wall time (pure roofline model)
-  convserve/<net>/cold  -- first wave: jit compile + kernel transforms
-  convserve/<net>/warm  -- steady-state per-image serving time, cache hot
-  convserve/<net>/direct-- the same net all-direct (vendor baseline)
+  convserve/<net>/plan    -- plan_net wall time (pure roofline model)
+  convserve/<net>/cold    -- first wave: jit compile + kernel transforms
+  convserve/<net>/warm    -- steady-state serving time, cache hot
+  convserve/<net>/unfused -- same plan with fusion groups stripped
+  convserve/<net>/direct  -- the same net all-direct (vendor baseline)
+  convserve/<net>/stage/* -- per-stage wall times (separately jitted)
+
+and everything lands in ``BENCH_convserve.json`` (per-net, per-stage
+wall times + cache hit rates) so the perf trajectory is tracked across
+PRs.
 
     PYTHONPATH=src python -m benchmarks.convserve_bench
 
 `smoke=True` (the CI path, `benchmarks.run --smoke`) runs the tiny test
-net at a tiny geometry: it exists to catch dispatcher regressions that
-only bite at execution time, not to produce meaningful numbers.
+net at a tiny geometry and asserts fused == unfused == direct numerical
+parity: it exists to catch dispatcher and fusion regressions that only
+bite at execution time, not to produce meaningful numbers.
 """
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -29,35 +39,46 @@ from repro.configs.convnets import (
     tiny_testnet,
     vgg_mixed_channel,
 )
-from repro.convserve import NetExecutor, init_weights, plan_net, run_direct
+from repro.convserve import Engine, init_weights, run_direct
 from repro.core import analysis
 
+BENCH_PATH = pathlib.Path("BENCH_convserve.json")
 
-def bench_net(spec, batch: int, side: int, c_in: int) -> None:
+
+def bench_net(spec, batch: int, side: int, c_in: int, record: dict) -> None:
     ws = init_weights(spec, seed=0)
     rng = np.random.default_rng(0)
     x = jnp.asarray(
         rng.standard_normal((batch, side, side, c_in)) * 0.1, jnp.float32
     )
+    engine = Engine(hw=analysis.SKYLAKE_X)
 
     t0 = time.perf_counter()
-    plan = plan_net(spec, side, side, hw=analysis.SKYLAKE_X)
+    net = engine.compile(spec, ws, input_hw=(side, side))
     t_plan = time.perf_counter() - t0
-    print(row(f"convserve/{spec.name}/plan", t_plan * 1e6,
-              ";".join(plan.algos())))
+    algos = ";".join(net.plan.algos())
+    print(row(f"convserve/{spec.name}/plan", t_plan * 1e6, algos))
 
-    ex = NetExecutor(spec, ws, plan)
     t0 = time.perf_counter()
-    jax.block_until_ready(ex(x))
+    jax.block_until_ready(net(x))
     t_cold = time.perf_counter() - t0
     print(row(f"convserve/{spec.name}/cold", t_cold * 1e6, f"batch{batch}"))
 
-    t_warm = time_fn(ex, x)
+    t_warm = time_fn(net, x)
+    cache = net.cache.stats()
     print(
         row(
             f"convserve/{spec.name}/warm", t_warm * 1e6,
-            f"{t_warm * 1e3 / batch:.1f}ms/img;"
-            f"hits{ex.cache.stats()['hits']}",
+            f"{t_warm * 1e3 / batch:.1f}ms/img;hits{cache['hits']}",
+        )
+    )
+
+    unfused = engine.compile(spec, ws, input_hw=(side, side), fuse=False)
+    t_unfused = time_fn(unfused, x)
+    print(
+        row(
+            f"convserve/{spec.name}/unfused", t_unfused * 1e6,
+            f"{net.program.n_fused}groups",
         )
     )
 
@@ -70,13 +91,72 @@ def bench_net(spec, batch: int, side: int, c_in: int) -> None:
         )
     )
 
+    stages = []
+    for label, secs in net.profile_stages(x):
+        print(row(f"convserve/{spec.name}/stage/{label}", secs * 1e6))
+        stages.append({"label": label, "us": secs * 1e6})
+
+    record[spec.name] = {
+        "algos": net.plan.algos(),
+        "fusion_groups": [list(g.layers) for g in net.plan.groups],
+        "plan_us": t_plan * 1e6,
+        "cold_us": t_cold * 1e6,
+        "warm_us": t_warm * 1e6,
+        "warm_us_per_img": t_warm * 1e6 / batch,
+        "unfused_warm_us": t_unfused * 1e6,
+        "direct_us": t_dir * 1e6,
+        "stages": stages,
+        "cache": net.cache.stats(),
+    }
+
+
+def _smoke(record: dict) -> None:
+    """Tiny geometry, full pipeline: a fused plan and its unfused strip
+    must agree with the direct oracle (fusion-group parity gate)."""
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=0)
+    engine = Engine(hw=analysis.SKYLAKE_X)
+    fused = engine.compile(spec, ws, input_hw=(16, 16))
+    unfused = engine.compile(spec, ws, input_hw=(16, 16), fuse=False)
+    # without this the parity gate is vacuous: a planner regression that
+    # stops fusing would compare two identical unfused programs
+    assert fused.program.n_fused >= 1, (
+        f"smoke net planned no fusion groups: {fused.describe()}"
+    )
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 16, 16, 4)) * 0.1, jnp.float32)
+    ref = run_direct(spec, ws, x)
+    scale = float(jnp.abs(ref).max())
+    rel_fused = float(jnp.abs(fused(x) - ref).max()) / scale
+    rel_pair = float(jnp.abs(fused(x) - unfused(x)).max()) / scale
+    print(row("convserve/smoke/fused_vs_direct", 0.0, f"rel{rel_fused:.2e}"))
+    print(row("convserve/smoke/fused_vs_unfused", 0.0, f"rel{rel_pair:.2e}"))
+    assert rel_fused < 1e-3, f"fused vs direct diverged: {rel_fused}"
+    assert rel_pair < 1e-4, f"fused vs unfused diverged: {rel_pair}"
+    record[spec.name] = {
+        "smoke": True,
+        "fused_vs_direct_rel": rel_fused,
+        "fused_vs_unfused_rel": rel_pair,
+        "fusion_groups": [list(g.layers) for g in fused.plan.groups],
+        "cache": fused.cache.stats(),
+    }
+
 
 def main(batch: int = 2, side: int = 64, smoke: bool = False) -> None:
-    if smoke:  # CI: tiny geometry, dispatcher correctness under time
-        bench_net(tiny_testnet(4), batch=1, side=16, c_in=4)
-        return
-    bench_net(vgg_mixed_channel(c_in=3), batch, side, c_in=3)
-    bench_net(resnet_downsample(c_in=3), batch, side, c_in=3)
+    record: dict = {}
+    if smoke:  # CI: tiny geometry, fusion parity under time pressure
+        _smoke(record)
+    else:
+        bench_net(vgg_mixed_channel(c_in=3), batch, side, c_in=3, record=record)
+        bench_net(resnet_downsample(c_in=3), batch, side, c_in=3, record=record)
+    BENCH_PATH.write_text(
+        json.dumps(
+            {"bench": "convserve", "smoke": smoke, "nets": record},
+            indent=1,
+            sort_keys=True,
+        )
+    )
+    print(f"# wrote {BENCH_PATH}")
 
 
 if __name__ == "__main__":

@@ -24,6 +24,11 @@ def main() -> None:
         "--only", default=None,
         help="comma list: fig2,fig3,analysis,r_sweep,lm,roofline,convserve",
     )
+    ap.add_argument(
+        "--bench-json", default=None, metavar="PATH",
+        help="where the convserve section writes its machine-readable "
+        "results (default: BENCH_convserve.json in the cwd)",
+    )
     args = ap.parse_args()
     batch = 1 if (args.quick or args.smoke) else 2
     if args.smoke and args.only is None:
@@ -61,8 +66,12 @@ def main() -> None:
 
         sections.append(("roofline table (dry-run)", roofline_report.main, ()))
     if want("convserve"):
+        import pathlib
+
         from benchmarks import convserve_bench
 
+        if args.bench_json:
+            convserve_bench.BENCH_PATH = pathlib.Path(args.bench_json)
         sections.append(
             (
                 "convserve engine (planned nets)",

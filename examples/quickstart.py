@@ -55,3 +55,19 @@ for c in (64, 128, 256, 512):
     print(f"{c:4d} channels on SkylakeX -> {choice}")
 print("TPU v5e CMR(HBM) =", round(an.TPU_V5E.cmr_dram), "(7x SkylakeX DRAM ->"
       " fusion matters more on TPU; see DESIGN.md S2)")
+
+# whole nets go through the Engine: compile once (plan -> staged
+# ExecProgram with cross-layer fusion groups), then serve.  Adjacent
+# small-channel convs collapse into one resident stage -- the paper's
+# L3-residency argument lifted to the net level.
+from repro.configs.convnets import vgg_mixed_channel
+from repro.convserve import Engine, init_weights
+
+spec = vgg_mixed_channel(c_in=3)
+net = Engine(hw=an.SKYLAKE_X).compile(
+    spec, init_weights(spec, seed=0), input_hw=(64, 64)
+)
+print(f"\n{spec.name} staged program ({net.program.n_fused} fusion groups):")
+print(net.describe())
+y = net(jnp.zeros((1, 64, 64, 3), jnp.float32))
+print(f"net out={tuple(y.shape)}  stats={net.stats()}")

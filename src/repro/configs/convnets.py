@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from typing import Sequence
 
-from repro.convserve.graph import NetSpec, conv, maxpool, relu
+from repro.convserve.graph import NetSpec, bias, conv, maxpool, relu
 
 
 def vgg_style(
@@ -19,13 +19,17 @@ def vgg_style(
     widths: Sequence[int],
     convs_per_stage: int = 2,
     k: int = 3,
+    with_bias: bool = False,
 ) -> NetSpec:
-    """Stages of `convs_per_stage` same-padded convs + ReLU, then 2x2 pool."""
+    """Stages of `convs_per_stage` same-padded convs (+ optional bias)
+    + ReLU, then 2x2 pool."""
     layers = []
     c = c_in
     for width in widths:
         for _ in range(convs_per_stage):
             layers.append(conv(c, width, k=k))
+            if with_bias:
+                layers.append(bias(width))
             layers.append(relu())
             c = width
         layers.append(maxpool(2))

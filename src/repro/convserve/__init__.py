@@ -1,23 +1,38 @@
 """convserve -- ConvNet inference engine over the paper's algorithms.
 
-Pipeline:  NetSpec --plan_net--> NetPlan --NetExecutor(+KernelCache)-->
-one jitted program per input bucket --ConvServer--> batched serving.
+Pipeline:  NetSpec --plan_net--> NetPlan (v3: layer plans + fusion
+groups) --program.lower--> ExecProgram (staged IR, cross-layer fusion
+groups) --Engine.compile--> CompiledNet --ConvServer--> batched serving.
 """
 
 from repro.core.registry import ConvSpec
 from repro.convserve.cache import KernelCache
+from repro.convserve.engine import CompiledNet, Engine
 from repro.convserve.executor import NetExecutor
 from repro.convserve.graph import (
     LayerSpec,
     NetSpec,
+    bias,
     conv,
     init_weights,
     maxpool,
     relu,
     run_direct,
 )
-from repro.convserve.plan import LayerPlan, NetPlan
-from repro.convserve.planner import plan_layer, plan_net
+from repro.convserve.plan import FusionGroup, LayerPlan, NetPlan
+from repro.convserve.planner import (
+    plan_fusion_groups,
+    plan_layer,
+    plan_net,
+    upgrade_plan,
+)
+from repro.convserve.program import (
+    EpilogueOp,
+    ExecProgram,
+    Stage,
+    StageUnit,
+    lower,
+)
 from repro.convserve.serving import ConvServeConfig, ConvServer, ImageRequest
 
 __all__ = [
@@ -25,14 +40,25 @@ __all__ = [
     "LayerSpec",
     "NetSpec",
     "conv",
+    "bias",
     "relu",
     "maxpool",
     "init_weights",
     "run_direct",
     "LayerPlan",
     "NetPlan",
+    "FusionGroup",
     "plan_layer",
     "plan_net",
+    "plan_fusion_groups",
+    "upgrade_plan",
+    "EpilogueOp",
+    "StageUnit",
+    "Stage",
+    "ExecProgram",
+    "lower",
+    "Engine",
+    "CompiledNet",
     "KernelCache",
     "NetExecutor",
     "ConvServer",

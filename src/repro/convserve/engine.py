@@ -1,0 +1,128 @@
+"""Public front-end: compile a net once, serve it everywhere.
+
+    engine = Engine(hw=...)                      # shared kernel cache
+    net = engine.compile(spec, weights)          # plan -> lower -> bind
+    y = net(batch)                               # CompiledNet is callable
+    net(batch, sizes)                            # ragged batches
+    net.save_plan("net.plan.json")               # ship the v3 plan
+
+`Engine.compile` owns the whole NetPlan -> ExecProgram lifecycle: it
+plans (or takes a pre-planned/loaded `NetPlan`, upgrading v2 files that
+carry no fusion groups), lowers to the staged IR, and binds weights and
+the engine-wide `KernelCache` into a `CompiledNet`.  `ConvServer` and
+the examples consume `CompiledNet` -- nothing outside this module needs
+to construct a `NetExecutor` (or interpret a plan dict) directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import analysis
+from repro.core import tune as tune_mod
+from repro.convserve.cache import KernelCache
+from repro.convserve.executor import NetExecutor
+from repro.convserve.graph import NetSpec
+from repro.convserve.plan import NetPlan
+from repro.convserve.planner import plan_net, upgrade_plan
+from repro.convserve.program import ExecProgram
+
+
+@dataclasses.dataclass
+class CompiledNet:
+    """A planned, lowered, weight-bound net ready to serve.
+
+    Callable: ``net(x, sizes=None)`` with NHWC batches.  The staged IR
+    is inspectable (`program`, `describe()`), the plan shippable
+    (`save_plan`), and the serving counters unified (`stats()`).
+    """
+
+    spec: NetSpec
+    plan: NetPlan
+    program: ExecProgram
+    executor: NetExecutor
+
+    def __call__(self, x, sizes=None):
+        return self.executor(x, sizes)
+
+    @property
+    def cache(self) -> KernelCache:
+        return self.executor.cache
+
+    @property
+    def compile_count(self) -> int:
+        return self.executor.compile_count
+
+    def describe(self) -> str:
+        return self.program.describe()
+
+    def save_plan(self, path) -> None:
+        self.plan.save(path)
+
+    def compiles_by_bucket(self) -> Dict[int, int]:
+        return self.executor.compiles_by_bucket()
+
+    def profile_stages(self, x, sizes=None) -> List[Tuple[str, float]]:
+        return self.executor.profile_stages(x, sizes)
+
+    def stats(self) -> dict:
+        return self.executor.stats()
+
+
+class Engine:
+    """Compiles nets against one hardware model and one shared kernel
+    cache (multiple nets -- or weight sets -- served side by side reuse
+    each other's transforms where fingerprints agree)."""
+
+    def __init__(
+        self,
+        *,
+        hw: Optional[analysis.HardwareModel] = None,
+        cache: Optional[KernelCache] = None,
+        dtype=jnp.float32,
+    ):
+        self.hw = hw or tune_mod.default_hw()
+        self.cache = cache if cache is not None else KernelCache()
+        self.dtype = jnp.dtype(dtype)
+
+    def compile(
+        self,
+        spec: NetSpec,
+        weights: Dict[int, jnp.ndarray],
+        *,
+        input_hw: Tuple[int, int] = (64, 64),
+        plan: Optional[NetPlan] = None,
+        fuse: bool = True,
+        **plan_kwargs,
+    ) -> CompiledNet:
+        """NetSpec (+ weights) -> CompiledNet.
+
+        Without `plan`, plans at reference `input_hw` on the engine's
+        hardware model.  With `plan` (e.g. loaded from a plan file), the
+        per-layer decisions are taken as-is; a v2-era plan with no
+        fusion groups is upgraded through the same roofline model first
+        (pass ``fuse=False`` to serve strictly layer-by-layer).
+        """
+        if plan is None:
+            plan = plan_net(
+                spec, input_hw[0], input_hw[1],
+                hw=self.hw, dtype=self.dtype.name, fuse=fuse, **plan_kwargs,
+            )
+        elif plan_kwargs:
+            raise ValueError(
+                f"plan_kwargs {sorted(plan_kwargs)} are planning knobs: "
+                "meaningless with an explicit `plan`"
+            )
+        elif fuse:
+            plan = upgrade_plan(spec, plan, self.hw)
+        else:
+            plan = dataclasses.replace(plan, groups=())
+        executor = NetExecutor(
+            spec, weights, plan, cache=self.cache, dtype=self.dtype
+        )
+        return CompiledNet(
+            spec=spec, plan=plan, program=executor.program, executor=executor
+        )

@@ -1,50 +1,107 @@
-"""Planned-net executor: one jitted program per input bucket.
+"""Planned-net executor: a thin driver over the `ExecProgram` IR.
 
-The whole net -- every conv in its planned algorithm plus the pointwise
-glue -- lowers as ONE XLA program per concrete input shape, so serving a
-bucket is a single dispatch.  Pre-transformed kernels come from the
+The net -- every stage in its planned algorithm plus the epilogue glue
+lowered into it -- runs as ONE XLA program per concrete input shape, so
+serving a bucket is a single dispatch.  The executor interprets nothing
+per layer: `program.lower` already resolved the net into stages, each
+stage's elementwise glue is folded into the owning algorithm's task loop
+(`Algorithm.fuse_epilogue`), and fusion-group stages run whole chains of
+convs through `Algorithm.execute_staged` without materializing the full
+intermediate activation.  Pre-transformed kernels come from the
 `KernelCache` and enter the program as arguments (not constants): a new
 bucket shape recompiles the program but reuses the cached transforms,
 and the cache counters are visible per-request because the fetch happens
-outside the jit boundary.  The executor never names an algorithm: which
-layers have cacheable transforms, and how each conv runs, is decided by
-the registry through the layer's plan.
+outside the jit boundary.
 
 Ragged batches: images smaller than their bucket ride in zero-padded.
 Zero padding alone is NOT enough for correctness -- the first conv writes
 nonzero values into the padded margin (its taps reach real pixels), and
 later same-padded convs bleed those back across the true-image edge.  So
-when per-sample extents are supplied, the executor re-zeroes everything
-beyond each sample's true extent after every conv (`sizes` is data, not
-shape: masking costs one compare+multiply and never recompiles).  With
-true dims divisible by the pool windows, pooling windows never straddle
-the mask edge, which makes the padded run exactly equal to running each
-image unpadded.
+when per-sample extents are supplied, every stage re-zeroes everything
+beyond each sample's true extent before handing to the next (`sizes` is
+data, not shape: masking costs one compare+multiply and never
+recompiles).  Inside a fusion group the intermediate masks are applied
+tile-position-aware (the epilogue callables carry the super-tile's row
+offset), so fused serving stays exact.  With true dims divisible by the
+pool windows, pooling windows never straddle the mask edge, which makes
+the padded run exactly equal to running each image unpadded.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+import time
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.conv import conv2d
+from repro.core import registry
 from repro.convserve.cache import KernelCache, weights_fingerprint
 from repro.convserve.graph import NetSpec
 from repro.convserve.plan import NetPlan
+from repro.convserve.program import EpilogueOp, ExecProgram, Stage, lower
 
 
-def _mask_to_extent(x: jnp.ndarray, hs: jnp.ndarray, ws: jnp.ndarray):
-    """Zero rows >= hs[b] and cols >= ws[b] of an NHWC batch."""
-    rows = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+def _mask_to_extent(
+    x: jnp.ndarray, hs: jnp.ndarray, ws: jnp.ndarray, row0: int = 0
+) -> jnp.ndarray:
+    """Zero rows >= hs[b] and cols >= ws[b] of an NHWC batch.  `row0` is
+    the global row offset of `x` when it is a super-tile of a larger
+    tensor (fusion-group interiors)."""
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
     cols = jax.lax.broadcasted_iota(jnp.int32, x.shape, 2)
     keep = (rows < hs[:, None, None, None]) & (cols < ws[:, None, None, None])
     return jnp.where(keep, x, jnp.zeros((), x.dtype))
 
 
+def _split_epilogue(
+    ops: Tuple[EpilogueOp, ...]
+) -> Tuple[Tuple[EpilogueOp, ...], Tuple[EpilogueOp, ...]]:
+    """(elementwise prefix, rest): the prefix folds into the algorithm's
+    task loop; pools (and anything after them) run on assembled output."""
+    for i, op in enumerate(ops):
+        if not op.elementwise:
+            return ops[:i], ops[i:]
+    return ops, ()
+
+
+class _Extent:
+    """Traced per-sample true extents (ragged batches), or inert when the
+    batch is dense.  Geometry updates mirror the ops applied."""
+
+    def __init__(self, hs, ws):
+        self.hs, self.ws = hs, ws
+
+    @property
+    def live(self) -> bool:
+        return self.hs is not None
+
+    def after_conv(self, spec) -> "_Extent":
+        if not self.live:
+            return self
+        return _Extent(
+            (self.hs + 2 * spec.pad - spec.k) // spec.stride + 1,
+            (self.ws + 2 * spec.pad - spec.k) // spec.stride + 1,
+        )
+
+    def after_pool(self, window: int) -> "_Extent":
+        if not self.live:
+            return self
+        return _Extent(self.hs // window, self.ws // window)
+
+    def mask(self, x, row0: int = 0):
+        return _mask_to_extent(x, self.hs, self.ws, row0) if self.live else x
+
+
+def _maxpool(x: jnp.ndarray, window: int) -> jnp.ndarray:
+    b, h, w, c = x.shape
+    v = window
+    return x.reshape(b, h // v, v, w // v, v, c).max(axis=(2, 4))
+
+
 class NetExecutor:
-    """Runs a `NetSpec` under a `NetPlan` with cached kernel transforms."""
+    """Runs a `NetSpec` lowered to an `ExecProgram` with cached kernel
+    transforms."""
 
     def __init__(
         self,
@@ -55,29 +112,12 @@ class NetExecutor:
         cache: Optional[KernelCache] = None,
         dtype=jnp.float32,
     ):
-        missing = [i for i, _ in spec.conv_layers() if i not in weights]
+        missing = [i for i, _ in spec.param_layers() if i not in weights]
         if missing:
-            raise ValueError(f"weights missing for conv layers {missing}")
-        if plan.net != spec.name:
-            raise ValueError(
-                f"plan is for net {plan.net!r}, spec is {spec.name!r}"
-            )
-        plans = {p.layer: p for p in plan.layers}
-        for i, layer in spec.conv_layers():
-            p = plans.get(i)
-            if p is None:
-                raise ValueError(f"plan missing conv layer {i}")
-            s = p.spec
-            got = (s.c_in, s.c_out, s.k, s.pad, s.stride, s.groups)
-            want = (
-                layer.c_in, layer.c_out, layer.k, layer.pad,
-                layer.stride, layer.groups,
-            )
-            if got != want:
-                raise ValueError(
-                    f"plan layer {i} geometry {got} != spec {want} "
-                    "(stale plan file?)"
-                )
+            raise ValueError(f"weights missing for parameter layers {missing}")
+        # lower() validates plan-vs-spec coverage, geometry, and the
+        # fusion groups' structural legality
+        self.program: ExecProgram = lower(spec, plan)
         self.spec = spec
         self.plan = plan
         self.dtype = jnp.dtype(dtype)
@@ -88,7 +128,7 @@ class NetExecutor:
         self._weights_fp = {
             i: weights_fingerprint(w) for i, w in self.weights.items()
         }
-        self._plans = plans
+        self._plans = {p.layer: p for p in plan.layers}
         self._compiled: Dict[tuple, object] = {}
 
     @property
@@ -96,32 +136,118 @@ class NetExecutor:
         """How many programs have been lowered (bounded by bucketing)."""
         return len(self._compiled)
 
-    def _forward(self, x, ws, wts, sizes):
-        if sizes is not None:
-            hs, wcols = sizes[:, 0], sizes[:, 1]
-            x = _mask_to_extent(x, hs, wcols)
-        for i, layer in enumerate(self.spec.layers):
-            if layer.kind == "conv":
-                x = conv2d(x, ws[i], plan=self._plans[i], wt=wts.get(i))
-                if sizes is not None:
-                    hs = (hs + 2 * layer.pad - layer.k) // layer.stride + 1
-                    wcols = (
-                        wcols + 2 * layer.pad - layer.k
-                    ) // layer.stride + 1
-                    x = _mask_to_extent(x, hs, wcols)
-            elif layer.kind == "relu":
-                x = jax.nn.relu(x)  # relu(0) == 0: the mask survives
-            elif layer.kind == "maxpool":
-                b, h, w, c = x.shape
-                v = layer.window
-                x = x.reshape(b, h // v, v, w // v, v, c).max(axis=(2, 4))
-                if sizes is not None:
-                    # true dims divide v (validated at admission), so no
-                    # window straddles the mask edge; masked stays masked
-                    hs, wcols = hs // v, wcols // v
+    def compiles_by_bucket(self) -> Dict[int, int]:
+        """Compiled-program count per spatial bucket (input H)."""
+        out: Dict[int, int] = {}
+        for shape, _ in self._compiled:
+            out[shape[1]] = out.get(shape[1], 0) + 1
+        return out
+
+    def stats(self) -> dict:
+        """Compile counts + kernel-cache counters, one dict -- the single
+        source the engine and serving front-ends extend."""
+        return {
+            "compiled_programs": self.compile_count,
+            "compiles_per_bucket": self.compiles_by_bucket(),
+            "cache": self.cache.stats(),
+        }
+
+    # ------------------------------------------------------ stage driver
+
+    def _elementwise_fn(self, ops: Tuple[EpilogueOp, ...], ws):
+        """Fold bias/relu ops into one callable (None when empty)."""
+        if not ops:
+            return None
+
+        def run(y):
+            for op in ops:
+                if op.kind == "bias":
+                    y = y + ws[op.layer]
+                else:  # relu
+                    y = jax.nn.relu(y)
+            return y
+
+        return run
+
+    def _apply_tail(
+        self, x, ops: Tuple[EpilogueOp, ...], ext: _Extent, ws
+    ) -> Tuple[jnp.ndarray, _Extent]:
+        """Pools and any post-pool elementwise ops, on assembled output.
+        True dims divide the pool windows (validated at admission), so no
+        window straddles the mask edge; masked stays masked garbage-free
+        after the end-of-stage re-mask."""
+        for op in ops:
+            if op.kind == "maxpool":
+                x = _maxpool(x, op.window)
+                ext = ext.after_pool(op.window)
+            elif op.kind == "bias":
+                x = x + ws[op.layer]
             else:
-                raise AssertionError(layer.kind)
+                x = jax.nn.relu(x)
+        return x, ext
+
+    def _run_single(self, stage: Stage, x, ws, wts, ext: _Extent):
+        u = stage.units[0]
+        aplan = u.plan.algo_plan()
+        alg = registry.get(aplan.algo)
+        pre, tail = _split_epilogue(u.epilogue)
+        runner = alg.fuse_epilogue(aplan, self._elementwise_fn(pre, ws))
+        x = runner(x, ws[u.layer], wts.get(u.layer))
+        ext = ext.after_conv(aplan.spec)
+        x, ext = self._apply_tail(x, tail, ext, ws)
+        return ext.mask(x), ext
+
+    def _run_fused(self, stage: Stage, x, ws, wts, ext: _Extent):
+        chain: List[registry.ChainLink] = []
+        cur = ext
+        tail_ops: Tuple[EpilogueOp, ...] = ()
+        for j, u in enumerate(stage.units):
+            aplan = u.plan.algo_plan()
+            nxt = cur.after_conv(aplan.spec)
+            last = j == len(stage.units) - 1
+            pre, tail = _split_epilogue(u.epilogue)
+            ew = self._elementwise_fn(pre, ws)
+            if last:
+                tail_ops = tail
+                epi = None if ew is None else (
+                    lambda y, row0, _f=ew: _f(y)
+                )
+            else:
+                # interior epilogue: elementwise glue then the extent
+                # re-mask, tile-position-aware so the next conv of the
+                # chain never taps across a true-image edge
+                epi = (
+                    lambda y, row0, _f=ew, _e=nxt: _e.mask(
+                        y if _f is None else _f(y), row0
+                    )
+                )
+            chain.append(
+                registry.ChainLink(
+                    w=ws[u.layer], wt=wts.get(u.layer), plan=aplan,
+                    epilogue=epi,
+                )
+            )
+            cur = nxt
+        alg = registry.get(stage.units[0].plan.algo)
+        x = alg.execute_staged(x, chain, tile_rows=stage.tile_rows)
+        x, cur = self._apply_tail(x, tail_ops, cur, ws)
+        return cur.mask(x), cur
+
+    def _forward(self, x, ws, wts, sizes):
+        ext = _Extent(
+            sizes[:, 0] if sizes is not None else None,
+            sizes[:, 1] if sizes is not None else None,
+        )
+        x = ext.mask(x)
+        if self.program.prologue:
+            x, ext = self._apply_tail(x, self.program.prologue, ext, ws)
+            x = ext.mask(x)
+        for stage in self.program.stages:
+            run = self._run_fused if stage.fused else self._run_single
+            x, ext = run(stage, x, ws, wts, ext)
         return x
+
+    # -------------------------------------------------------- public API
 
     def _fetch_transforms(self) -> Dict[int, jnp.ndarray]:
         """Per-request cache fetch: first request per layer transforms and
@@ -138,19 +264,9 @@ class NetExecutor:
                 wts[i] = wt
         return wts
 
-    def __call__(
-        self, x: jnp.ndarray, sizes: Optional[jnp.ndarray] = None
-    ) -> jnp.ndarray:
-        """Run one batch.
-
-        x: (B, H, W, C); defines the bucket.  sizes: optional (B, 2) int32
-        true (h, w) per sample for ragged batches -- samples are zeroed
-        beyond their true extent after every conv so padded serving is
-        exact (see module docstring).
-        """
+    def _validate_call(self, x, sizes):
         if x.ndim != 4:
             raise ValueError(f"expected NHWC input, got shape {x.shape}")
-        x = jnp.asarray(x, self.dtype)
         self.spec.infer_shapes(x.shape[1], x.shape[2], x.shape[3])  # validate
         if sizes is not None:
             sizes = jnp.asarray(sizes, jnp.int32)
@@ -158,6 +274,20 @@ class NetExecutor:
                 raise ValueError(
                     f"sizes shape {sizes.shape} != ({x.shape[0]}, 2)"
                 )
+        return sizes
+
+    def __call__(
+        self, x: jnp.ndarray, sizes: Optional[jnp.ndarray] = None
+    ) -> jnp.ndarray:
+        """Run one batch.
+
+        x: (B, H, W, C); defines the bucket.  sizes: optional (B, 2) int32
+        true (h, w) per sample for ragged batches -- samples are zeroed
+        beyond their true extent stage by stage so padded serving is
+        exact (see module docstring).
+        """
+        x = jnp.asarray(x, self.dtype)
+        sizes = self._validate_call(x, sizes)
         wts = self._fetch_transforms()
         key = (tuple(x.shape), sizes is not None)
         fn = self._compiled.get(key)
@@ -165,3 +295,48 @@ class NetExecutor:
             fn = jax.jit(self._forward)
             self._compiled[key] = fn
         return fn(x, self.weights, wts, sizes)
+
+    def profile_stages(
+        self, x: jnp.ndarray, sizes: Optional[jnp.ndarray] = None
+    ) -> List[Tuple[str, float]]:
+        """Per-stage wall times (seconds), each stage jitted and timed
+        separately -- the benchmark surface; serving always runs the
+        whole net as one program."""
+        x = jnp.asarray(x, self.dtype)
+        sizes = self._validate_call(x, sizes)
+        wts = self._fetch_transforms()
+        b_h, b_w, b_c = int(x.shape[1]), int(x.shape[2]), int(x.shape[3])
+        ext0 = _Extent(
+            sizes[:, 0] if sizes is not None else None,
+            sizes[:, 1] if sizes is not None else None,
+        )
+        x = ext0.mask(x)
+        if self.program.prologue:  # mirror _forward: pre-conv glue first
+            x, ext0 = self._apply_tail(
+                x, self.program.prologue, ext0, self.weights
+            )
+            x = ext0.mask(x)
+        x = jax.block_until_ready(x)
+        rows: List[Tuple[str, float]] = []
+        for stage in self.program.stages:
+            run = self._run_fused if stage.fused else self._run_single
+
+            def step(x, ws, wts, hs, ws_cols, _run=run, _stage=stage):
+                y, ext = _run(_stage, x, ws, wts, _Extent(hs, ws_cols))
+                return y, ext.hs, ext.ws
+
+            fn = jax.jit(step)
+            args = (x, self.weights, wts, ext0.hs, ext0.ws)
+            jax.block_until_ready(fn(*args))  # compile outside the timing
+            t0 = time.perf_counter()
+            y, hs, ws_cols = fn(*args)
+            x = jax.block_until_ready(y)
+            rows.append((stage.label, time.perf_counter() - t0))
+            ext0 = _Extent(hs, ws_cols)
+        want = self.spec.out_shape(b_h, b_w, b_c)
+        if tuple(x.shape[1:]) != want:
+            raise AssertionError(
+                f"profiled stage chain produced {tuple(x.shape[1:])}, net "
+                f"expects {want} -- stage driver out of sync with _forward"
+            )
+        return rows

@@ -21,7 +21,7 @@ from repro.core.registry import ConvSpec
 
 @dataclasses.dataclass(frozen=True)
 class LayerSpec:
-    """One layer.  kind: "conv" | "relu" | "maxpool"."""
+    """One layer.  kind: "conv" | "bias" | "relu" | "maxpool"."""
 
     kind: str
     c_in: int = 0
@@ -51,6 +51,12 @@ def conv(
     )
 
 
+def bias(c: int) -> LayerSpec:
+    """Per-channel bias add; owns a (C,) weight vector like convs own
+    kernels (the classic conv+bias+relu epilogue of inference graphs)."""
+    return LayerSpec(kind="bias", c_in=c, c_out=c)
+
+
 def relu() -> LayerSpec:
     return LayerSpec(kind="relu")
 
@@ -69,6 +75,14 @@ class NetSpec:
     def conv_layers(self) -> List[Tuple[int, LayerSpec]]:
         return [(i, l) for i, l in enumerate(self.layers) if l.kind == "conv"]
 
+    def param_layers(self) -> List[Tuple[int, LayerSpec]]:
+        """Layers that own weights: convs (HWIO kernels) + biases ((C,))."""
+        return [
+            (i, l)
+            for i, l in enumerate(self.layers)
+            if l.kind in ("conv", "bias")
+        ]
+
     @property
     def pool_factor(self) -> int:
         """Product of pooling windows: input dims must divide this for the
@@ -77,6 +91,21 @@ class NetSpec:
         for l in self.layers:
             if l.kind == "maxpool":
                 f *= l.window
+        return f
+
+    @property
+    def downsample_factor(self) -> int:
+        """The net's total spatial downsampling: pooling windows AND conv
+        strides.  Serving buckets must survive this whole chain -- a
+        stride-2 net halves extents before its pools ever see them, so
+        validating against `pool_factor` alone admits buckets that break
+        at runtime."""
+        f = 1
+        for l in self.layers:
+            if l.kind == "maxpool":
+                f *= l.window
+            elif l.kind == "conv":
+                f *= l.stride
         return f
 
     def infer_shapes(self, h: int, w: int, c: int) -> List[Tuple[int, int, int]]:
@@ -105,6 +134,11 @@ class NetSpec:
                         f"({h}, {w})"
                     )
                 h, w = h // l.window, w // l.window
+            elif l.kind == "bias":
+                if l.c_in != c:
+                    raise ValueError(
+                        f"layer {i}: bias expects C={l.c_in}, got {c}"
+                    )
             elif l.kind != "relu":
                 raise ValueError(f"layer {i}: unknown kind {l.kind!r}")
             shapes.append((h, w, c))
@@ -127,16 +161,20 @@ class NetSpec:
 def init_weights(
     spec: NetSpec, seed: int = 0, dtype=jnp.float32, scale: float = 0.05
 ) -> Dict[int, jnp.ndarray]:
-    """HWIO kernels for every conv layer, keyed by layer index."""
+    """Weights for every parameter layer, keyed by layer index: HWIO
+    kernels for convs, (C,) vectors for biases."""
     rng = np.random.default_rng(seed)
     ws: Dict[int, jnp.ndarray] = {}
-    for i, l in spec.conv_layers():
-        # HWIO with grouping: the kernel sees C/groups input channels
-        ws[i] = jnp.asarray(
-            rng.standard_normal((l.k, l.k, l.c_in // l.groups, l.c_out))
-            * scale,
-            dtype,
-        )
+    for i, l in spec.param_layers():
+        if l.kind == "bias":
+            ws[i] = jnp.asarray(rng.standard_normal((l.c_in,)) * scale, dtype)
+        else:
+            # HWIO with grouping: the kernel sees C/groups input channels
+            ws[i] = jnp.asarray(
+                rng.standard_normal((l.k, l.k, l.c_in // l.groups, l.c_out))
+                * scale,
+                dtype,
+            )
     return ws
 
 
@@ -154,6 +192,8 @@ def run_direct(
                 x, weights[i],
                 pad=layer.pad, stride=layer.stride, groups=layer.groups,
             )
+        elif layer.kind == "bias":
+            x = x + weights[i]
         elif layer.kind == "relu":
             x = jax.nn.relu(x)
         elif layer.kind == "maxpool":

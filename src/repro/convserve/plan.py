@@ -9,6 +9,13 @@ without re-planning (or re-measuring).
 A `LayerPlan` is exactly `ConvSpec + algorithm name + algorithm-owned
 params`: nothing in this module (or the cache/executor that consume it)
 interprets the params -- only the owning registry algorithm does.
+
+Plan format v3 adds `FusionGroup`s: the planner's cross-layer decisions
+(which adjacent convs execute as one resident stage, and the super-tile
+row count bounding the live intermediate).  v2 files still load --
+their groups are empty, and `planner.upgrade_plan` re-derives them from
+the same roofline model (see `convserve.program` for the staged IR the
+executor lowers a NetPlan into).
 """
 
 from __future__ import annotations
@@ -21,7 +28,8 @@ from typing import Any, Dict, Optional, Tuple
 from repro.core import registry
 from repro.core.registry import AlgoPlan, ConvSpec
 
-PLAN_VERSION = 2
+PLAN_VERSION = 3
+_READABLE_VERSIONS = (2, 3)  # v2: per-layer only, no fusion groups
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,14 +148,44 @@ class LayerPlan:
 
 
 @dataclasses.dataclass(frozen=True)
+class FusionGroup:
+    """One cross-layer fusion decision: the conv layers (NetSpec indices,
+    adjacent in conv order) that execute as a single resident stage, and
+    the super-tile row count that bounds the live intermediate (0 means
+    untiled -- the whole extent fits the fast shared level)."""
+
+    layers: Tuple[int, ...]
+    tile_rows: int = 0
+
+    def __post_init__(self):
+        if len(self.layers) < 2:
+            raise ValueError(
+                f"fusion group needs >= 2 conv layers, got {self.layers}"
+            )
+        if self.tile_rows < 0:
+            raise ValueError(f"negative tile_rows in {self}")
+
+    def to_dict(self) -> dict:
+        return {"layers": list(self.layers), "tile_rows": self.tile_rows}
+
+    @staticmethod
+    def from_dict(d: dict) -> "FusionGroup":
+        return FusionGroup(
+            layers=tuple(d["layers"]), tile_rows=d.get("tile_rows", 0)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class NetPlan:
-    """All layer plans for one net on one hardware model."""
+    """All layer plans (and fusion groups) for one net on one hardware
+    model."""
 
     net: str  # NetSpec.name
     hw: str  # HardwareModel.name the plan was derived for
     dtype: str
     input_hw: Tuple[int, int]  # reference (H, W) the plan was derived at
     layers: Tuple[LayerPlan, ...]
+    groups: Tuple[FusionGroup, ...] = ()
 
     def layer_plan(self, idx: int) -> Optional[LayerPlan]:
         for p in self.layers:
@@ -158,6 +196,12 @@ class NetPlan:
     def algos(self) -> Tuple[str, ...]:
         return tuple(p.algo for p in self.layers)
 
+    def group_of(self, idx: int) -> Optional[FusionGroup]:
+        for g in self.groups:
+            if idx in g.layers:
+                return g
+        return None
+
     def to_json(self) -> str:
         return json.dumps(
             {
@@ -167,6 +211,7 @@ class NetPlan:
                 "dtype": self.dtype,
                 "input_hw": list(self.input_hw),
                 "layers": [p.to_dict() for p in self.layers],
+                "groups": [g.to_dict() for g in self.groups],
             },
             indent=1,
             sort_keys=True,
@@ -175,14 +220,24 @@ class NetPlan:
     @staticmethod
     def from_json(text: str) -> "NetPlan":
         d = json.loads(text)
-        if d.get("version") != PLAN_VERSION:
-            raise ValueError(f"plan version {d.get('version')} != {PLAN_VERSION}")
+        version = d.get("version")
+        if version not in _READABLE_VERSIONS:
+            raise ValueError(
+                f"plan version {version} not in {_READABLE_VERSIONS}"
+            )
+        # v2 carries no fusion decisions: load with empty groups; callers
+        # that want them re-derive via planner.upgrade_plan (same roofline
+        # model, so a v2 plan replans identically)
+        groups = tuple(
+            FusionGroup.from_dict(g) for g in d.get("groups", ())
+        )
         return NetPlan(
             net=d["net"],
             hw=d["hw"],
             dtype=d["dtype"],
             input_hw=tuple(d["input_hw"]),
             layers=tuple(LayerPlan.from_dict(l) for l in d["layers"]),
+            groups=groups,
         )
 
     def save(self, path) -> None:

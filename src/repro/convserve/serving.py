@@ -19,8 +19,6 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
-from repro.convserve.executor import NetExecutor
-
 
 @dataclasses.dataclass
 class ImageRequest:
@@ -31,19 +29,36 @@ class ImageRequest:
 @dataclasses.dataclass
 class ConvServeConfig:
     max_batch: int = 8
-    # spatial buckets (square); must be multiples of the net's pool factor.
+    # spatial buckets (square); every bucket must survive the net's whole
+    # downsampling chain (pool windows AND conv strides -- validated by
+    # simulating the shape pipeline at server construction).
     buckets: Sequence[int] = (32, 64, 128, 224)
     pad_batch: bool = True  # round wave sizes up to a power of two
 
 
 class ConvServer:
-    def __init__(self, executor: NetExecutor, cfg: ConvServeConfig):
-        pf = executor.spec.pool_factor
-        bad = [b for b in cfg.buckets if b % pf]
-        if bad:
-            raise ValueError(
-                f"buckets {bad} not divisible by pool factor {pf}"
-            )
+    """Serves a compiled net (`engine.CompiledNet`, or a bare
+    `NetExecutor`) in bucketed waves."""
+
+    def __init__(self, executor, cfg: ConvServeConfig):
+        spec = executor.spec
+        convs = spec.conv_layers()
+        if not convs:
+            raise ValueError(f"net {spec.name!r} has no conv layers")
+        c0 = convs[0][1].c_in
+        # a bucket must survive the true total downsampling factor --
+        # stride-2 convs halve extents before pools ever see them, so a
+        # pool-factor modulo check admits buckets that die at runtime;
+        # simulate the exact shape chain instead
+        for b in cfg.buckets:
+            try:
+                spec.infer_shapes(b, b, c0)
+            except ValueError as e:
+                raise ValueError(
+                    f"bucket {b} does not survive net {spec.name!r}'s "
+                    f"downsampling chain (total factor "
+                    f"{spec.downsample_factor}): {e}"
+                ) from None
         self.executor = executor
         self.cfg = cfg
         self.waves_served = 0
@@ -106,7 +121,7 @@ class ConvServer:
         return out
 
     def stats(self) -> dict:
-        s = dict(self.executor.cache.stats())
-        s["waves"] = self.waves_served
-        s["compiled_buckets"] = self.executor.compile_count
-        return s
+        """One dict for the serving counters that used to be scattered
+        across executor/cache internals: waves served, per-bucket compile
+        counts, and the kernel-cache hit/miss accounting."""
+        return {"waves": self.waves_served, **self.executor.stats()}

@@ -84,6 +84,7 @@ class FFTFusedAlgorithm(registry.Algorithm):
     rank = 20
     consumes_wt = True
     weight_params = ("t_fft",)
+    chain_family = "fft"
     default_t = 16  # the paper: T >= 16 works well for FFT
 
     def supports(self, spec: registry.ConvSpec) -> bool:

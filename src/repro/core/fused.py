@@ -66,6 +66,7 @@ def conv2d_l3_fused(
     m: Optional[int] = None,
     r_tiles: int = 24,
     wt: Optional[jnp.ndarray] = None,
+    epilogue=None,
 ) -> jnp.ndarray:
     """NHWC L3-fused transformed convolution.
 
@@ -77,6 +78,10 @@ def conv2d_l3_fused(
          the paper's benchmark configuration.
       r_tiles: R, tiles per task (paper uses R=24 on SkylakeX, R=8 on i7).
       wt: pre-transformed kernels (T*T, C, C') -- the inference-time path.
+      epilogue: optional elementwise callable applied to each task's
+        output tiles inside the scan (bias/relu glue running on
+        task-resident data); output tiles abut, so this equals applying
+        it to the assembled output.
     """
     k = w.shape[0]
     m = m if m is not None else 5  # T = 7, the paper's fixed benchmark config
@@ -114,6 +119,8 @@ def conv2d_l3_fused(
         # step 3: inverse transform
         z = mm.reshape(t, t, r, c_out)
         y = jnp.einsum("xi,ijrc,yj->rxyc", at, z, at)  # (R, T', T', C')
+        if epilogue is not None:
+            y = epilogue(y)
         return carry_out_tiles, y
 
     _, y_tiles = jax.lax.scan(
@@ -200,6 +207,7 @@ class L3FusedAlgorithm(registry.Algorithm):
     rank = 10
     consumes_wt = True
     weight_params = ("m",)
+    chain_family = "winograd"
     default_m = 5  # T = 7, the paper's benchmark configuration
 
     def supports(self, spec: registry.ConvSpec) -> bool:
@@ -223,6 +231,20 @@ class L3FusedAlgorithm(registry.Algorithm):
             r_tiles=plan.params.get("r_tiles", 24), wt=wt,
         )
         return registry.decimate(y, plan.spec.stride)
+
+    def fuse_epilogue(self, plan, epilogue):
+        # fold the elementwise glue into the task scan: it runs on the
+        # (R, T', T', C') tiles while they are still task-resident,
+        # instead of as a separate pass over the assembled output
+        def run(x, w, wt):
+            y = conv2d_l3_fused(
+                x, w, pad=plan.spec.pad, m=plan.params.get("m"),
+                r_tiles=plan.params.get("r_tiles", 24), wt=wt,
+                epilogue=epilogue,
+            )
+            return registry.decimate(y, plan.spec.stride)
+
+        return run
 
 
 registry.register(L3FusedAlgorithm())

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
@@ -168,6 +168,31 @@ def decimate(y: jnp.ndarray, stride: int) -> jnp.ndarray:
 # -------------------------------------------------------------- Algorithm
 
 
+@dataclasses.dataclass(frozen=True)
+class ChainLink:
+    """One conv of a fusion-group chain, as `execute_staged` consumes it.
+
+    `epilogue` is the executor-owned pointwise glue of this conv (bias,
+    relu, intermediate extent mask): a callable ``(y, row0) -> y`` where
+    `row0` is the global output-row offset of the region being computed
+    -- tile-position-aware so ragged-batch masking stays exact inside a
+    fused stage.  None means no glue.
+    """
+
+    w: Optional[jnp.ndarray]
+    wt: Optional[jnp.ndarray]
+    plan: "AlgoPlan"
+    epilogue: Optional[Callable[[jnp.ndarray, int], jnp.ndarray]] = None
+
+
+def _pad0_plan(plan: "AlgoPlan", h: int, w: int) -> "AlgoPlan":
+    """A plan for executing the same conv on an already-row/col-extended
+    slice: pad folded into the slice, spec re-posed at the slice dims."""
+    return dataclasses.replace(
+        plan, spec=dataclasses.replace(plan.spec, pad=0, h=h, w=w)
+    )
+
+
 class Algorithm:
     """Base class: one convolution realization.
 
@@ -185,6 +210,10 @@ class Algorithm:
       auto_candidate False for explicit-only algorithms (the Pallas
                      kernel: correct everywhere via interpret mode, but
                      only profitable on its native backend).
+      chain_family   transform-tiling family for cross-layer fusion
+                     groups; None means this algorithm never chains (the
+                     3-stage baseline *is* the materializing structure,
+                     direct has nothing to keep resident).
     """
 
     name: str = ""
@@ -193,6 +222,7 @@ class Algorithm:
     consumes_wt: bool = False
     weight_params: Tuple[str, ...] = ()
     auto_candidate: bool = True
+    chain_family: Optional[str] = None
 
     def supports(self, spec: ConvSpec) -> bool:
         """Correctness domain: can this algorithm compute `spec` at all?"""
@@ -231,6 +261,128 @@ class Algorithm:
         """The params subtuple that identifies `prepare_weights` output
         (cache key component).  R never fragments the cache."""
         return tuple((p, params.get(p)) for p in self.weight_params)
+
+    # ----- cross-layer fusion hooks (the ExecProgram staged contract)
+
+    def can_chain(self, plan_a: "AlgoPlan", plan_b: "AlgoPlan") -> bool:
+        """May a conv planned as `plan_a` (this algorithm) and the next
+        conv planned as `plan_b` execute as one fusion-group stage?
+
+        The default demands a shared tiling family and the geometry the
+        generic `execute_staged` supports: unit stride and ungrouped
+        channels on both sides.  Whether fusing *pays* (saved
+        intermediate traffic vs halo recompute) is the planner's
+        roofline call, not a capability question.
+        """
+        if self.chain_family is None:
+            return False
+        other = get(plan_b.algo)
+        if other.chain_family != self.chain_family:
+            return False
+        for p in (plan_a, plan_b):
+            if p.spec.stride != 1 or p.spec.groups != 1:
+                return False
+        return True
+
+    def fuse_epilogue(
+        self,
+        plan: "AlgoPlan",
+        epilogue: Optional[Callable[[jnp.ndarray], jnp.ndarray]],
+    ) -> Callable:
+        """Return ``(x, w, wt) -> y`` running this conv with the
+        elementwise `epilogue` (bias/relu) folded in.  The base applies
+        it after `execute`; fused algorithms override to fold it into
+        their task loop so the glue runs on tile-resident data."""
+        if epilogue is None:
+            return lambda x, w, wt: self.execute(x, w, wt, plan)
+        return lambda x, w, wt: epilogue(self.execute(x, w, wt, plan))
+
+    def execute_staged(
+        self,
+        x: jnp.ndarray,
+        chain: Sequence[ChainLink],
+        *,
+        tile_rows: int,
+    ) -> jnp.ndarray:
+        """Run a fusion-group chain of stride-1 convs over row super-tiles.
+
+        The group's full intermediate activations are never materialized:
+        each super-tile flows conv -> epilogue -> conv with a (K-1)-row
+        halo recomputed at tile seams, so the live intermediate is
+        bounded by `tile_rows` x W x C -- sized by the planner to stay
+        resident in the fast shared level.  Borders are exact: each
+        conv's zero padding is applied per-slice, and rows a tile needs
+        beyond a true tensor extent are re-zeroed rather than reusing
+        phantom values computed from padding.
+
+        Generic over any registered algorithm whose `execute` honours
+        `plan.spec` pad at runtime shapes; overriding makes sense only
+        for backends that fuse deeper than slice recompute.
+        """
+        convs = list(chain)
+        if not convs:
+            raise ValueError("empty fusion-group chain")
+        heights = [int(x.shape[1])]
+        widths = [int(x.shape[2])]
+        for link in convs:
+            s = link.plan.spec
+            if s.stride != 1 or s.groups != 1:
+                raise ValueError(
+                    f"execute_staged supports stride-1 ungrouped chains, "
+                    f"got {s}"
+                )
+            heights.append(heights[-1] + 2 * s.pad - s.k + 1)
+            widths.append(widths[-1] + 2 * s.pad - s.k + 1)
+        h_final = heights[-1]
+        tile_rows = int(tile_rows) if tile_rows > 0 else h_final
+        out_tiles = []
+        a = 0
+        while a < h_final:
+            b = min(a + tile_rows, h_final)
+            # receptive-field pass: rows of each level this tile needs
+            req = [(a, b)]
+            for link in reversed(convs):
+                s = link.plan.spec
+                lo, hi = req[0]
+                req.insert(0, (lo - s.pad, hi - s.pad + s.k - 1))
+            lo0, hi0 = max(req[0][0], 0), min(req[0][1], heights[0])
+            t = x[:, lo0:hi0]
+            have = (lo0, hi0)  # rows of `t` in level-0 coordinates
+            for i, link in enumerate(convs):
+                s = link.plan.spec
+                want_lo, want_hi = req[i]
+                # conv padding: requested rows beyond the level's true
+                # extent, plus full-width column padding (tiles span W)
+                t = jnp.pad(
+                    t,
+                    (
+                        (0, 0),
+                        (have[0] - want_lo, want_hi - have[1]),
+                        (s.pad, s.pad),
+                        (0, 0),
+                    ),
+                )
+                alg = get(link.plan.algo)
+                y = alg.execute(
+                    t, link.w, link.wt,
+                    _pad0_plan(link.plan, int(t.shape[1]), int(t.shape[2])),
+                )
+                out_lo, out_hi = req[i + 1]
+                clo = max(out_lo, 0)
+                chi = min(out_hi, heights[i + 1])
+                # drop phantom rows computed from padding beyond the true
+                # extent -- the next conv re-zeroes them as *its* padding
+                t = y[:, clo - out_lo : int(y.shape[1]) - (out_hi - chi)]
+                if link.epilogue is not None:
+                    t = link.epilogue(t, clo)
+                have = (clo, chi)
+            out_tiles.append(t)
+            a = b
+        return (
+            out_tiles[0]
+            if len(out_tiles) == 1
+            else jnp.concatenate(out_tiles, axis=1)
+        )
 
 
 # --------------------------------------------------------------- registry

@@ -78,6 +78,7 @@ class L3FusedPallasAlgorithm(registry.Algorithm):
     rank = 15
     consumes_wt = False
     auto_candidate = False
+    chain_family = "winograd"  # chains with the pure-JAX Winograd path
     default_m = 5
 
     def supports(self, spec: registry.ConvSpec) -> bool:

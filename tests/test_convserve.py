@@ -342,12 +342,16 @@ def test_server_second_request_hits_kernel_cache():
     img = rng.standard_normal((16, 16, 4)).astype(np.float32)
     srv.run([ImageRequest(0, img)])
     first = srv.stats()
-    assert first["misses"] == 4 and first["hits"] == 0
+    assert first["cache"]["misses"] == 4 and first["cache"]["hits"] == 0
+    assert first["waves"] == 1
     srv.run([ImageRequest(1, img)])
     second = srv.stats()
-    assert second["misses"] == 4  # nothing re-transformed
-    assert second["hits"] == 4
-    assert second["compiled_buckets"] == 1  # same bucket, no recompile
+    assert second["cache"]["misses"] == 4  # nothing re-transformed
+    assert second["cache"]["hits"] == 4
+    assert second["waves"] == 2
+    # same bucket, no recompile -- and the count is reported per bucket
+    assert second["compiled_programs"] == 1
+    assert second["compiles_per_bucket"] == {16: 1}
 
 
 def test_server_bounded_compilation_across_traffic():

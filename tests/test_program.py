@@ -1,0 +1,384 @@
+"""ExecProgram IR: lowering, cross-layer fusion groups, the Engine
+front-end, plan JSON v3 round-trip + v2 migration, and ragged
+extent-masking on stride-2 / grouped / bias nets."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.convnets import (
+    resnext_grouped,
+    tiny_testnet,
+    vgg_mixed_channel,
+    vgg_style,
+)
+from repro.convserve import (
+    ConvServeConfig,
+    ConvServer,
+    Engine,
+    ImageRequest,
+    NetPlan,
+    NetSpec,
+    conv,
+    init_weights,
+    lower,
+    maxpool,
+    plan_net,
+    relu,
+    run_direct,
+    upgrade_plan,
+)
+from repro.convserve.plan import FusionGroup
+from repro.convserve.program import Stage, StageUnit, split_units
+from repro.core import analysis, registry
+
+BIG_HW = analysis.HardwareModel(
+    name="big", peak_flops=1e12, dram_bw=1e11, fast_shared_bw=5e11,
+    fast_shared_bytes=1 << 30, private_bytes=1 << 24,
+)
+
+
+def _rel(y, ref):
+    return float(jnp.abs(y - ref).max() / jnp.abs(ref).max())
+
+
+# ---------------------------------------------------------------- lowering
+
+
+def test_lowering_fuses_small_channel_vgg_on_paper_machine():
+    """Acceptance: the mixed-channel VGG config lowers with >= 1
+    multi-conv fusion group exactly where channels are small (fused
+    Winograd layers), while the 256-wide three_stage tail stays
+    unfused."""
+    spec = vgg_mixed_channel(3)
+    plan = plan_net(spec, 32, 32, hw=analysis.SKYLAKE_X)
+    prog = lower(spec, plan)
+    fused = [s for s in prog.stages if s.fused]
+    assert len(fused) >= 1
+    for s in fused:
+        for u in s.units:
+            assert registry.get(u.plan.algo).chain_family is not None
+    # the materializing 3-stage tail must not be inside any group
+    for s in prog.stages:
+        if any(u.plan.algo == "three_stage" for u in s.units):
+            assert not s.fused
+
+
+def test_lowering_attaches_epilogues_to_units():
+    spec = vgg_style("pb", 4, widths=(8,), with_bias=True)
+    # layers: conv bias relu conv bias relu maxpool
+    _, units = split_units(spec)
+    assert [i for i, _ in units] == [0, 3]
+    assert [op.kind for op in units[0][1]] == ["bias", "relu"]
+    assert [op.kind for op in units[1][1]] == ["bias", "relu", "maxpool"]
+
+
+def test_stage_rejects_pool_inside_fusion_group():
+    spec = tiny_testnet(4)
+    plan = plan_net(spec, 16, 16, hw=BIG_HW, fuse=False)
+    # tiny-testnet: conv relu conv relu pool conv relu conv relu pool --
+    # fusing across the pool (convs 2 and 5) is structurally illegal
+    bad = dataclasses.replace(plan, groups=(FusionGroup(layers=(2, 5)),))
+    with pytest.raises(ValueError, match="pool"):
+        lower(spec, bad)
+
+
+def test_lowering_rejects_non_adjacent_group():
+    spec = tiny_testnet(4)
+    plan = plan_net(spec, 16, 16, hw=BIG_HW, fuse=False)
+    bad = dataclasses.replace(plan, groups=(FusionGroup(layers=(0, 5)),))
+    with pytest.raises(ValueError, match="adjacent"):
+        lower(spec, bad)
+
+
+def test_can_chain_capability_gates():
+    l3 = registry.get("l3_fused")
+    spec1 = registry.ConvSpec(h=16, w=16, c_in=8, c_out=8, k=3, pad=1)
+    p = lambda algo, spec: registry.AlgoPlan(algo, spec, {})
+    assert l3.can_chain(p("l3_fused", spec1), p("l3_fused", spec1))
+    assert l3.can_chain(p("l3_fused", spec1), p("l3_fused_pallas", spec1))
+    assert not l3.can_chain(p("l3_fused", spec1), p("fft_fused", spec1))
+    assert not l3.can_chain(p("l3_fused", spec1), p("three_stage", spec1))
+    assert not l3.can_chain(p("l3_fused", spec1), p("direct", spec1))
+    strided = dataclasses.replace(spec1, stride=2)
+    assert not l3.can_chain(p("l3_fused", spec1), p("l3_fused", strided))
+    assert not registry.get("direct").can_chain(
+        p("direct", spec1), p("direct", spec1)
+    )
+
+
+# ------------------------------------------------------- staged execution
+
+
+def test_execute_staged_matches_sequential_any_tiling():
+    """The generic halo-recompute chain is exact for every super-tile
+    row count, including seams and borders."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 13, 11, 3)) * 0.1, jnp.float32)
+    w1 = jnp.asarray(rng.standard_normal((3, 3, 3, 5)) * 0.1, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((5, 5, 5, 4)) * 0.1, jnp.float32)
+    s1 = registry.ConvSpec(h=13, w=11, c_in=3, c_out=5, k=3, pad=1)
+    s2 = registry.ConvSpec(h=13, w=11, c_in=5, c_out=4, k=5, pad=2)
+    alg = registry.get("direct")
+    from repro.core.conv import conv2d_direct
+
+    ref = conv2d_direct(
+        jax.nn.relu(conv2d_direct(x, w1, pad=1)), w2, pad=2
+    )
+    for tile_rows in (0, 1, 4, 13, 100):
+        chain = [
+            registry.ChainLink(
+                w1, None, registry.AlgoPlan("direct", s1, {}),
+                lambda y, r0: jax.nn.relu(y),
+            ),
+            registry.ChainLink(
+                w2, None, registry.AlgoPlan("direct", s2, {}), None
+            ),
+        ]
+        y = alg.execute_staged(x, chain, tile_rows=tile_rows)
+        assert y.shape == ref.shape
+        assert float(jnp.abs(y - ref).max()) < 1e-5, tile_rows
+
+
+def test_execute_staged_rejects_strided_and_empty_chains():
+    alg = registry.get("direct")
+    with pytest.raises(ValueError, match="empty"):
+        alg.execute_staged(jnp.zeros((1, 8, 8, 4)), [], tile_rows=0)
+    s = registry.ConvSpec(h=8, w=8, c_in=4, c_out=4, k=3, pad=1, stride=2)
+    link = registry.ChainLink(
+        jnp.zeros((3, 3, 4, 4)), None, registry.AlgoPlan("direct", s, {})
+    )
+    with pytest.raises(ValueError, match="stride-1"):
+        alg.execute_staged(jnp.zeros((1, 8, 8, 4)), [link], tile_rows=0)
+
+
+# -------------------------------------------------- fused-vs-unfused nets
+
+
+def test_fused_program_matches_unfused_and_direct():
+    """Acceptance: fusion-group output == layer-by-layer output to fp32
+    tolerance, both == the direct oracle; bias/relu epilogues are folded
+    into the stages."""
+    spec = vgg_style("pb", 4, widths=(8, 16), with_bias=True)
+    ws = init_weights(spec, seed=3)
+    eng = Engine(hw=BIG_HW)
+    fused = eng.compile(spec, ws, input_hw=(16, 16), consider_fft=False)
+    plain = eng.compile(
+        spec, ws, input_hw=(16, 16), consider_fft=False, fuse=False
+    )
+    assert fused.program.n_fused >= 1
+    assert plain.program.n_fused == 0
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 16, 16, 4)) * 0.1, jnp.float32)
+    ref = run_direct(spec, ws, x)
+    yf, yu = fused(x), plain(x)
+    assert _rel(yf, ref) < 1e-3
+    assert _rel(yu, ref) < 1e-3
+    assert _rel(yf, yu) < 1e-4  # same algorithms, same arithmetic family
+
+
+def test_fused_multi_tile_ragged_matches_per_image():
+    """Forced multi-super-tile fusion groups stay exact for ragged
+    batches: intermediate masks are applied tile-position-aware."""
+    spec = vgg_style("pb2", 4, widths=(8,), with_bias=True)
+    ws = init_weights(spec, seed=7)
+    eng = Engine(hw=BIG_HW)
+    base = eng.compile(spec, ws, input_hw=(16, 16), consider_fft=False)
+    assert base.plan.groups
+    tiled_plan = dataclasses.replace(
+        base.plan,
+        groups=tuple(
+            dataclasses.replace(g, tile_rows=5) for g in base.plan.groups
+        ),
+    )
+    net = eng.compile(spec, ws, plan=tiled_plan)
+    rng = np.random.default_rng(4)
+    small = jnp.asarray(rng.standard_normal((12, 12, 4)) * 0.1, jnp.float32)
+    full = jnp.asarray(rng.standard_normal((16, 16, 4)) * 0.1, jnp.float32)
+    batch = (
+        jnp.zeros((2, 16, 16, 4), jnp.float32)
+        .at[0, :12, :12].set(small)
+        .at[1].set(full)
+    )
+    y = net(batch, sizes=jnp.asarray([[12, 12], [16, 16]], jnp.int32))
+    ref_small = run_direct(spec, ws, small[None])[0]
+    oh, ow, _ = ref_small.shape
+    assert _rel(y[0, :oh, :ow], ref_small) < 1e-3
+    assert _rel(y[1], run_direct(spec, ws, full[None])[0]) < 1e-3
+
+
+def test_ragged_masking_stride2_net_matches_per_image():
+    spec = NetSpec(
+        "s2-net",
+        (conv(4, 8), relu(), conv(8, 8, stride=2), relu(), maxpool(2)),
+    )
+    ws = init_weights(spec, seed=5)
+    net = Engine(hw=BIG_HW).compile(spec, ws, input_hw=(24, 24))
+    rng = np.random.default_rng(6)
+    small = jnp.asarray(rng.standard_normal((16, 16, 4)) * 0.1, jnp.float32)
+    full = jnp.asarray(rng.standard_normal((24, 24, 4)) * 0.1, jnp.float32)
+    batch = (
+        jnp.zeros((2, 24, 24, 4), jnp.float32)
+        .at[0, :16, :16].set(small)
+        .at[1].set(full)
+    )
+    y = net(batch, sizes=jnp.asarray([[16, 16], [24, 24]], jnp.int32))
+    ref_small = run_direct(spec, ws, small[None])[0]
+    oh, ow, _ = ref_small.shape
+    assert _rel(y[0, :oh, :ow], ref_small) < 1e-3
+    assert _rel(y[1], run_direct(spec, ws, full[None])[0]) < 1e-3
+
+
+def test_ragged_masking_grouped_net_matches_per_image():
+    spec = resnext_grouped(4)
+    ws = init_weights(spec, seed=8)
+    net = Engine(hw=BIG_HW).compile(spec, ws, input_hw=(16, 16))
+    rng = np.random.default_rng(9)
+    small = jnp.asarray(rng.standard_normal((12, 12, 4)) * 0.1, jnp.float32)
+    full = jnp.asarray(rng.standard_normal((16, 16, 4)) * 0.1, jnp.float32)
+    batch = (
+        jnp.zeros((2, 16, 16, 4), jnp.float32)
+        .at[0, :12, :12].set(small)
+        .at[1].set(full)
+    )
+    y = net(batch, sizes=jnp.asarray([[12, 12], [16, 16]], jnp.int32))
+    ref_small = run_direct(spec, ws, small[None])[0]
+    oh, ow, _ = ref_small.shape
+    assert _rel(y[0, :oh, :ow], ref_small) < 1e-3
+    assert _rel(y[1], run_direct(spec, ws, full[None])[0]) < 1e-3
+
+
+# -------------------------------------------------- plan v3 + migration
+
+
+def test_plan_v3_roundtrip_produces_identical_stages():
+    """Acceptance: serialize -> load -> identical stages (the program is
+    a pure function of spec + plan, and v3 carries the groups)."""
+    spec = tiny_testnet(4)
+    plan = plan_net(spec, 16, 16, hw=BIG_HW)
+    assert plan.groups  # the tiny net fuses on the big shared level
+    again = NetPlan.from_json(plan.to_json())
+    assert again == plan
+    assert lower(spec, again) == lower(spec, plan)
+
+
+def test_v2_plan_loads_and_replans_identically(tmp_path):
+    """A v2 plan file (no groups) still loads; upgrading it re-derives
+    the same plan -- layer decisions AND groups -- as planning fresh."""
+    spec = tiny_testnet(4)
+    fresh = plan_net(spec, 16, 16, hw=BIG_HW)
+    d = json.loads(fresh.to_json())
+    d["version"] = 2
+    del d["groups"]
+    path = tmp_path / "v2.json"
+    path.write_text(json.dumps(d))
+    loaded = NetPlan.load(path)
+    assert loaded.groups == ()
+    assert loaded.layers == fresh.layers
+    upgraded = upgrade_plan(spec, loaded, BIG_HW)
+    assert upgraded == fresh
+    # a v3 plan passes through upgrade untouched
+    assert upgrade_plan(spec, fresh, BIG_HW) is fresh
+
+
+def test_unknown_plan_version_rejected():
+    spec = tiny_testnet(4)
+    d = json.loads(plan_net(spec, 16, 16, hw=BIG_HW).to_json())
+    d["version"] = 4
+    with pytest.raises(ValueError, match="version"):
+        NetPlan.from_json(json.dumps(d))
+
+
+def test_engine_compile_accepts_loaded_plan(tmp_path):
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=1)
+    eng = Engine(hw=BIG_HW)
+    net = eng.compile(spec, ws, input_hw=(16, 16))
+    path = tmp_path / "net.plan.json"
+    net.save_plan(path)
+    again = eng.compile(spec, ws, plan=NetPlan.load(path))
+    assert again.program == net.program
+    with pytest.raises(ValueError, match="planning knobs"):
+        eng.compile(spec, ws, plan=net.plan, consider_fft=False)
+
+
+# ------------------------------------------------------ serving satellites
+
+
+def test_bucket_validation_accounts_for_stride_chain():
+    """Seed bug: pool-factor modulo admitted buckets that die in the
+    stride chain.  conv/2 then two 2x2 pools needs extents divisible by
+    8 overall; 20 % pool_factor(4) == 0 but 20 -> 10 -> 5 breaks."""
+    spec = NetSpec(
+        "s2-pools",
+        (conv(4, 8, stride=2), relu(), maxpool(2), maxpool(2)),
+    )
+    assert spec.pool_factor == 4
+    assert spec.downsample_factor == 8
+    ws = init_weights(spec, seed=0)
+    net = Engine(hw=BIG_HW).compile(spec, ws, input_hw=(16, 16))
+    with pytest.raises(ValueError, match="downsampling chain"):
+        ConvServer(net, ConvServeConfig(buckets=(20,)))
+    ConvServer(net, ConvServeConfig(buckets=(16, 32)))  # survives
+
+
+def test_server_stats_unified_over_compiled_net():
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=5)
+    net = Engine(hw=BIG_HW).compile(spec, ws, input_hw=(16, 16))
+    srv = ConvServer(net, ConvServeConfig(max_batch=2, buckets=(16, 32)))
+    rng = np.random.default_rng(2)
+    srv.run(
+        [
+            ImageRequest(0, rng.standard_normal((16, 16, 4)).astype(np.float32)),
+            ImageRequest(1, rng.standard_normal((32, 32, 4)).astype(np.float32)),
+        ]
+    )
+    s = srv.stats()
+    assert s["waves"] == 2  # one per bucket
+    assert s["compiles_per_bucket"] == {16: 1, 32: 1}
+    assert s["compiled_programs"] == 2
+    assert s["cache"]["misses"] == 4
+    assert s["cache"]["hits"] == 4  # second bucket reused every transform
+
+
+def test_profile_stages_covers_program():
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=1)
+    net = Engine(hw=BIG_HW).compile(spec, ws, input_hw=(16, 16))
+    x = jnp.zeros((1, 16, 16, 4), jnp.float32)
+    rows = net.profile_stages(x)
+    assert [label for label, _ in rows] == [
+        s.label for s in net.program.stages
+    ]
+    assert all(t >= 0.0 for _, t in rows)
+
+
+def test_prologue_glue_before_first_conv():
+    """Glue before any conv lowers into the program prologue; execution
+    (and per-stage profiling, which must pool before the first conv sees
+    the input) both honour it."""
+    spec = NetSpec("pool-first", (maxpool(2), conv(4, 8), relu()))
+    ws = init_weights(spec, seed=2)
+    net = Engine(hw=BIG_HW).compile(spec, ws, input_hw=(16, 16))
+    assert [op.kind for op in net.program.prologue] == ["maxpool"]
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 16, 16, 4)) * 0.1, jnp.float32)
+    assert _rel(net(x), run_direct(spec, ws, x)) < 1e-3
+    rows = net.profile_stages(x)  # would fail on the unpooled geometry
+    assert [label for label, _ in rows] == ["conv1"]
+
+
+def test_stage_unit_structmembers():
+    spec = vgg_style("pb3", 4, widths=(8,), with_bias=True)
+    plan = plan_net(spec, 16, 16, hw=BIG_HW, fuse=False)
+    prog = lower(spec, plan)
+    assert [s.label for s in prog.stages] == ["conv0", "conv3"]
+    last = prog.stages[-1].units[0]
+    assert isinstance(last, StageUnit) and last.has_pool
+    with pytest.raises(ValueError, match="no units"):
+        Stage(units=())
