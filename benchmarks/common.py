@@ -25,5 +25,40 @@ def time_fn(fn: Callable, *args, warmup: int = 2, min_time_s: float = 0.4,
     return times[len(times) // 2]
 
 
+def time_pair(
+    fa: Callable, fb: Callable, *args, iters: int = 30, rounds: int = 3
+) -> tuple:
+    """Min wall-clock seconds per call for two callables, interleaved.
+
+    A/B comparisons with back-to-back `time_fn` calls are at the mercy of
+    load drift between the two measurement windows; interleaving the
+    calls and taking per-side minima over several rounds cancels it.
+    Stops early once the faster side is stable across rounds.
+    """
+    jax.block_until_ready(fa(*args))
+    jax.block_until_ready(fb(*args))
+    best_a = best_b = float("inf")
+    last_sign = None
+    for r in range(rounds):
+        for i in range(iters):
+            # alternate which side goes first: the second call of a pair
+            # runs with caches warmed by the first, a systematic bias if
+            # the order is fixed
+            pair = ((fa, 0), (fb, 1)) if (i + r) % 2 == 0 else ((fb, 1), (fa, 0))
+            for fn, side in pair:
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(*args))
+                dt = time.perf_counter() - t0
+                if side == 0:
+                    best_a = min(best_a, dt)
+                else:
+                    best_b = min(best_b, dt)
+        sign = best_a <= best_b
+        if last_sign is not None and sign == last_sign:
+            break
+        last_sign = sign
+    return best_a, best_b
+
+
 def row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"

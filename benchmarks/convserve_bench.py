@@ -33,8 +33,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import row, time_fn, time_pair
 from repro.configs.convnets import (
+    fft_fewchannel,
     resnet_downsample,
     tiny_testnet,
     vgg_mixed_channel,
@@ -64,7 +65,11 @@ def bench_net(spec, batch: int, side: int, c_in: int, record: dict) -> None:
     t_cold = time.perf_counter() - t0
     print(row(f"convserve/{spec.name}/cold", t_cold * 1e6, f"batch{batch}"))
 
-    t_warm = time_fn(net, x)
+    # fused vs unfused interleaved (time_pair): the two programs differ
+    # only in stage structure, so separate measurement windows would
+    # compare load drift, not fusion
+    unfused = engine.compile(spec, ws, input_hw=(side, side), fuse=False)
+    t_warm, t_unfused = time_pair(net, unfused, x)
     cache = net.cache.stats()
     print(
         row(
@@ -72,9 +77,6 @@ def bench_net(spec, batch: int, side: int, c_in: int, record: dict) -> None:
             f"{t_warm * 1e3 / batch:.1f}ms/img;hits{cache['hits']}",
         )
     )
-
-    unfused = engine.compile(spec, ws, input_hw=(side, side), fuse=False)
-    t_unfused = time_fn(unfused, x)
     print(
         row(
             f"convserve/{spec.name}/unfused", t_unfused * 1e6,
@@ -107,6 +109,62 @@ def bench_net(spec, batch: int, side: int, c_in: int, record: dict) -> None:
         "direct_us": t_dir * 1e6,
         "stages": stages,
         "cache": net.cache.stats(),
+    }
+
+
+def bench_fft_net(
+    batch: int, side: int, record: dict, *, iters: int = 30
+) -> None:
+    """The FFT-selected few-channel net: the transform the planner picks
+    when tiles are DRAM-bound (Zlateski et al.'s claim through our
+    roofline), served as one FFT-backed fusion group.
+
+    Asserts the plan (all fft_fused + >= 1 group) and fused-vs-direct
+    parity, then times fused vs unfused interleaved (`time_pair`): the
+    pair differ only in stage structure, so back-to-back medians would
+    measure load drift, not fusion.
+    """
+    spec = fft_fewchannel(4)
+    ws = init_weights(spec, seed=0)
+    engine = Engine(hw=analysis.SKYLAKE_X)
+    fused = engine.compile(spec, ws, input_hw=(side, side))
+    unfused = engine.compile(spec, ws, input_hw=(side, side), fuse=False)
+    assert all(a == "fft_fused" for a in fused.plan.algos()), (
+        f"few-channel net did not plan FFT: {fused.plan.algos()}"
+    )
+    assert fused.program.n_fused >= 1, (
+        f"FFT net planned no fusion groups: {fused.describe()}"
+    )
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(
+        rng.standard_normal((batch, side, side, 4)) * 0.1, jnp.float32
+    )
+    ref = run_direct(spec, ws, x)
+    scale = float(jnp.abs(ref).max())
+    rel_fused = float(jnp.abs(fused(x) - ref).max()) / scale
+    rel_pair = float(jnp.abs(fused(x) - unfused(x)).max()) / scale
+    assert rel_fused < 1e-3, f"FFT fused vs direct diverged: {rel_fused}"
+    assert rel_pair < 1e-4, f"FFT fused vs unfused diverged: {rel_pair}"
+
+    t_fused, t_unfused = time_pair(fused, unfused, x, iters=iters)
+    vendor = jax.jit(lambda x: run_direct(spec, ws, x))
+    t_dir = time_fn(vendor, x)
+    print(row(f"convserve/{spec.name}/warm", t_fused * 1e6,
+              ";".join(fused.plan.algos())))
+    print(row(f"convserve/{spec.name}/unfused", t_unfused * 1e6,
+              f"{fused.program.n_fused}groups"))
+    print(row(f"convserve/{spec.name}/direct", t_dir * 1e6))
+    print(row(f"convserve/{spec.name}/fused_vs_direct", 0.0,
+              f"rel{rel_fused:.2e}"))
+    record[spec.name] = {
+        "algos": fused.plan.algos(),
+        "fusion_groups": [list(g.layers) for g in fused.plan.groups],
+        "warm_us": t_fused * 1e6,
+        "unfused_warm_us": t_unfused * 1e6,
+        "direct_us": t_dir * 1e6,
+        "fused_vs_direct_rel": rel_fused,
+        "fused_vs_unfused_rel": rel_pair,
+        "cache": fused.cache.stats(),
     }
 
 
@@ -144,19 +202,32 @@ def _smoke(record: dict) -> None:
 
 def main(batch: int = 2, side: int = 64, smoke: bool = False) -> None:
     record: dict = {}
-    if smoke:  # CI: tiny geometry, fusion parity under time pressure
-        _smoke(record)
-    else:
-        bench_net(vgg_mixed_channel(c_in=3), batch, side, c_in=3, record=record)
-        bench_net(resnet_downsample(c_in=3), batch, side, c_in=3, record=record)
-    BENCH_PATH.write_text(
-        json.dumps(
-            {"bench": "convserve", "smoke": smoke, "nets": record},
-            indent=1,
-            sort_keys=True,
+    try:
+        if smoke:  # CI: tiny geometry, fusion parity under time pressure
+            _smoke(record)
+            # the FFT-selected few-channel net, small geometry: asserts
+            # the transform choice + FFT fusion-group parity, and records
+            # the fused-vs-unfused warm pair
+            bench_fft_net(batch, 48, record, iters=20)
+        else:
+            bench_net(
+                vgg_mixed_channel(c_in=3), batch, side, c_in=3, record=record
+            )
+            bench_net(
+                resnet_downsample(c_in=3), batch, side, c_in=3, record=record
+            )
+            bench_fft_net(batch, side, record)
+    finally:
+        # partial results still land on disk (and in the CI artifact)
+        # when a parity gate fires mid-run
+        BENCH_PATH.write_text(
+            json.dumps(
+                {"bench": "convserve", "smoke": smoke, "nets": record},
+                indent=1,
+                sort_keys=True,
+            )
         )
-    )
-    print(f"# wrote {BENCH_PATH}")
+        print(f"# wrote {BENCH_PATH}")
 
 
 if __name__ == "__main__":

@@ -71,12 +71,32 @@ def resnet_downsample(c_in: int = 3) -> NetSpec:
 
 
 def resnext_grouped(c_in: int = 4, groups: int = 4) -> NetSpec:
-    """Grouped-conv (ResNeXt-style) net: exercises the registry's
-    capability-based fallback -- grouped layers plan `direct` until a
-    transformed algorithm registers grouped support."""
+    """Grouped-conv (ResNeXt-style) net.  Grouped layers reach the
+    transformed paths through the shared tile engine's block-diagonal
+    channel mix (every registered transform family handles groups); the
+    planner charges the 1/groups FLOP saving in the cost model."""
     layers = (
         conv(c_in, 32), relu(),
         conv(32, 32, groups=groups), relu(),
         conv(32, 64, stride=2, groups=groups), relu(),
     )
     return NetSpec(name="resnext-grouped", layers=layers)
+
+
+def fft_fewchannel(c_in: int = 4) -> NetSpec:
+    """Few-channel, wide-image net where the FFT transform wins.
+
+    Zlateski et al.'s observation, through our roofline: with few
+    channels the task stream is DRAM-bound, and the FFT's larger tile
+    (T=16 vs Winograd's T=7) amortizes the K-1 halo over ~4x the output
+    pixels -- the alpha=2 complex FLOPs cancel out of the DRAM-bound cost
+    ratio.  Three same-padded chained convs with bias+relu glue and no
+    pools, so the planner can fold the whole net into one FFT-backed
+    fusion group.
+    """
+    layers = (
+        conv(c_in, 8), bias(8), relu(),
+        conv(8, 8), bias(8), relu(),
+        conv(8, 8), bias(8), relu(),
+    )
+    return NetSpec(name="fft-fewchannel", layers=layers)

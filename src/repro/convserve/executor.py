@@ -206,25 +206,24 @@ class NetExecutor:
             nxt = cur.after_conv(aplan.spec)
             last = j == len(stage.units) - 1
             pre, tail = _split_epilogue(u.epilogue)
-            ew = self._elementwise_fn(pre, ws)
             if last:
                 tail_ops = tail
-                epi = None if ew is None else (
-                    lambda y, row0, _f=ew: _f(y)
-                )
-            else:
-                # interior epilogue: elementwise glue then the extent
-                # re-mask, tile-position-aware so the next conv of the
-                # chain never taps across a true-image edge
-                epi = (
-                    lambda y, row0, _f=ew, _e=nxt: _e.mask(
-                        y if _f is None else _f(y), row0
-                    )
-                )
+            # elementwise glue (bias/relu) folds into the owning
+            # algorithm's task loop inside the chain, exactly as in a
+            # single stage; only the position-dependent extent re-mask
+            # (ragged batches) runs on the assembled intermediate --
+            # tile-position-aware so the next conv of the chain never
+            # taps across a true-image edge
+            epi = (
+                (lambda y, row0, _e=nxt: _e.mask(y, row0))
+                if nxt.live and not last
+                else None
+            )
             chain.append(
                 registry.ChainLink(
                     w=ws[u.layer], wt=wts.get(u.layer), plan=aplan,
                     epilogue=epi,
+                    elementwise=self._elementwise_fn(pre, ws),
                 )
             )
             cur = nxt

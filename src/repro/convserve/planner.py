@@ -115,10 +115,10 @@ def plan_net(
 
 # fraction of the fast shared level a fusion group's resident slab (the
 # super-tile of the largest intermediate) may occupy -- the rest holds
-# the group's right-hand matrices (<= 1/2, analysis.fused_is_feasible's
-# budget) and the per-task private intermediates
+# the group's right-hand matrices (the same residency budget the
+# per-layer feasibility gate uses) and the per-task private intermediates
 _SLAB_FRAC = 0.25
-_MATRIX_FRAC = 0.5
+_MATRIX_FRAC = analysis.MATRIX_RESIDENCY_FRAC
 
 
 def _conv_time_s(p: LayerPlan, hw: analysis.HardwareModel) -> float:
@@ -150,13 +150,15 @@ def _group_decision(
                (receptive-field growth), each row at that conv's modeled
                time per output row
     """
-    # joint right-hand matrices must stay resident in the shared level
+    # joint right-hand matrices must stay resident in the shared level --
+    # priced family-exactly (complex rfft half-spectrum for FFT members)
+    # through each algorithm's TileAlgebra
     matrix_bytes = 0
     for p in members:
-        t = p.t
-        if t is None:  # no transform family (direct): never chained
+        ta = registry.get(p.algo).tile_algebra(p.algo_plan())
+        if ta is None:  # no transform family (direct): never chained
             return None
-        matrix_bytes += analysis.kernel_matrix_bytes(p.c_in, p.c_out, t)
+        matrix_bytes += ta.kernel_matrix_bytes(p.c_in, p.c_out, p.groups)
     if matrix_bytes > _MATRIX_FRAC * hw.fast_shared_bytes:
         return None
     # intermediates: input geometry of each member after the first

@@ -68,8 +68,9 @@ TPU_V5E = HardwareModel(
 
 
 def kernel_matrix_bytes(c_in: int, c_out: int, t: int) -> int:
-    """Right-hand matrices: 4 C C' T^2 bytes (Winograd and FFT alike --
-    FFT stores complex pairs but only T(T/2+1) frequencies)."""
+    """Right-hand matrices: 4 C C' T^2 bytes (the fp32 Winograd case; the
+    family-exact figure -- complex pairs over the rfft half-spectrum for
+    FFT, grouped block-diagonal -- is `TileAlgebra.kernel_matrix_bytes`)."""
     return 4 * c_in * c_out * t * t
 
 
@@ -83,9 +84,17 @@ def ai_fast_level(r: int) -> float:
     return r / 2.0
 
 
-def ai_dram(c_in: int, c_out: int, t: int, t_out: int, alpha: int = 1) -> float:
-    """AI against main memory: FLOPs / (input+output tile bytes)."""
-    flops = alpha * 2 * c_in * c_out * t * t
+def ai_dram(
+    c_in: int, c_out: int, t: int, t_out: int, alpha: int = 1, groups: int = 1
+) -> float:
+    """AI against main memory: FLOPs / (input+output tile bytes).
+
+    Activations stream through DRAM as real fp32 regardless of transform
+    family (the complex domain lives only in fast memory), so the byte
+    term is family-independent; grouped channel mixes are block-diagonal,
+    dividing the FLOP term by `groups`.
+    """
+    flops = alpha * 2 * c_in * c_out * t * t // groups
     byts = 4 * t * t * c_in + 4 * t_out * t_out * c_out
     return flops / byts
 
@@ -104,18 +113,41 @@ def max_r(hw: HardwareModel, c_in: int, c_out: int, t: int) -> int:
     return max_r_for_budget(hw.private_bytes // 2, c_in, c_out, t)
 
 
+def max_r_ta(hw: HardwareModel, c_in: int, c_out: int, ta) -> int:
+    """Family-exact R upper bound: the shared-buffer working set -- sized
+    by the transform's domain points and element width (`TileAlgebra`) --
+    must fit half the private memory.  Buffers hold full-width channels
+    even for grouped problems (tiles are gathered whole), so no `groups`
+    term here."""
+    from repro.core.sharedbuf import max_r_for_budget
+
+    return max_r_for_budget(
+        hw.private_bytes // 2, c_in, c_out, ta.t,
+        points=ta.domain_points, elem_bytes=ta.elem_bytes,
+    )
+
+
 def predicted_utilization(
     hw: HardwareModel, r: int, c_in: int, c_out: int, t: int, t_out: int,
-    alpha: int = 1,
+    alpha: int = 1, groups: int = 1,
 ) -> float:
     """min over memory levels of AI/CMR, capped at 1 (paper S2.3)."""
     u_fast = ai_fast_level(r) / hw.cmr_fast
-    u_dram = ai_dram(c_in, c_out, t, t_out, alpha) / hw.cmr_dram
+    u_dram = ai_dram(c_in, c_out, t, t_out, alpha, groups) / hw.cmr_dram
     return min(1.0, u_fast, u_dram)
 
 
+MATRIX_RESIDENCY_FRAC = 0.5  # paper S4.1.1's constant fraction -- the ONE
+# copy: fused_is_feasible, fused_cost_ta, and the convserve fusion-group
+# planner all gate on this same threshold
+
+
 def fused_is_feasible(
-    hw: HardwareModel, c_in: int, c_out: int, t: int, frac: float = 0.5
+    hw: HardwareModel,
+    c_in: int,
+    c_out: int,
+    t: int,
+    frac: float = MATRIX_RESIDENCY_FRAC,
 ) -> bool:
     """Right-hand matrices must occupy <= a constant fraction of shared fast
     memory (paper S4.1.1)."""
@@ -129,31 +161,52 @@ def flops_per_output_px(t: int, t_out: int, alpha: int = 1) -> float:
     return alpha * 2.0 * t * t / float(t_out * t_out)
 
 
+def fused_cost_ta(
+    hw: HardwareModel, c_in: int, c_out: int, ta, r_floor: int,
+    groups: int = 1,
+):
+    """(algo-feasibility, modeled cost) of one fused transform family,
+    seen through its `TileAlgebra` -- the entry the registry algorithms
+    and the convserve planner share, so every family (and any future one)
+    is costed by the same roofline with family-exact working-set terms.
+
+    Cost is time per output pixel up to the common C*C' factor: flops/px
+    divided by predicted utilisation at the best feasible R.  Returns
+    None when infeasible (matrices overflow the shared level, or no
+    useful R fits the private-memory budget).
+    """
+    if ta.t_out < 1:
+        return None
+    matrix = ta.kernel_matrix_bytes(c_in, c_out, groups)
+    if matrix > MATRIX_RESIDENCY_FRAC * hw.fast_shared_bytes:
+        return None
+    r_hi = max_r_ta(hw, c_in, c_out, ta)
+    if r_hi < r_floor:
+        return None
+    r = min(r_hi, max(min_r(hw), r_floor))
+    u = predicted_utilization(
+        hw, r, c_in, c_out, ta.t, ta.t_out, ta.alpha, groups
+    )
+    return ta.flops_per_output_px() / max(u, 1e-9)
+
+
 def fused_cost(
     hw: HardwareModel, c_in: int, c_out: int, t: int, k: int, alpha: int,
     r_floor: int,
 ):
-    """(algo-feasibility, modeled cost) of one fused transform family.
+    """Closed-form (t, k, alpha) view of `fused_cost_ta`, kept for
+    `choose_algo` (the paper-table three-way choice) and the algebra
+    tests.  alpha selects the family's TileAlgebra."""
+    from repro.core import transforms
 
-    Cost is time per output pixel up to the common C*C' factor:
-    flops/px divided by predicted utilisation at the best feasible R.
-    Returns None when infeasible (matrices overflow the shared level, or
-    no useful R fits the private-memory budget).  This is the registry's
-    cost entry for the fused algorithms (`core.registry`); `choose_algo`
-    below is the original closed-form three-way choice kept for the
-    paper-table benchmarks and the algebra tests.
-    """
     if t <= k:
         return None
-    if not fused_is_feasible(hw, c_in, c_out, t):
-        return None
-    r_hi = max_r(hw, c_in, c_out, t)
-    if r_hi < r_floor:
-        return None
-    r = min(r_hi, max(min_r(hw), r_floor))
-    t_out = t - k + 1
-    u = predicted_utilization(hw, r, c_in, c_out, t, t_out, alpha)
-    return flops_per_output_px(t, t_out, alpha) / max(u, 1e-9)
+    ta = (
+        transforms.FFTTransform(t=t, k=k)
+        if alpha == 2
+        else transforms.WinogradTransform(m=t - k + 1, k=k)
+    ).algebra
+    return fused_cost_ta(hw, c_in, c_out, ta, r_floor)
 
 
 def choose_algo(

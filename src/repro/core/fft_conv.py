@@ -1,29 +1,32 @@
 """FFT-based transformed convolution (the paper's second transform family).
 
-Same OLA tiling and task structure as the Winograd path; the basis transform
-is an rFFT over each T x T tile.  Cross-correlation via the correlation
-theorem:  y = irfft2( rfft2(d) * conj(rfft2(g, s=(T,T))) )[:T', :T'] --
-circular wrap-around only contaminates the last K-1 rows/cols, which OLA
-discards.  rfft keeps T*(T/2+1) frequencies (the paper's conjugate
-anti-symmetric ~2x saving); each frequency's channel-mix is a complex
-matmul (alpha = 2 in the paper's FLOP accounting -- 4 real mults per MAC).
+Same OLA tiling and task structure as the Winograd path -- literally the
+same code now: the task loop lives in `repro.core.pipeline` and this
+module drives it with an `FFTTransform` (rfft basis, channel mix per
+frequency as a complex matmul; alpha = 2 in the paper's FLOP accounting).
+Cross-correlation comes via the correlation theorem; the circular
+wrap-around only contaminates the last K-1 rows/cols, which OLA discards.
+
+Being engine-backed makes FFT a first-class fusion-group citizen: it
+inherits in-task epilogue fusion (`fuse_epilogue`) and generic staged
+chain execution (`execute_staged`), so the planner may build FFT-backed
+cross-layer fusion groups exactly as it does Winograd ones.  bf16 inputs
+take a real reduced-precision path (FFT computed in fp32, assembled
+output cast back) rather than a capability fallback.
 """
 
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import analysis, registry, tiling
+from repro.core import pipeline, registry, transforms
 
 
 def transform_kernels_fft(w: jnp.ndarray, t: int) -> jnp.ndarray:
     """HWIO (K, K, C, C') -> (T, T//2+1, C, C') complex right-hand matrices."""
-    wf = jnp.fft.rfft2(w, s=(t, t), axes=(0, 1))
-    return jnp.conj(wf)
+    return transforms.FFTTransform(t=t, k=w.shape[0]).kernel_transform(w)
 
 
 def conv2d_fft_fused(
@@ -34,99 +37,43 @@ def conv2d_fft_fused(
     t: int = 16,
     r_tiles: int = 16,
     wt: Optional[jnp.ndarray] = None,
+    groups: int = 1,
+    epilogue=None,
 ) -> jnp.ndarray:
     """NHWC L3-fused FFT convolution (paper: T >= 16 works well for FFT)."""
-    k = w.shape[0]
-    plan = tiling.TilePlan.build(x.shape[1], x.shape[2], k, pad, t)
-    if wt is None:
-        wt = transform_kernels_fft(w, t)
-    batch, c_in = x.shape[0], x.shape[3]
-    c_out = wt.shape[3]
-
-    xp = tiling.pad_input(x, plan)
-    tiles = tiling.extract_tiles(xp, plan)  # (B, nH, nW, T, T, C)
-    n_tile = batch * plan.tiles_per_image
-    tiles = tiles.reshape(n_tile, t, t, c_in)
-
-    r = min(r_tiles, n_tile)
-    n_task = -(-n_tile // r)
-    n_pad = n_task * r
-    if n_pad > n_tile:
-        tiles = jnp.concatenate(
-            [tiles, jnp.zeros((n_pad - n_tile, t, t, c_in), tiles.dtype)], 0
-        )
-    tiles = tiles.reshape(n_task, r, t, t, c_in)
-
-    def task(carry, tl):
-        u = jnp.fft.rfft2(tl, axes=(1, 2))  # (R, T, F, C) complex
-        mm = jnp.einsum("rxfc,xfcd->rxfd", u, wt)
-        y = jnp.fft.irfft2(mm, s=(t, t), axes=(1, 2))
-        return carry, y[:, : plan.t_out, : plan.t_out, :]
-
-    _, y_tiles = jax.lax.scan(task, jnp.zeros((), x.dtype), tiles)
-    y_tiles = y_tiles.reshape(n_pad, plan.t_out, plan.t_out, c_out)[:n_tile]
-    y_tiles = y_tiles.reshape(
-        batch, plan.n_tiles_h, plan.n_tiles_w, plan.t_out, plan.t_out, c_out
+    return pipeline.fused_tile_conv(
+        x, w, transforms.FFTTransform(t=t, k=w.shape[0]),
+        pad=pad, r_tiles=r_tiles, wt=wt, groups=groups, epilogue=epilogue,
     )
-    return tiling.assemble_tiles(y_tiles, plan).astype(x.dtype)
 
 
-class FFTFusedAlgorithm(registry.Algorithm):
+class FFTFusedAlgorithm(pipeline.TransformedAlgorithm):
     """The FFT transform family as a registry algorithm (tier 0).
 
-    alpha = 2 in the cost entry (complex channel-mix matmuls); feasible
-    only when the padded input covers a full T_fft tile -- below that the
-    tile is mostly padding and the flops-per-pixel comparison collapses.
+    alpha = 2 in the cost entry (complex channel-mix matmuls) with the
+    rfft half-spectrum's complex working set priced exactly through
+    `TileAlgebra`; feasible only when the padded input covers a full
+    T_fft tile -- below that the tile is mostly padding and the
+    flops-per-pixel comparison collapses.
     """
 
     name = "fft_fused"
     tier = 0
     rank = 20
-    consumes_wt = True
     weight_params = ("t_fft",)
     chain_family = "fft"
-    default_t = 16  # the paper: T >= 16 works well for FFT
+    tile_param = "t_fft"
+    default_tile = 16  # the paper: T >= 16 works well for FFT
+    r_floor_base = 4
 
     def supports(self, spec: registry.ConvSpec) -> bool:
-        # lax.fft computes in f32/f64 only; bf16 problems go to the
-        # Winograd family (capability-based fallback, not a cast)
-        return spec.groups == 1 and spec.dtype in ("float32", "float64")
+        # lax.fft computes in f32/f64; bf16/fp16 ride the fp32 compute
+        # path and are cast back after assembly (a real path, not a
+        # fallback)
+        return spec.dtype in ("float32", "float64", "bfloat16", "float16")
 
-    def plan(self, spec, hw, *, hints=None, tune_r=False, wisdom_path=None):
-        hints = hints or {}
-        t = int(hints.get("t_fft") or self.default_t)
-        from repro.core import tune  # deferred: tune imports core.fused
-
-        r_hint = hints.get("r_tiles")
-        r = (
-            int(r_hint)
-            if r_hint is not None
-            else tune.predict_r(spec.c_in, spec.c_out, k=spec.k, t=t, hw=hw)
-        )
-        util = analysis.predicted_utilization(
-            hw, r, spec.c_in, spec.c_out, t, t - spec.k + 1, alpha=2
-        )
-        cost = registry.fused_auto_cost(
-            spec, hw, t, 2, max(4, analysis.min_r(hw) // 2)
-        )
-        return registry.AlgoPlan(
-            self.name, spec, {"t_fft": t, "r_tiles": int(r)},
-            predicted_util=util, cost=cost,
-        )
-
-    def prepare_weights(self, w, plan):
-        t = plan.params.get("t_fft")
-        if t is None:
-            raise ValueError(f"{self.name} plan without t_fft: {plan.params}")
-        return transform_kernels_fft(w, t)
-
-    def execute(self, x, w, wt, plan):
-        y = conv2d_fft_fused(
-            x, w, pad=plan.spec.pad,
-            t=plan.params.get("t_fft", self.default_t),
-            r_tiles=plan.params.get("r_tiles", 16), wt=wt,
-        )
-        return registry.decimate(y, plan.spec.stride)
+    def make_transform(self, spec, params):
+        return transforms.FFTTransform(t=int(params["t_fft"]), k=spec.k)
 
 
 registry.register(FFTFusedAlgorithm())

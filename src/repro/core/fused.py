@@ -1,61 +1,25 @@
 """The paper's contribution: the L3-fused transformed convolution.
 
 Instead of three full-layer stages, tiles are processed in N_task =
-ceil(N_tile / R) independent *tasks*.  Each task
+ceil(N_tile / R) independent *tasks* (gather + forward-transform R tiles,
+T^2 small matmuls against the *stationary* right-hand matrices, inverse-
+transform), so the per-task intermediates stay in fast private memory and
+the right-hand matrices stay hot in the fast shared level (L3 on CPU;
+VMEM-stationary on the TPU Pallas path, see repro.kernels.fused_winograd).
 
-  1. forward-transforms R tile-groups            (R instances of step 1)
-  2. performs the T^2 small matmuls (RxC)@(CxC') against the *stationary*
-     right-hand (transformed-kernel) matrices
-  3. inverse-transforms the R results
-
-so the per-task intermediates (R x C and R x C' matrices, T^2 of each) stay
-in fast private memory, and the T^2 right-hand matrices -- re-read by every
-task -- stay hot in the fast shared level (L3 on CPU; VMEM-stationary on the
-TPU Pallas path, see repro.kernels.fused_winograd).
-
-This module is the pure-JAX expression of the algorithm: a `lax.scan` over
-tasks models the per-core sequential task stream; tasks are embarrassingly
-parallel across cores/chips (paper S4) -- on the TPU mesh, the tile axis is
-sharded over the `data` axis and each chip scans its own tasks.
+The task loop itself lives in `repro.core.pipeline` -- one engine shared
+by every transform family -- and this module is just the Winograd-family
+binding: `conv2d_l3_fused` drives the engine with a `WinogradTransform`,
+and `L3FusedAlgorithm` registers it (tier 0).
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import analysis, registry, tiling, transforms
-from repro.core.three_stage import transform_kernels
-
-
-def _tile_offsets(plan: tiling.TilePlan, batch: int) -> np.ndarray:
-    """(N_tile, 3) int32: (batch, row0, col0) of every input tile, flat order."""
-    b_idx, h_idx, w_idx = np.meshgrid(
-        np.arange(batch),
-        np.arange(plan.n_tiles_h) * plan.t_out,
-        np.arange(plan.n_tiles_w) * plan.t_out,
-        indexing="ij",
-    )
-    return np.stack(
-        [b_idx.ravel(), h_idx.ravel(), w_idx.ravel()], axis=1
-    ).astype(np.int32)
-
-
-def _gather_tiles(x_padded: jnp.ndarray, offsets: jnp.ndarray, t: int) -> jnp.ndarray:
-    """Gather R overlapping (T, T, C) tiles given (R, 3) offsets."""
-
-    def one(off):
-        return jax.lax.dynamic_slice(
-            x_padded,
-            (off[0], off[1], off[2], 0),
-            (1, t, t, x_padded.shape[3]),
-        )[0]
-
-    return jax.vmap(one)(offsets)  # (R, T, T, C)
+from repro.core import pipeline, registry, transforms
 
 
 def conv2d_l3_fused(
@@ -66,18 +30,21 @@ def conv2d_l3_fused(
     m: Optional[int] = None,
     r_tiles: int = 24,
     wt: Optional[jnp.ndarray] = None,
+    groups: int = 1,
     epilogue=None,
 ) -> jnp.ndarray:
-    """NHWC L3-fused transformed convolution.
+    """NHWC L3-fused Winograd convolution.
 
     Args:
       x: (B, H, W, C) input.
-      w: (K, K, C, C') kernels (HWIO); ignored if `wt` given.
+      w: (K, K, C/groups, C') kernels (HWIO); ignored if `wt` given.
       pad: symmetric spatial padding.
       m: Winograd output-tile size (T = m + K - 1).  Default m=5, T=7 --
          the paper's benchmark configuration.
       r_tiles: R, tiles per task (paper uses R=24 on SkylakeX, R=8 on i7).
-      wt: pre-transformed kernels (T*T, C, C') -- the inference-time path.
+      wt: pre-transformed kernels (T*T, C/groups, C') -- the inference-time
+        path.
+      groups: grouped convolution (block-diagonal channel mix).
       epilogue: optional elementwise callable applied to each task's
         output tiles inside the scan (bias/relu glue running on
         task-resident data); output tiles abut, so this equals applying
@@ -85,166 +52,26 @@ def conv2d_l3_fused(
     """
     k = w.shape[0]
     m = m if m is not None else 5  # T = 7, the paper's fixed benchmark config
-    t = m + k - 1
-    plan = tiling.TilePlan.build(x.shape[1], x.shape[2], k, pad, t)
-    if wt is None:
-        wt = transform_kernels(w, m)
-    batch, c_in = x.shape[0], x.shape[3]
-    c_out = wt.shape[2]
-
-    at_np, _, bt_np = transforms.winograd_matrices(m, k)
-    at = jnp.asarray(at_np, x.dtype)
-    bt = jnp.asarray(bt_np, x.dtype)
-
-    xp = tiling.pad_input(x, plan)
-    n_tile = plan.n_tiles(batch)
-    r = min(r_tiles, n_tile)
-    n_task = -(-n_tile // r)
-    n_pad = n_task * r
-
-    offsets = _tile_offsets(plan, batch)
-    if n_pad > n_tile:  # pad the task list by repeating the last tile
-        offsets = np.concatenate(
-            [offsets, np.repeat(offsets[-1:], n_pad - n_tile, axis=0)], axis=0
-        )
-    offsets = jnp.asarray(offsets).reshape(n_task, r, 3)
-
-    def task(carry_out_tiles, off_r):
-        # step 1: gather + forward-transform R tiles -> (T^2, R, C)
-        tiles = _gather_tiles(xp, off_r, t)  # (R, T, T, C)
-        u = jnp.einsum("xi,rijc,yj->xyrc", bt, tiles, bt)
-        u = u.reshape(t * t, r, c_in)
-        # step 2: T^2 small matmuls against the stationary right-hand matrices
-        mm = jnp.einsum("src,scd->srd", u, wt)  # (T^2, R, C')
-        # step 3: inverse transform
-        z = mm.reshape(t, t, r, c_out)
-        y = jnp.einsum("xi,ijrc,yj->rxyc", at, z, at)  # (R, T', T', C')
-        if epilogue is not None:
-            y = epilogue(y)
-        return carry_out_tiles, y
-
-    _, y_tiles = jax.lax.scan(
-        task, jnp.zeros((), x.dtype), offsets
-    )  # (n_task, R, T', T', C')
-    y_tiles = y_tiles.reshape(n_pad, plan.t_out, plan.t_out, c_out)[:n_tile]
-    y_tiles = y_tiles.reshape(
-        batch, plan.n_tiles_h, plan.n_tiles_w, plan.t_out, plan.t_out, c_out
-    )
-    return tiling.assemble_tiles(y_tiles, plan)
-
-
-def resolve_wino_r(
-    spec: registry.ConvSpec,
-    hw: analysis.HardwareModel,
-    *,
-    m: int,
-    hints,
-    tune_r: bool = False,
-    wisdom_path=None,
-):
-    """R for a Winograd-family plan: explicit hint > measured (tune_r) >
-    wisdom-file lookup > analytic prediction.  Returns (r, tuned) where
-    `tuned` marks an R that came from measurement (fresh or cached in the
-    wisdom file) rather than the model."""
-    from repro.core import tune  # deferred: tune times this module's conv
-
-    r_hint = hints.get("r_tiles")
-    if r_hint is not None:
-        return int(r_hint), False
-    if tune_r:
-        r = tune.tuned_r(
-            spec.h, spec.w, spec.c_in, spec.c_out, k=spec.k, m=m,
-            wisdom_path=wisdom_path,
-        )
-        return int(r), True
-    r = tune.lookup_r(
-        spec.h, spec.w, spec.c_in, spec.c_out, k=spec.k, m=m,
-        wisdom_path=wisdom_path,
-    )
-    if r is not None:
-        # clamp a wisdom R measured elsewhere into this hw's feasible range
-        r_max = analysis.max_r(hw, spec.c_in, spec.c_out, m + spec.k - 1)
-        return (max(1, min(int(r), r_max)) if r_max >= 1 else int(r)), True
-    return tune.predict_r(spec.c_in, spec.c_out, k=spec.k, m=m, hw=hw), False
-
-
-def plan_wino_family(
-    name: str,
-    spec: registry.ConvSpec,
-    hw: analysis.HardwareModel,
-    *,
-    default_m: int,
-    hints,
-    tune_r: bool = False,
-    wisdom_path=None,
-) -> registry.AlgoPlan:
-    """Shared plan step for the Winograd-family algorithms (the pure-JAX
-    l3_fused and the Pallas kernel): same m/T resolution, same wisdom-file
-    R, same alpha=1 utilisation and auto-ranking cost."""
-    hints = hints or {}
-    m = int(hints.get("m") or default_m)
-    t = m + spec.k - 1
-    r, tuned = resolve_wino_r(
-        spec, hw, m=m, hints=hints, tune_r=tune_r, wisdom_path=wisdom_path
-    )
-    util = analysis.predicted_utilization(
-        hw, r, spec.c_in, spec.c_out, t, m, alpha=1
-    )
-    cost = registry.fused_auto_cost(
-        spec, hw, t, 1, max(8, analysis.min_r(hw) // 2)
-    )
-    return registry.AlgoPlan(
-        name, spec, {"m": m, "r_tiles": int(r)},
-        predicted_util=util, cost=cost, tuned=tuned,
+    return pipeline.fused_tile_conv(
+        x, w, transforms.WinogradTransform(m=m, k=k),
+        pad=pad, r_tiles=r_tiles, wt=wt, groups=groups, epilogue=epilogue,
     )
 
 
-class L3FusedAlgorithm(registry.Algorithm):
+class L3FusedAlgorithm(pipeline.TransformedAlgorithm):
     """The paper's contribution as a registry algorithm (tier 0)."""
 
     name = "l3_fused"
     tier = 0
     rank = 10
-    consumes_wt = True
     weight_params = ("m",)
     chain_family = "winograd"
-    default_m = 5  # T = 7, the paper's benchmark configuration
+    tile_param = "m"
+    default_tile = 5  # T = 7, the paper's benchmark configuration
+    r_floor_base = 8
 
-    def supports(self, spec: registry.ConvSpec) -> bool:
-        return spec.groups == 1
-
-    def plan(self, spec, hw, *, hints=None, tune_r=False, wisdom_path=None):
-        return plan_wino_family(
-            self.name, spec, hw, default_m=self.default_m, hints=hints,
-            tune_r=tune_r, wisdom_path=wisdom_path,
-        )
-
-    def prepare_weights(self, w, plan):
-        m = plan.params.get("m")
-        if m is None:
-            raise ValueError(f"{self.name} plan without m: {plan.params}")
-        return transform_kernels(w, m)
-
-    def execute(self, x, w, wt, plan):
-        y = conv2d_l3_fused(
-            x, w, pad=plan.spec.pad, m=plan.params.get("m"),
-            r_tiles=plan.params.get("r_tiles", 24), wt=wt,
-        )
-        return registry.decimate(y, plan.spec.stride)
-
-    def fuse_epilogue(self, plan, epilogue):
-        # fold the elementwise glue into the task scan: it runs on the
-        # (R, T', T', C') tiles while they are still task-resident,
-        # instead of as a separate pass over the assembled output
-        def run(x, w, wt):
-            y = conv2d_l3_fused(
-                x, w, pad=plan.spec.pad, m=plan.params.get("m"),
-                r_tiles=plan.params.get("r_tiles", 24), wt=wt,
-                epilogue=epilogue,
-            )
-            return registry.decimate(y, plan.spec.stride)
-
-        return run
+    def make_transform(self, spec, params):
+        return transforms.WinogradTransform(m=int(params["m"]), k=spec.k)
 
 
 registry.register(L3FusedAlgorithm())

@@ -136,19 +136,21 @@ class AlgoPlan:
 def fused_auto_cost(
     spec: ConvSpec,
     hw: analysis.HardwareModel,
-    t: int,
-    alpha: int,
+    ta,  # transforms.TileAlgebra
     r_floor: int,
 ) -> float:
     """Auto-ranking cost of one fused transform family on `spec`: inf when
-    the padded input cannot cover a single T-tile or the roofline deems the
-    family infeasible (`analysis.fused_cost`), else the modeled time per
-    output pixel with the stride^2 decimation waste charged.  Shared by
-    every fused algorithm so the feasibility gate cannot diverge."""
-    if spec.padded_min < t:
+    the padded input cannot cover a single T-tile or the roofline deems
+    the family infeasible (`analysis.fused_cost_ta`), else the modeled
+    time per output pixel with the stride^2 decimation waste charged.
+    Shared by every fused algorithm -- through each family's own
+    `TileAlgebra` working-set terms -- so the feasibility gate cannot
+    diverge and the planner's auto ranking picks the *transform* per
+    layer, not just the algorithm."""
+    if spec.padded_min < ta.t:
         return math.inf
-    fc = analysis.fused_cost(
-        hw, spec.c_in, spec.c_out, t, spec.k, alpha, r_floor
+    fc = analysis.fused_cost_ta(
+        hw, spec.c_in, spec.c_out, ta, r_floor, spec.groups
     )
     return math.inf if fc is None else fc * spec.stride**2
 
@@ -172,17 +174,21 @@ def decimate(y: jnp.ndarray, stride: int) -> jnp.ndarray:
 class ChainLink:
     """One conv of a fusion-group chain, as `execute_staged` consumes it.
 
-    `epilogue` is the executor-owned pointwise glue of this conv (bias,
-    relu, intermediate extent mask): a callable ``(y, row0) -> y`` where
-    `row0` is the global output-row offset of the region being computed
-    -- tile-position-aware so ragged-batch masking stays exact inside a
-    fused stage.  None means no glue.
+    `elementwise` is position-independent pointwise glue (bias, relu):
+    a callable ``y -> y`` folded into the owning algorithm's task loop
+    via `fuse_epilogue`, so inside a fused stage it runs on tile-resident
+    data exactly as it does in a single stage.  `epilogue` is the
+    position-*dependent* remainder (the ragged-batch extent mask): a
+    callable ``(y, row0) -> y`` where `row0` is the global output-row
+    offset of the region being computed -- tile-position-aware so ragged
+    masking stays exact inside a fused stage.  Either may be None.
     """
 
     w: Optional[jnp.ndarray]
     wt: Optional[jnp.ndarray]
     plan: "AlgoPlan"
     epilogue: Optional[Callable[[jnp.ndarray, int], jnp.ndarray]] = None
+    elementwise: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
 
 
 def _pad0_plan(plan: "AlgoPlan", h: int, w: int) -> "AlgoPlan":
@@ -262,6 +268,13 @@ class Algorithm:
         (cache key component).  R never fragments the cache."""
         return tuple((p, params.get(p)) for p in self.weight_params)
 
+    def tile_algebra(self, plan: "AlgoPlan"):
+        """The transform family's cost/working-set terms for this plan
+        (`transforms.TileAlgebra`), or None for algorithms with no
+        transform tiling (direct).  The fusion-group planner prices
+        joint right-hand-matrix residency through this."""
+        return None
+
     # ----- cross-layer fusion hooks (the ExecProgram staged contract)
 
     def can_chain(self, plan_a: "AlgoPlan", plan_b: "AlgoPlan") -> bool:
@@ -310,10 +323,11 @@ class Algorithm:
         each super-tile flows conv -> epilogue -> conv with a (K-1)-row
         halo recomputed at tile seams, so the live intermediate is
         bounded by `tile_rows` x W x C -- sized by the planner to stay
-        resident in the fast shared level.  Borders are exact: each
-        conv's zero padding is applied per-slice, and rows a tile needs
-        beyond a true tensor extent are re-zeroed rather than reusing
-        phantom values computed from padding.
+        resident in the fast shared level.  Borders are exact and free:
+        each conv's zero padding is applied per-slice, and rows a window
+        needs beyond a true tensor extent are supplied as that padding
+        rather than computed -- the receptive-field recursion clamps to
+        the true extent per level, so border tiles do no phantom work.
 
         Generic over any registered algorithm whose `execute` honours
         `plan.spec` pad at runtime shapes; overriding makes sense only
@@ -323,7 +337,6 @@ class Algorithm:
         if not convs:
             raise ValueError("empty fusion-group chain")
         heights = [int(x.shape[1])]
-        widths = [int(x.shape[2])]
         for link in convs:
             s = link.plan.spec
             if s.stride != 1 or s.groups != 1:
@@ -332,50 +345,66 @@ class Algorithm:
                     f"got {s}"
                 )
             heights.append(heights[-1] + 2 * s.pad - s.k + 1)
-            widths.append(widths[-1] + 2 * s.pad - s.k + 1)
         h_final = heights[-1]
         tile_rows = int(tile_rows) if tile_rows > 0 else h_final
         out_tiles = []
         a = 0
         while a < h_final:
             b = min(a + tile_rows, h_final)
-            # receptive-field pass: rows of each level this tile needs
-            req = [(a, b)]
-            for link in reversed(convs):
-                s = link.plan.spec
-                lo, hi = req[0]
-                req.insert(0, (lo - s.pad, hi - s.pad + s.k - 1))
-            lo0, hi0 = max(req[0][0], 0), min(req[0][1], heights[0])
-            t = x[:, lo0:hi0]
-            have = (lo0, hi0)  # rows of `t` in level-0 coordinates
+            # receptive-field pass, clamped to each level's true extent:
+            # rows a window needs beyond an extent are that conv's own
+            # zero padding, re-supplied per slice below -- they are never
+            # computed, so they need no inputs of their own.  `mat[i]` is
+            # the row range of level i this tile materializes; `want[i]`
+            # extends it by conv i's zero padding.
+            mat = [(a, b)]
+            want = [None] * len(convs)
+            for i in reversed(range(len(convs))):
+                s = convs[i].plan.spec
+                lo, hi = mat[0]
+                want[i] = (lo - s.pad, hi - s.pad + s.k - 1)
+                mat.insert(
+                    0, (max(want[i][0], 0), min(want[i][1], heights[i]))
+                )
+            t = x[:, mat[0][0] : mat[0][1]]
             for i, link in enumerate(convs):
                 s = link.plan.spec
-                want_lo, want_hi = req[i]
-                # conv padding: requested rows beyond the level's true
-                # extent, plus full-width column padding (tiles span W)
-                t = jnp.pad(
-                    t,
-                    (
-                        (0, 0),
-                        (have[0] - want_lo, want_hi - have[1]),
-                        (s.pad, s.pad),
-                        (0, 0),
-                    ),
-                )
+                (wlo, whi), (mlo, mhi) = want[i], mat[i]
+                if (mlo - wlo, whi - mhi) == (s.pad, s.pad):
+                    # the wanted halo is exactly the conv's own padding on
+                    # both sides (whole-extent tiles): keep the plan's pad
+                    # and skip the explicit copy -- identical structure to
+                    # the unfused single stage
+                    run_plan = dataclasses.replace(
+                        link.plan,
+                        spec=dataclasses.replace(
+                            s, h=int(t.shape[1]), w=int(t.shape[2])
+                        ),
+                    )
+                else:
+                    # conv padding: wanted rows beyond the level's true
+                    # extent, plus full-width column padding (tiles span W)
+                    t = jnp.pad(
+                        t,
+                        (
+                            (0, 0),
+                            (mlo - wlo, whi - mhi),
+                            (s.pad, s.pad),
+                            (0, 0),
+                        ),
+                    )
+                    run_plan = _pad0_plan(
+                        link.plan, int(t.shape[1]), int(t.shape[2])
+                    )
                 alg = get(link.plan.algo)
-                y = alg.execute(
-                    t, link.w, link.wt,
-                    _pad0_plan(link.plan, int(t.shape[1]), int(t.shape[2])),
+                # the conv's elementwise glue folds into its task loop
+                # exactly as in a single stage; the output covers exactly
+                # mat[i + 1] (no phantom rows to crop)
+                t = alg.fuse_epilogue(run_plan, link.elementwise)(
+                    t, link.w, link.wt
                 )
-                out_lo, out_hi = req[i + 1]
-                clo = max(out_lo, 0)
-                chi = min(out_hi, heights[i + 1])
-                # drop phantom rows computed from padding beyond the true
-                # extent -- the next conv re-zeroes them as *its* padding
-                t = y[:, clo - out_lo : int(y.shape[1]) - (out_hi - chi)]
                 if link.epilogue is not None:
-                    t = link.epilogue(t, clo)
-                have = (clo, chi)
+                    t = link.epilogue(t, mat[i + 1][0])
             out_tiles.append(t)
             a = b
         return (

@@ -27,7 +27,8 @@ class SharedBufferPlan:
     r: int
     c_in: int
     c_out: int
-    t2: int  # T^2 matmuls
+    t2: int  # domain matmuls: T^2 (Winograd) or T*(T/2+1) (rfft)
+    elem_bytes: int = 4  # 4 for real domains, 8 for complex (FFT)
 
     @property
     def width(self) -> int:
@@ -47,18 +48,18 @@ class SharedBufferPlan:
 
     @property
     def bytes(self) -> int:
-        return 4 * self.rows * self.width
+        return self.elem_bytes * self.rows * self.width
 
     @property
     def naive_bytes(self) -> int:
         """Separate-buffer working set: T^2 * (4RC + 4RC')."""
-        return 4 * self.t2 * self.r * (self.c_in + self.c_out)
+        return self.elem_bytes * self.t2 * self.r * (self.c_in + self.c_out)
 
     @property
     def paper_bound_bytes(self) -> int:
         """T^2 S_max + S_min (byte-granular bound from the paper)."""
-        s_max = 4 * self.r * max(self.c_in, self.c_out)
-        s_min = 4 * self.r * min(self.c_in, self.c_out)
+        s_max = self.elem_bytes * self.r * max(self.c_in, self.c_out)
+        s_min = self.elem_bytes * self.r * min(self.c_in, self.c_out)
         return self.t2 * s_max + s_min
 
     @property
@@ -76,13 +77,25 @@ class SharedBufferPlan:
 
 
 def max_r_for_budget(
-    budget_bytes: int, c_in: int, c_out: int, t: int, *, shared: bool = True
+    budget_bytes: int,
+    c_in: int,
+    c_out: int,
+    t: int,
+    *,
+    shared: bool = True,
+    points: int = 0,
+    elem_bytes: int = 4,
 ) -> int:
-    """Largest R whose working set fits `budget_bytes` (paper S5.2)."""
-    t2 = t * t
+    """Largest R whose working set fits `budget_bytes` (paper S5.2).
+
+    `points`/`elem_bytes` generalize beyond fp32 Winograd: the number of
+    stored domain elements per tile plane (defaults to T^2) and their
+    width (8 for the FFT's complex domain) -- `TileAlgebra` supplies both.
+    """
+    t2 = points if points else t * t
     w = max(c_in, c_out)
     if shared:
-        denom = 4 * (t2 + 1) * w
+        denom = elem_bytes * (t2 + 1) * w
     else:
-        denom = 4 * t2 * (c_in + c_out)
+        denom = elem_bytes * t2 * (c_in + c_out)
     return max(1, budget_bytes // denom)

@@ -2,17 +2,18 @@
 
 This is the structure the paper attributes to DNNL / ZNN / LIBXSMM / FALCON
 (and uses as its own baseline): each stage runs over ALL tiles before the
-next begins, materialising the full transformed tensors
+next begins, materialising the full transformed tensors (left-hand
+matrices U and products M) in main memory (HBM on TPU).  Stages 1 and 3
+are memory-bound; stage 2 is the only potentially compute-bound part
+(paper S3).
 
-    U: (T*T, N_tile, C)     "left-hand matrices"
-    M: (T*T, N_tile, C')    products
-
-in main memory (HBM on TPU).  Stages 1 and 3 are memory-bound; stage 2 is
-the only potentially compute-bound part (paper S3).
-
-For honest CPU benchmarking the three stages can be jitted *separately*
-(`three_stage_staged`), preventing XLA from fusing across stage boundaries,
-which is exactly the materialisation behaviour of the vendor libraries.
+The stages themselves come from the shared tile engine
+(`repro.core.pipeline.staged_stage_fns`) driven by a `WinogradTransform`;
+this module binds them to the Winograd family and registers the tier-1
+fallback algorithm.  For honest CPU benchmarking the three stages can be
+jitted *separately* (`ThreeStageStaged`), preventing XLA from fusing
+across stage boundaries, which is exactly the materialisation behaviour
+of the vendor libraries.
 """
 
 from __future__ import annotations
@@ -22,9 +23,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import analysis, registry, tiling, transforms
+from repro.core import analysis, pipeline, registry, tiling, transforms
 
 
 def transform_kernels(w: jnp.ndarray, m: int) -> jnp.ndarray:
@@ -33,53 +33,7 @@ def transform_kernels(w: jnp.ndarray, m: int) -> jnp.ndarray:
     Done once ahead of time (paper footnote 1: transformed kernels are
     precomputed and stored for inference; see also Liu et al. for training).
     """
-    k = w.shape[0]
-    _, g, _ = transforms.winograd_matrices(m, k)
-    g = jnp.asarray(g, w.dtype)
-    # W_t[x, y] = G W G^T per (C, C') pair
-    wt = jnp.einsum("xi,ijcd,yj->xycd", g, w, g)
-    t = m + k - 1
-    return wt.reshape(t * t, w.shape[2], w.shape[3])
-
-
-def stage1_input_transform(
-    x_padded: jnp.ndarray, plan: tiling.TilePlan
-) -> jnp.ndarray:
-    """All input tiles -> U: (T*T, N_tile, C)."""
-    bt_np, _, _ = _mats(plan)
-    bt = jnp.asarray(bt_np, x_padded.dtype)
-    tiles = tiling.extract_tiles(x_padded, plan)  # (B, nH, nW, T, T, C)
-    b = tiles.shape[0]
-    tiles = tiles.reshape(b * plan.tiles_per_image, plan.t, plan.t, -1)
-    u = jnp.einsum("xi,nijc,yj->xync", bt, tiles, bt)
-    n_tile = u.shape[2]
-    return u.reshape(plan.t * plan.t, n_tile, -1)
-
-
-def stage2_multiply(u: jnp.ndarray, wt: jnp.ndarray) -> jnp.ndarray:
-    """T*T large matmuls: (T*T, N, C) @ (T*T, C, C') -> (T*T, N, C')."""
-    return jnp.einsum("snc,scd->snd", u, wt)
-
-
-def stage3_inverse_transform(
-    m_tensor: jnp.ndarray, plan: tiling.TilePlan, batch: int
-) -> jnp.ndarray:
-    """M: (T*T, N_tile, C') -> assembled output (B, H', W', C')."""
-    _, _, at_np = _mats(plan)
-    at = jnp.asarray(at_np, m_tensor.dtype)
-    n_tile = m_tensor.shape[1]
-    z = m_tensor.reshape(plan.t, plan.t, n_tile, -1)
-    y_tiles = jnp.einsum("xi,ijnc,yj->nxyc", at, z, at)
-    y_tiles = y_tiles.reshape(
-        batch, plan.n_tiles_h, plan.n_tiles_w, plan.t_out, plan.t_out, -1
-    )
-    return tiling.assemble_tiles(y_tiles, plan)
-
-
-def _mats(plan: tiling.TilePlan):
-    m = plan.t_out
-    at, g, bt = transforms.winograd_matrices(m, plan.k)
-    return bt, g, at
+    return transforms.WinogradTransform(m=m, k=w.shape[0]).kernel_transform(w)
 
 
 def conv2d_three_stage(
@@ -89,68 +43,66 @@ def conv2d_three_stage(
     pad: int = 0,
     m: Optional[int] = None,
     wt: Optional[jnp.ndarray] = None,
+    groups: int = 1,
 ) -> jnp.ndarray:
     """NHWC x (B,H,W,C), HWIO w (K,K,C,C') -> (B,H',W',C'). Single-jit form."""
-    k = w.shape[0]
     m = m if m is not None else 6  # T = 8 default
-    plan = tiling.TilePlan.build(x.shape[1], x.shape[2], k, pad, m + k - 1)
-    if wt is None:
-        wt = transform_kernels(w, m)
-    xp = tiling.pad_input(x, plan)
-    u = stage1_input_transform(xp, plan)
-    mm = stage2_multiply(u, wt)
-    return stage3_inverse_transform(mm, plan, x.shape[0])
+    return pipeline.staged_tile_conv(
+        x, w, transforms.WinogradTransform(m=m, k=w.shape[0]),
+        pad=pad, wt=wt, groups=groups,
+    )
 
 
-class ThreeStageAlgorithm(registry.Algorithm):
+class ThreeStageAlgorithm(pipeline.TransformedAlgorithm):
     """The vendor-structure baseline as a registry algorithm.
 
     Tier 1: always roofline-feasible (stages stream through DRAM), so it
     is the fallback whenever every fused path is infeasible -- but never
     beats a feasible fused path regardless of modeled cost, matching the
-    paper's preference order.
+    paper's preference order.  `chain_family` stays None: the 3-stage
+    baseline *is* the materializing structure, so it never joins fusion
+    groups.
     """
 
     name = "three_stage"
     tier = 1
     rank = 30
-    consumes_wt = True
     weight_params = ("m",)
-    default_m = 6  # T = 8, this module's historical default
+    tile_param = "m"
+    default_tile = 6  # T = 8, this module's historical default
 
-    def supports(self, spec: registry.ConvSpec) -> bool:
-        return spec.groups == 1
+    def make_transform(self, spec, params):
+        return transforms.WinogradTransform(m=int(params["m"]), k=spec.k)
 
     def plan(self, spec, hw, *, hints=None, tune_r=False, wisdom_path=None):
         hints = hints or {}
-        m = int(hints.get("m") or self.default_m)
-        t = m + spec.k - 1
+        m = int(hints.get("m") or self.default_tile)
+        ta = transforms.WinogradTransform(m=m, k=spec.k).algebra
         # DRAM roofline bounds utilisation: U and M round-trip main memory.
         util = min(
-            1.0, analysis.ai_dram(spec.c_in, spec.c_out, t, m) / hw.cmr_dram
+            1.0,
+            analysis.ai_dram(
+                spec.c_in, spec.c_out, ta.t, ta.t_out, ta.alpha, spec.groups
+            )
+            / hw.cmr_dram,
         )
         cost = math.inf
-        if spec.padded_min >= t:  # tile-fit heuristic gates auto only
+        if spec.padded_min >= ta.t:  # tile-fit heuristic gates auto only
             cost = (
-                analysis.flops_per_output_px(t, m)
-                / max(util, 1e-9)
-                * spec.stride**2
+                ta.flops_per_output_px() / max(util, 1e-9) * spec.stride**2
             )
         return registry.AlgoPlan(
             self.name, spec, {"m": m}, predicted_util=util, cost=cost
         )
 
-    def prepare_weights(self, w, plan):
-        m = plan.params.get("m")
-        if m is None:
-            raise ValueError(f"{self.name} plan without m: {plan.params}")
-        return transform_kernels(w, m)
-
-    def execute(self, x, w, wt, plan):
-        y = conv2d_three_stage(
-            x, w, pad=plan.spec.pad, m=plan.params.get("m"), wt=wt
+    def _run(self, x, w, wt, plan, epilogue):
+        # materializing structure: no task loop to fold an epilogue into
+        # (the base fuse_epilogue applies it to the assembled output)
+        tr = self.make_transform(plan.spec, plan.params)
+        y = pipeline.staged_tile_conv(
+            x, w, tr, pad=plan.spec.pad, wt=wt, groups=plan.spec.groups
         )
-        return registry.decimate(y, plan.spec.stride)
+        return y if epilogue is None else epilogue(y)
 
 
 registry.register(ThreeStageAlgorithm())
@@ -165,11 +117,12 @@ class ThreeStageStaged:
 
     def __init__(self, plan: tiling.TilePlan):
         self.plan = plan
-        self._s1 = jax.jit(lambda xp: stage1_input_transform(xp, plan))
-        self._s2 = jax.jit(stage2_multiply)
-        self._s3 = jax.jit(
-            lambda mt, b: stage3_inverse_transform(mt, plan, b), static_argnums=1
+        s1, s2, s3 = pipeline.staged_stage_fns(
+            transforms.WinogradTransform(m=plan.t_out, k=plan.k), plan
         )
+        self._s1 = jax.jit(s1)
+        self._s2 = jax.jit(s2)
+        self._s3 = jax.jit(s3, static_argnums=1)
         self._pad = jax.jit(lambda x: tiling.pad_input(x, plan))
 
     def __call__(self, x: jnp.ndarray, wt: jnp.ndarray) -> jnp.ndarray:

@@ -30,10 +30,12 @@ matrices themselves are exact.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from fractions import Fraction
-from typing import Sequence, Tuple
+from typing import ClassVar, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 # Canonical interpolation-point sequence.  The ordering matters for numerical
@@ -159,3 +161,216 @@ def fft_num_freqs(t: int) -> int:
 def fft_flops_per_point() -> int:
     """Complex multiply-accumulate = 4 real mults + 4 adds (paper's alpha=2)."""
     return 8
+
+
+# ---------------------------------------------------------------------------
+# The Transform protocol.
+#
+# The paper's task pipeline -- gather R tiles, forward-transform, channel-mix
+# against stationary right-hand matrices, inverse-transform, scatter -- is
+# transform-agnostic: only the basis change and the domain the channel mix
+# runs in differ between Winograd and FFT.  A `Transform` packages exactly
+# that difference, so one tile engine (repro.core.pipeline) serves every
+# family, and the cost model sees each family through its `TileAlgebra`.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TileAlgebra:
+    """Cost/working-set terms of one transform family at one tile size.
+
+    Everything the roofline model (core.analysis), the R-tuner (core.tune)
+    and the fusion-group planner need to reason about a transform without
+    knowing its math:
+
+      alpha          real-MAC multiplier of the channel mix in the paper's
+                     FLOP accounting (1 Winograd; 2 FFT -- the complex 4x
+                     folded against the rfft half-spectrum)
+      domain_points  stored domain elements per tile plane (T^2 Winograd,
+                     T*(T/2+1) rfft frequencies)
+      elem_bytes     bytes per stored domain element (4 real, 8 complex)
+    """
+
+    family: str
+    t: int
+    t_out: int
+    alpha: int
+    domain_points: int
+    elem_bytes: int = 4
+
+    def kernel_matrix_bytes(self, c_in: int, c_out: int, groups: int = 1) -> int:
+        """Right-hand (transformed-kernel) matrices' resident footprint."""
+        return self.elem_bytes * self.domain_points * (c_in // groups) * c_out
+
+    def domain_tile_bytes(self, channels: int) -> int:
+        """One transformed tile's bytes -- the per-tile working-set term."""
+        return self.elem_bytes * self.domain_points * channels
+
+    def flops_per_output_px(self) -> float:
+        """Channel-mix FLOPs per output pixel, in units of C*C'."""
+        return self.alpha * 2.0 * self.t * self.t / float(self.t_out**2)
+
+
+class Transform:
+    """One transform family's basis change, as the tile engine drives it.
+
+    Tiles flow (N, T, T, C) -> forward -> domain -> multiply (channel mix
+    against right-hand matrices from `kernel_transform`) -> inverse ->
+    (N, T', T', C').  `domain_dtype` names the dtype tiles occupy between
+    forward and inverse; inputs outside the family's compute domain (bf16
+    for FFT) are lifted in `forward` and restored by the engine after
+    assembly.  `algebra` feeds the cost model.
+    """
+
+    family: ClassVar[str] = ""
+
+    t: int
+    k: int
+
+    @property
+    def t_out(self) -> int:
+        return self.t - self.k + 1
+
+    @property
+    def algebra(self) -> TileAlgebra:
+        raise NotImplementedError
+
+    def forward(self, tiles: jnp.ndarray) -> jnp.ndarray:
+        """(N, T, T, C) spatial tiles -> transform-domain tiles."""
+        raise NotImplementedError
+
+    def multiply(
+        self, u: jnp.ndarray, wt: jnp.ndarray, groups: int = 1
+    ) -> jnp.ndarray:
+        """Channel mix in the transform domain; block-diagonal over groups."""
+        raise NotImplementedError
+
+    def inverse(self, u: jnp.ndarray) -> jnp.ndarray:
+        """Domain tiles -> (N, T', T', C') output tiles."""
+        raise NotImplementedError
+
+    def kernel_transform(self, w: jnp.ndarray) -> jnp.ndarray:
+        """HWIO kernels -> right-hand matrices (the ahead-of-time step)."""
+        raise NotImplementedError
+
+    def domain_dtype(self, dtype) -> jnp.dtype:
+        """Dtype of transformed tiles for `dtype` inputs."""
+        raise NotImplementedError
+
+
+def _grouped_mix(u2, wt, groups, sub):
+    """Block-diagonal channel mix: u2 (N, S, C), wt (S, C/g, C') where
+    output channel j belongs to group j // (C'/g).  `sub` is the einsum
+    over one group's channels."""
+    n, s, c = u2.shape
+    c_out = wt.shape[-1]
+    ug = u2.reshape(n, s, groups, c // groups)
+    wg = wt.reshape(s, c // groups, groups, c_out // groups)
+    return jnp.einsum(sub, ug, wg).reshape(n, s, c_out)
+
+
+@dataclasses.dataclass(frozen=True)
+class WinogradTransform(Transform):
+    """F(m, r) Cook-Toom basis: y = A^T [ (G g) . (B^T d) ] A."""
+
+    m: int
+    k: int
+
+    family: ClassVar[str] = "winograd"
+
+    @property
+    def t(self) -> int:  # type: ignore[override]
+        return self.m + self.k - 1
+
+    @property
+    def algebra(self) -> TileAlgebra:
+        return TileAlgebra(
+            family=self.family, t=self.t, t_out=self.m, alpha=1,
+            domain_points=self.t * self.t, elem_bytes=4,
+        )
+
+    def _mats(self, dtype):
+        at, _, bt = winograd_matrices(self.m, self.k)
+        return jnp.asarray(at, dtype), jnp.asarray(bt, dtype)
+
+    def forward(self, tiles):
+        _, bt = self._mats(tiles.dtype)
+        return jnp.einsum("xi,nijc,yj->nxyc", bt, tiles, bt)
+
+    def multiply(self, u, wt, groups: int = 1):
+        n = u.shape[0]
+        t = self.t
+        u2 = u.reshape(n, t * t, -1)
+        if groups == 1:
+            mm = jnp.einsum("nsc,scd->nsd", u2, wt)
+        else:
+            mm = _grouped_mix(u2, wt, groups, "nsgc,scgd->nsgd")
+        return mm.reshape(n, t, t, -1)
+
+    def inverse(self, u):
+        at, _ = self._mats(u.dtype)
+        return jnp.einsum("xi,nijc,yj->nxyc", at, u, at)
+
+    def kernel_transform(self, w):
+        _, g, _ = winograd_matrices(self.m, self.k)
+        g = jnp.asarray(g, w.dtype)
+        wt = jnp.einsum("xi,ijcd,yj->xycd", g, w, g)
+        return wt.reshape(self.t * self.t, w.shape[2], w.shape[3])
+
+    def domain_dtype(self, dtype) -> jnp.dtype:
+        return jnp.dtype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTTransform(Transform):
+    """T-point rfft basis; cross-correlation via the correlation theorem.
+
+    Computes in fp32/fp64 regardless of the input dtype: sub-fp32 inputs
+    (bf16, fp16) are lifted to fp32 in `forward` / `kernel_transform` and
+    the engine casts the assembled output back -- a real reduced-precision
+    path, not a capability fallback.
+    """
+
+    t: int
+    k: int
+
+    family: ClassVar[str] = "fft"
+
+    @property
+    def algebra(self) -> TileAlgebra:
+        return TileAlgebra(
+            family=self.family, t=self.t, t_out=self.t_out, alpha=2,
+            domain_points=self.t * fft_num_freqs(self.t), elem_bytes=8,
+        )
+
+    @staticmethod
+    def _lift(x):
+        return x.astype(jnp.float32) if x.dtype not in (
+            jnp.float32, jnp.float64
+        ) else x
+
+    def forward(self, tiles):
+        return jnp.fft.rfft2(self._lift(tiles), axes=(1, 2))  # (N, T, F, C)
+
+    def multiply(self, u, wt, groups: int = 1):
+        if groups == 1:
+            return jnp.einsum("nxfc,xfcd->nxfd", u, wt)
+        n, x, f, _ = u.shape
+        mm = _grouped_mix(
+            u.reshape(n, x * f, -1), wt.reshape(x * f, *wt.shape[2:]),
+            groups, "nsgc,scgd->nsgd",
+        )
+        return mm.reshape(n, x, f, -1)
+
+    def inverse(self, u):
+        y = jnp.fft.irfft2(u, s=(self.t, self.t), axes=(1, 2))
+        return y[:, : self.t_out, : self.t_out, :]
+
+    def kernel_transform(self, w):
+        wf = jnp.fft.rfft2(self._lift(w), s=(self.t, self.t), axes=(0, 1))
+        return jnp.conj(wf)  # (T, F, C, C')
+
+    def domain_dtype(self, dtype) -> jnp.dtype:
+        return jnp.dtype(
+            jnp.complex128 if jnp.dtype(dtype) == jnp.float64 else jnp.complex64
+        )

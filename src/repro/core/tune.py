@@ -6,10 +6,17 @@
 
 The analytical bounds (core.analysis) give the feasible range; within it we
 time the fused convolution at a few candidate R values and store the
-winner keyed by (layer geometry, tile size, backend).  `predict_r` is the
+winner keyed by (transform family, tile size, layer geometry, backend) --
+family in the key, so a Winograd-R and an FFT-T tune for the same layer
+can never collide or overwrite each other.  `predict_r` is the
 non-measuring path used by the convserve planner when tuning is disabled:
 it picks the candidate that satisfies the R >= 2 CMR_fast lower bound while
-staying within the private-memory upper bound.
+staying within the (family-exact, `TileAlgebra`-priced) private-memory
+upper bound.
+
+Every entry point takes an optional `transform` (a `core.transforms`
+Transform); the m/k keyword pair is the historical Winograd-only spelling
+and resolves to `WinogradTransform(m, k)`.
 """
 
 from __future__ import annotations
@@ -24,16 +31,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import analysis
-from repro.core.fused import conv2d_l3_fused
+from repro.core import analysis, transforms
 from repro.core.ioutil import atomic_write_text
+from repro.core.pipeline import fused_tile_conv
 
 _DEFAULT_WISDOM = pathlib.Path.home() / ".cache" / "repro_wisdom.json"
 _CANDIDATES = (4, 8, 16, 24, 32, 48)
 
 
-def _key(h, w, c_in, c_out, k, m) -> str:
-    return f"{jax.default_backend()}:{h}x{w}x{c_in}->{c_out}:k{k}:m{m}"
+def _resolve_transform(
+    transform: Optional[transforms.Transform], k: int, m: int
+) -> transforms.Transform:
+    return (
+        transform
+        if transform is not None
+        else transforms.WinogradTransform(m=m, k=k)
+    )
+
+
+def _key(tr: transforms.Transform, h, w, c_in, c_out) -> str:
+    """Wisdom key: backend + transform family + tile size + geometry."""
+    return (
+        f"{jax.default_backend()}:{tr.family}:{h}x{w}x{c_in}->{c_out}"
+        f":k{tr.k}:t{tr.t}"
+    )
 
 
 def _load(path: pathlib.Path) -> dict:
@@ -75,23 +96,24 @@ def default_hw() -> analysis.HardwareModel:
 
 def feasible_candidates(
     c_in: int, c_out: int, *, k: int = 3, m: int = 5,
-    t: Optional[int] = None,
+    transform: Optional[transforms.Transform] = None,
     hw: Optional[analysis.HardwareModel] = None,
     candidates: Sequence[int] = _CANDIDATES,
 ) -> list:
     """Candidates within the private-memory upper bound; never empty --
     the smallest candidate survives even when the bound excludes all, so a
-    degenerate geometry still tunes rather than erroring.  `t` overrides
-    the Winograd tile size m + k - 1 (used for the FFT tile)."""
+    degenerate geometry still tunes rather than erroring.  The bound is
+    family-exact: complex FFT tiles halve the feasible R."""
     hw = hw or default_hw()
-    r_max = analysis.max_r(hw, c_in, c_out, t if t is not None else m + k - 1)
+    tr = _resolve_transform(transform, k, m)
+    r_max = analysis.max_r_ta(hw, c_in, c_out, tr.algebra)
     feas = [r for r in candidates if r <= r_max]
     return feas or [min(candidates)]
 
 
 def predict_r(
     c_in: int, c_out: int, *, k: int = 3, m: int = 5,
-    t: Optional[int] = None,
+    transform: Optional[transforms.Transform] = None,
     hw: Optional[analysis.HardwareModel] = None,
     candidates: Sequence[int] = _CANDIDATES,
 ) -> int:
@@ -100,7 +122,8 @@ def predict_r(
     one.  Used when tuning is disabled; `tuned_r` refines it by timing."""
     hw = hw or default_hw()
     feas = feasible_candidates(
-        c_in, c_out, k=k, m=m, t=t, hw=hw, candidates=candidates
+        c_in, c_out, k=k, m=m, transform=transform, hw=hw,
+        candidates=candidates,
     )
     target = analysis.min_r(hw)
     at_or_above = [r for r in feas if r >= target]
@@ -109,30 +132,39 @@ def predict_r(
 
 def lookup_r(
     h: int, w: int, c_in: int, c_out: int, *, k: int = 3, m: int = 5,
+    transform: Optional[transforms.Transform] = None,
     wisdom_path: Optional[pathlib.Path] = None,
 ) -> Optional[int]:
-    """Non-measuring wisdom read: the tuned R for this layer geometry if a
-    previous `tuned_r` pass stored one, else None.  This is how
-    ``algo="auto"`` benefits from the wisdom file without ever paying a
-    measurement at dispatch time."""
+    """Non-measuring wisdom read: the tuned R for this transform family +
+    layer geometry if a previous `tuned_r` pass stored one, else None.
+    This is how ``algo="auto"`` benefits from the wisdom file without
+    ever paying a measurement at dispatch time."""
     path = pathlib.Path(wisdom_path or _DEFAULT_WISDOM)
     wisdom = _load_cached(path)
-    key = _key(h, w, c_in, c_out, k, m)
+    key = _key(_resolve_transform(transform, k, m), h, w, c_in, c_out)
     return int(wisdom[key]) if key in wisdom else None
 
 
 def measure_r(
     h: int, w: int, c_in: int, c_out: int, *, k: int = 3, m: int = 5,
+    transform: Optional[transforms.Transform] = None,
     batch: int = 1, candidates: Sequence[int] = _CANDIDATES, reps: int = 3,
 ) -> int:
-    """Time the fused conv at each candidate R; return the fastest."""
+    """Time the fused conv at each candidate R; return the fastest.
+    Transform-generic: the timed loop is the shared tile engine driven by
+    `transform` (Winograd F(m, k) by default)."""
+    tr = _resolve_transform(transform, k, m)
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((batch, h, w, c_in)) * 0.1, jnp.float32)
-    wk = jnp.asarray(rng.standard_normal((k, k, c_in, c_out)) * 0.1, jnp.float32)
+    wk = jnp.asarray(
+        rng.standard_normal((tr.k, tr.k, c_in, c_out)) * 0.1, jnp.float32
+    )
     best_r, best_t = None, float("inf")
-    for r in feasible_candidates(c_in, c_out, k=k, m=m, candidates=candidates):
+    for r in feasible_candidates(
+        c_in, c_out, transform=tr, candidates=candidates
+    ):
         fn = jax.jit(
-            functools.partial(conv2d_l3_fused, pad=1, m=m, r_tiles=r)
+            functools.partial(fused_tile_conv, transform=tr, pad=1, r_tiles=r)
         )
         jax.block_until_ready(fn(x, wk))  # compile
         ts = []
@@ -148,15 +180,18 @@ def measure_r(
 
 def tuned_r(
     h: int, w: int, c_in: int, c_out: int, *, k: int = 3, m: int = 5,
+    transform: Optional[transforms.Transform] = None,
     wisdom_path: Optional[pathlib.Path] = None,
 ) -> int:
-    """Cached best R for this layer geometry (measures on first use)."""
+    """Cached best R for this transform family + layer geometry (measures
+    on first use)."""
+    tr = _resolve_transform(transform, k, m)
     path = pathlib.Path(wisdom_path or _DEFAULT_WISDOM)
     wisdom = _load(path)
-    key = _key(h, w, c_in, c_out, k, m)
+    key = _key(tr, h, w, c_in, c_out)
     if key in wisdom:
         return int(wisdom[key])
-    r = measure_r(h, w, c_in, c_out, k=k, m=m)
+    r = measure_r(h, w, c_in, c_out, transform=tr)
     wisdom = _load(path)  # re-read: another tuner may have written meanwhile
     wisdom[key] = int(r)
     atomic_write_text(path, json.dumps(wisdom, indent=1, sort_keys=True))

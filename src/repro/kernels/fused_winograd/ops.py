@@ -9,9 +9,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import registry, tiling
-from repro.core.fused import plan_wino_family
-from repro.core.three_stage import transform_kernels
+from repro.core import registry, tiling, transforms
+from repro.core.fused import L3FusedAlgorithm
 from repro.kernels.fused_winograd.kernel import fused_winograd_call
 
 
@@ -24,7 +23,7 @@ def _extended_plan(plan: tiling.TilePlan, r: int) -> tiling.TilePlan:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("pad", "m", "r_tiles", "interpret")
+    jax.jit, static_argnames=("pad", "m", "r_tiles", "groups", "interpret")
 )
 def conv2d_fused_pallas(
     x: jnp.ndarray,
@@ -33,27 +32,45 @@ def conv2d_fused_pallas(
     pad: int = 0,
     m: Optional[int] = None,
     r_tiles: int = 16,
+    groups: int = 1,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """NHWC (B,H,W,C) x HWIO (K,K,C,C') -> NHWC, via the Pallas fused kernel.
+    """NHWC (B,H,W,C) x HWIO (K,K,C/g,C') -> NHWC, via the Pallas fused kernel.
 
     interpret=None auto-selects: real lowering on TPU, interpreter elsewhere.
+    Grouped convolutions run the kernel once per group over the group's
+    channel slices (the kernel itself computes a dense channel mix).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    k = w.shape[0]
-    m = m if m is not None else 5
-    t = m + k - 1
-    plan = tiling.TilePlan.build(x.shape[1], x.shape[2], k, pad, t)
+    if groups > 1:
+        cg_in = x.shape[3] // groups
+        cg_out = w.shape[3] // groups
+        run = functools.partial(
+            conv2d_fused_pallas,
+            pad=pad, m=m, r_tiles=r_tiles, groups=1, interpret=interpret,
+        )
+        return jnp.concatenate(
+            [
+                run(
+                    x[..., g * cg_in : (g + 1) * cg_in],
+                    w[..., g * cg_out : (g + 1) * cg_out],
+                )
+                for g in range(groups)
+            ],
+            axis=-1,
+        )
+    tr = transforms.WinogradTransform(m=m if m is not None else 5, k=w.shape[0])
+    plan = tiling.TilePlan.build(x.shape[1], x.shape[2], tr.k, pad, tr.t)
     r = min(r_tiles, plan.n_tiles_w)
     plan = _extended_plan(plan, r)
     xp = tiling.pad_input(x, plan)
-    wt = transform_kernels(w, m)
+    wt = tr.kernel_transform(w)
     y = fused_winograd_call(
         xp,
         wt,
-        m=m,
-        k=k,
+        m=tr.m,
+        k=tr.k,
         n_tiles_h=plan.n_tiles_h,
         n_tiles_w=plan.n_tiles_w,
         r=r,
@@ -62,12 +79,15 @@ def conv2d_fused_pallas(
     return y[:, : plan.h_out, : plan.w_out, :]
 
 
-class L3FusedPallasAlgorithm(registry.Algorithm):
+class L3FusedPallasAlgorithm(L3FusedAlgorithm):
     """The hand-written Pallas TPU kernel as a registry algorithm.
 
-    Explicit-only (`auto_candidate = False`): correct on every backend via
-    interpret mode, but only profitable where the kernel lowers natively --
-    auto resolution should not hand CPU hosts an interpreted kernel.  The
+    Shares the Winograd family's plan step (same transform, same
+    family-keyed wisdom R: a tuned R for l3_fused is the best available
+    estimate for the kernel's task width too) but is explicit-only
+    (`auto_candidate = False`): correct on every backend via interpret
+    mode, yet only profitable where the kernel lowers natively -- auto
+    resolution should not hand CPU hosts an interpreted kernel.  The
     kernel transforms its own weights inside the jit (constant-folded per
     compile), so it has no ahead-of-time prepare step and never consumes a
     cached `wt`.
@@ -77,27 +97,25 @@ class L3FusedPallasAlgorithm(registry.Algorithm):
     tier = 0
     rank = 15
     consumes_wt = False
+    weight_params = ()
     auto_candidate = False
     chain_family = "winograd"  # chains with the pure-JAX Winograd path
-    default_m = 5
 
-    def supports(self, spec: registry.ConvSpec) -> bool:
-        return spec.groups == 1
-
-    def plan(self, spec, hw, *, hints=None, tune_r=False, wisdom_path=None):
-        # shares the Winograd wisdom family: a tuned R for l3_fused is the
-        # best available estimate for the kernel's task width too
-        return plan_wino_family(
-            self.name, spec, hw, default_m=self.default_m, hints=hints,
-            tune_r=tune_r, wisdom_path=wisdom_path,
-        )
+    def prepare_weights(self, w, plan):
+        return None
 
     def execute(self, x, w, wt, plan):
         y = conv2d_fused_pallas(
             x, w, pad=plan.spec.pad, m=plan.params.get("m"),
-            r_tiles=plan.params.get("r_tiles", 16),
+            r_tiles=int(plan.params.get("r_tiles", 16)),
+            groups=plan.spec.groups,
         )
         return registry.decimate(y, plan.spec.stride)
+
+    def fuse_epilogue(self, plan, epilogue):
+        # the kernel's task loop is hand-written: elementwise glue runs on
+        # the assembled output rather than in-scan (base Algorithm path)
+        return registry.Algorithm.fuse_epilogue(self, plan, epilogue)
 
 
 registry.register(L3FusedPallasAlgorithm())

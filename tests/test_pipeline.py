@@ -1,0 +1,342 @@
+"""The unified tile engine: one parity matrix over every registered
+transformed algorithm x every engine scenario, plus the Transform
+protocol itself and FFT-backed fusion groups through the staged engine.
+
+Exactness oracle is always `lax.conv_general_dilated` (the direct conv),
+to fp32 transform tolerance.
+"""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.convnets import fft_fewchannel
+from repro.convserve import (
+    Engine,
+    NetExecutor,
+    init_weights,
+    run_direct,
+)
+from repro.convserve.graph import NetSpec, conv
+from repro.convserve.plan import LayerPlan, NetPlan
+from repro.convserve.planner import plan_net
+from repro.core import analysis, registry, transforms, tune
+from repro.core.registry import ConvSpec
+
+BIG_HW = analysis.HardwareModel(
+    name="big", peak_flops=1e12, dram_bw=1e11, fast_shared_bw=5e11,
+    fast_shared_bytes=1 << 30, private_bytes=1 << 24,
+)
+
+# every registered algorithm that realizes a transform tiling (the
+# Pallas kernel included: it inherits the Winograd family's algebra)
+TRANSFORMED = tuple(
+    n for n in registry.names() if registry.get(n).tile_algebra(
+        registry.AlgoPlan(
+            n, ConvSpec(h=16, w=16, c_in=4, c_out=4, k=3, pad=1),
+            {"m": 4, "t_fft": 8},
+        )
+    ) is not None
+)
+
+
+def _lax_ref(x, w, pad=0, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def _rel(y, ref):
+    return float(
+        jnp.abs(y.astype(jnp.float32) - ref.astype(jnp.float32)).max()
+        / (jnp.abs(ref.astype(jnp.float32)).max() + 1e-9)
+    )
+
+
+def _forced_plan(algo, spec):
+    """An AlgoPlan for `algo` on `spec` with small deterministic params."""
+    return registry.plan_conv(
+        spec, BIG_HW, algo=algo, hints={"m": 4, "t_fft": 8, "r_tiles": 6}
+    )
+
+
+# ---------------------------------------------------- the parity matrix
+
+
+SCENARIOS = ("plain", "stride2", "grouped", "ragged", "bias_relu")
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+@pytest.mark.parametrize("algo", TRANSFORMED)
+def test_engine_parity_matrix(algo, scenario):
+    """Every registered transformed algorithm x every engine scenario
+    agrees exactly (fp32 transform tolerance) with the direct conv."""
+    rng = np.random.default_rng(17)
+    stride = 2 if scenario == "stride2" else 1
+    groups = 4 if scenario == "grouped" else 1
+    b, h, w, c_in, c_out = 2, 18, 15, 8, 8
+    x = jnp.asarray(rng.standard_normal((b, h, w, c_in)) * 0.1, jnp.float32)
+    wk = jnp.asarray(
+        rng.standard_normal((3, 3, c_in // groups, c_out)) * 0.1, jnp.float32
+    )
+    spec = ConvSpec.from_tensors(x, wk, pad=1, stride=stride, groups=groups)
+    assert registry.get(algo).supports(spec), (algo, scenario)
+    ap = _forced_plan(algo, spec)
+    alg = registry.get(ap.algo)
+
+    if scenario == "ragged":
+        # zero-padded batch with per-sample true extents, served through
+        # the executor's extent masking: each sample must equal running
+        # it alone unpadded
+        net = NetSpec("one", (conv(c_in, c_out, k=3, pad=1),))
+        plan = NetPlan(
+            net="one", hw=BIG_HW.name, dtype="float32", input_hw=(h, w),
+            layers=(LayerPlan.from_algo_plan(0, ap),),
+        )
+        ws = {0: wk}
+        ex = NetExecutor(net, ws, plan)
+        sizes = jnp.asarray([[h, w], [12, 9]], jnp.int32)
+        xr = x.at[1, 12:, :, :].set(0.0).at[1, :, 9:, :].set(0.0)
+        y = ex(xr, sizes)
+        full = _lax_ref(xr[:1], wk, pad=1)
+        assert _rel(y[0], full[0]) < 5e-5, algo
+        small = _lax_ref(xr[1:, :12, :9], wk, pad=1)
+        oh, ow = 12, 9
+        assert _rel(y[1, :oh, :ow], small[0]) < 5e-5, algo
+        # masked region stays zero
+        assert float(jnp.abs(y[1, oh:]).max()) == 0.0
+        assert float(jnp.abs(y[1, :, ow:]).max()) == 0.0
+        return
+
+    ref = _lax_ref(x, wk, pad=1, stride=stride, groups=groups)
+    if scenario == "bias_relu":
+        bvec = jnp.asarray(rng.standard_normal(c_out) * 0.1, jnp.float32)
+        runner = alg.fuse_epilogue(
+            ap, lambda y: jax.nn.relu(y + bvec)
+        )
+        y = runner(x, wk, alg.prepare_weights(wk, ap))
+        ref = jax.nn.relu(ref + bvec)
+    else:
+        y = alg.execute(x, wk, alg.prepare_weights(wk, ap), ap)
+    assert y.shape == ref.shape, (algo, scenario)
+    assert _rel(y, ref) < 5e-5, (algo, scenario)
+
+
+# ------------------------------------------------- the Transform protocol
+
+
+@pytest.mark.parametrize(
+    "tr",
+    [
+        transforms.WinogradTransform(m=4, k=3),
+        transforms.WinogradTransform(m=2, k=5),
+        transforms.FFTTransform(t=8, k=3),
+        transforms.FFTTransform(t=16, k=5),
+    ],
+)
+def test_transform_roundtrip_is_correlation(tr):
+    """forward -> multiply -> inverse on a single tile equals the valid
+    cross-correlation of that tile, for both families."""
+    rng = np.random.default_rng(3)
+    c_in, c_out = 3, 5
+    tiles = jnp.asarray(
+        rng.standard_normal((2, tr.t, tr.t, c_in)), jnp.float32
+    )
+    wk = jnp.asarray(
+        rng.standard_normal((tr.k, tr.k, c_in, c_out)), jnp.float32
+    )
+    wt = tr.kernel_transform(wk)
+    y = tr.inverse(tr.multiply(tr.forward(tiles), wt))
+    ref = _lax_ref(tiles, wk)  # valid correlation: (2, T', T', C')
+    assert y.shape == (2, tr.t_out, tr.t_out, c_out)
+    assert _rel(y, ref) < 1e-4, tr
+
+
+def test_tile_algebra_terms():
+    wino = transforms.WinogradTransform(m=5, k=3).algebra
+    assert (wino.t, wino.t_out, wino.alpha) == (7, 5, 1)
+    assert wino.domain_points == 49 and wino.elem_bytes == 4
+    assert wino.kernel_matrix_bytes(8, 16) == 4 * 49 * 8 * 16
+    assert wino.kernel_matrix_bytes(8, 16, groups=4) == 4 * 49 * 2 * 16
+    fft = transforms.FFTTransform(t=16, k=3).algebra
+    assert (fft.t, fft.t_out, fft.alpha) == (16, 14, 2)
+    # rfft half-spectrum, complex elements
+    assert fft.domain_points == 16 * 9 and fft.elem_bytes == 8
+    assert fft.kernel_matrix_bytes(4, 4) == 8 * 16 * 9 * 4 * 4
+    # the complex working set halves the feasible R vs a same-T real domain
+    r_fft = analysis.max_r_ta(BIG_HW, 8, 8, fft)
+    r_real = analysis.max_r_ta(
+        BIG_HW, 8, 8, dataclasses.replace(fft, elem_bytes=4)
+    )
+    assert r_fft <= r_real // 2 + 1
+
+
+def test_fft_domain_dtypes():
+    tr = transforms.FFTTransform(t=8, k=3)
+    assert tr.domain_dtype(jnp.float32) == jnp.complex64
+    assert tr.domain_dtype(jnp.bfloat16) == jnp.complex64
+    assert tr.domain_dtype(jnp.float64) == jnp.complex128
+    u = tr.forward(jnp.zeros((1, 8, 8, 2), jnp.bfloat16))
+    assert u.dtype == jnp.complex64  # bf16 lifted to the fp32 domain
+
+
+def test_fft_bf16_real_path():
+    """bf16 FFT: computed in fp32, cast back -- a real path, not a
+    fallback, and bf16-accurate against the f32 oracle."""
+    rng = np.random.default_rng(5)
+    x32 = jnp.asarray(rng.standard_normal((1, 16, 16, 8)), jnp.float32)
+    w32 = jnp.asarray(rng.standard_normal((3, 3, 8, 8)), jnp.float32)
+    x, wk = x32.astype(jnp.bfloat16), w32.astype(jnp.bfloat16)
+    spec = ConvSpec.from_tensors(x, wk, pad=1)
+    assert registry.get("fft_fused").supports(spec)
+    ap = _forced_plan("fft_fused", spec)
+    y = registry.get("fft_fused").execute(x, wk, None, ap)
+    assert y.dtype == jnp.bfloat16
+    ref = _lax_ref(x32, w32, pad=1)
+    assert _rel(y, ref) < 0.1  # bf16 has ~3 decimal digits
+
+
+# -------------------------------------------- wisdom keyed by family
+
+
+def test_wisdom_keys_never_collide_across_families(tmp_path, monkeypatch):
+    """A Winograd-R tune and an FFT-T tune for the same layer live under
+    distinct wisdom keys -- neither lookup sees the other's entry."""
+    wino = transforms.WinogradTransform(m=5, k=3)
+    fft = transforms.FFTTransform(t=16, k=3)
+    kw = tune._key(wino, 32, 32, 8, 8)
+    kf = tune._key(fft, 32, 32, 8, 8)
+    assert kw != kf and "winograd" in kw and "fft" in kf
+    path = tmp_path / "wisdom.json"
+    monkeypatch.setattr(
+        tune, "measure_r", lambda *a, **k: 24 if k["transform"].family == "winograd" else 12
+    )
+    assert tune.tuned_r(32, 32, 8, 8, transform=wino, wisdom_path=path) == 24
+    assert tune.tuned_r(32, 32, 8, 8, transform=fft, wisdom_path=path) == 12
+    # both entries coexist on disk; lookups are family-scoped
+    stored = json.loads(path.read_text())
+    assert len(stored) == 2
+    assert tune.lookup_r(32, 32, 8, 8, transform=wino, wisdom_path=path) == 24
+    assert tune.lookup_r(32, 32, 8, 8, transform=fft, wisdom_path=path) == 12
+
+
+# ------------------------------------- FFT-backed cross-layer fusion
+
+
+def test_fft_net_plans_fft_with_fusion_group():
+    """The few-channel net picks the FFT transform per layer (the cost
+    model's DRAM-bound tile-amortization argument) and folds the chain
+    into one FFT fusion group."""
+    spec = fft_fewchannel(4)
+    plan = plan_net(spec, 48, 48, hw=analysis.SKYLAKE_X)
+    assert all(a == "fft_fused" for a in plan.algos()), plan.algos()
+    assert len(plan.groups) == 1 and len(plan.groups[0].layers) == 3
+
+
+@pytest.mark.parametrize("tile_rows", [0, 5, 16])
+def test_fft_fusion_group_exact_any_tiling(tile_rows):
+    """FFT-backed fusion groups through the generic staged engine:
+    fused == unfused == direct at every super-tile row count, with
+    bias+relu epilogues, ragged batches and multi-tile seams."""
+    spec = fft_fewchannel(4)
+    ws = init_weights(spec, seed=1)
+    plan = plan_net(spec, 24, 24, hw=analysis.SKYLAKE_X)
+    assert plan.groups, "planner built no FFT fusion group"
+    plan = dataclasses.replace(
+        plan,
+        groups=(dataclasses.replace(plan.groups[0], tile_rows=tile_rows),),
+    )
+    fused = NetExecutor(spec, ws, plan)
+    unfused = NetExecutor(spec, ws, dataclasses.replace(plan, groups=()))
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((2, 24, 24, 4)) * 0.1, jnp.float32)
+    ref = run_direct(spec, ws, x)
+    assert _rel(fused(x), ref) < 5e-5, tile_rows
+    assert _rel(fused(x), unfused(x)) < 1e-6, tile_rows
+    # ragged: the padded second sample equals its unpadded solo run
+    sizes = jnp.asarray([[24, 24], [17, 13]], jnp.int32)
+    xr = x.at[1, 17:].set(0.0).at[1, :, 13:].set(0.0)
+    y = fused(xr, sizes)
+    solo = run_direct(spec, ws, xr[1:, :17, :13])
+    assert _rel(y[1, :17, :13], solo[0]) < 5e-5, tile_rows
+
+
+def test_mixed_family_chain_rejected():
+    """Winograd and FFT tiles cannot share a fusion group: the planner's
+    chainability gate keeps families homogeneous."""
+    s = ConvSpec(h=16, w=16, c_in=8, c_out=8, k=3, pad=1)
+    p = lambda algo: registry.AlgoPlan(algo, s, {})  # noqa: E731
+    assert not registry.get("fft_fused").can_chain(
+        p("fft_fused"), p("l3_fused")
+    )
+    assert registry.get("fft_fused").can_chain(
+        p("fft_fused"), p("fft_fused")
+    )
+
+
+def test_fft_fusion_group_via_engine_compile():
+    """End to end through the public Engine: compile the FFT net, serve
+    it, and hit the kernel cache with complex right-hand matrices."""
+    spec = fft_fewchannel(4)
+    ws = init_weights(spec, seed=0)
+    engine = Engine(hw=analysis.SKYLAKE_X)
+    net = engine.compile(spec, ws, input_hw=(32, 32))
+    assert net.program.n_fused == 1
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((1, 32, 32, 4)) * 0.1, jnp.float32)
+    y = net(x)
+    assert _rel(y, run_direct(spec, ws, x)) < 5e-5
+    stats = net.stats()
+    assert stats["cache"]["entries"] == 3  # one complex wt per conv
+    v = next(iter(net.cache._store.values()))
+    assert jnp.iscomplexobj(v)
+
+
+def test_plan_roundtrip_preserves_fft_groups(tmp_path):
+    spec = fft_fewchannel(4)
+    plan = plan_net(spec, 32, 32, hw=analysis.SKYLAKE_X)
+    path = tmp_path / "fft.plan.json"
+    plan.save(path)
+    again = NetPlan.load(path)
+    assert again == plan and again.groups == plan.groups
+
+
+# --------------------------------------- engine working-set accounting
+
+
+def test_shared_buffer_plan_family_exact():
+    from repro.core.pipeline import shared_buffer_plan
+
+    fft = transforms.FFTTransform(t=16, k=3)
+    sb = shared_buffer_plan(fft, r=8, c_in=4, c_out=6)
+    sb.validate()
+    assert sb.elem_bytes == 8 and sb.t2 == 16 * 9
+    assert sb.bytes == 8 * (16 * 9 + 1) * 8 * 6
+    wino = transforms.WinogradTransform(m=5, k=3)
+    sb2 = shared_buffer_plan(wino, r=8, c_in=4, c_out=6)
+    assert sb2.elem_bytes == 4 and sb2.t2 == 49
+
+
+def test_epilogue_in_task_loop_matches_post_pass():
+    """fuse_epilogue folds glue into the scan; it must equal applying the
+    same glue to the assembled output (tiles abut), per family."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((1, 20, 20, 6)) * 0.1, jnp.float32)
+    wk = jnp.asarray(rng.standard_normal((3, 3, 6, 6)) * 0.1, jnp.float32)
+    bvec = jnp.asarray(rng.standard_normal(6) * 0.1, jnp.float32)
+    glue = lambda y: jax.nn.relu(y + bvec)  # noqa: E731
+    spec = ConvSpec.from_tensors(x, wk, pad=1)
+    for algo in ("l3_fused", "fft_fused"):
+        ap = _forced_plan(algo, spec)
+        alg = registry.get(algo)
+        wt = alg.prepare_weights(wk, ap)
+        y_in = alg.fuse_epilogue(ap, glue)(x, wk, wt)
+        y_post = glue(alg.execute(x, wk, wt, ap))
+        assert _rel(y_in, y_post) < 1e-6, algo

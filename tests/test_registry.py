@@ -62,8 +62,15 @@ def test_all_algorithms_registered():
 def test_supports_capability_filtering():
     plain = ConvSpec(h=16, w=16, c_in=8, c_out=8, k=3, pad=1)
     assert set(registry.supporting(plain)) == set(registry.names())
+    # grouped convs ride the shared engine's block-diagonal channel mix:
+    # every registered algorithm covers them now
     grouped = dataclasses.replace(plain, groups=4)
-    assert registry.supporting(grouped) == ("direct",)
+    assert set(registry.supporting(grouped)) == set(registry.names())
+    # fp8 is outside every transform family's compute domain except the
+    # dtype-agnostic paths
+    exotic = dataclasses.replace(plain, dtype="float8_e4m3fn")
+    assert "fft_fused" not in registry.supporting(exotic)
+    assert "direct" in registry.supporting(exotic)
 
 
 def test_convspec_validation():
@@ -85,9 +92,11 @@ def test_auto_resolution_prefers_fused_then_falls_back():
 
 
 def test_explicit_unsupported_algo_raises():
-    grouped = ConvSpec(h=16, w=16, c_in=8, c_out=8, k=3, pad=1, groups=4)
+    fp8 = ConvSpec(
+        h=16, w=16, c_in=8, c_out=8, k=3, pad=1, dtype="float8_e4m3fn"
+    )
     with pytest.raises(ValueError, match="does not support"):
-        registry.plan_conv(grouped, BIG_HW, algo="l3_fused")
+        registry.plan_conv(fp8, BIG_HW, algo="fft_fused")
 
 
 # ----------------------------------------------- dispatch parity vs lax
@@ -193,7 +202,11 @@ def test_auto_resolves_r_through_wisdom_file(tmp_path, monkeypatch):
     assert ap.algo in ("l3_fused", "fft_fused")
     assert not ap.tuned
     # write a tuned entry for the winning wino geometry and replan
-    key = tune._key(32, 32, 8, 8, 3, 5)
+    # (wisdom keys carry the transform family + tile size, so this entry
+    # can never collide with an FFT tune of the same layer)
+    from repro.core import transforms
+
+    key = tune._key(transforms.WinogradTransform(m=5, k=3), 32, 32, 8, 8)
     path.write_text(json.dumps({key: 16}))
     monkeypatch.setattr(
         tune, "measure_r",
@@ -232,11 +245,15 @@ def test_stride2_net_plans_transformed_and_matches_direct():
     assert _rel(y, ref) < 1e-3, plan.algos()
 
 
-def test_grouped_net_plans_direct_fallback_and_matches():
+def test_grouped_net_plans_transformed_and_matches():
+    """Grouped layers reach the transformed paths through the engine's
+    block-diagonal channel mix (they used to fall back to direct)."""
     spec = resnext_grouped(c_in=4, groups=4)
     plan = plan_net(spec, 16, 16, hw=BIG_HW)
     grouped_layers = [p for p in plan.layers if p.spec.groups > 1]
-    assert grouped_layers and all(p.algo == "direct" for p in grouped_layers)
+    assert grouped_layers and all(
+        registry.get(p.algo).tier < 2 for p in grouped_layers
+    )
     ws = init_weights(spec, seed=4)
     ex = NetExecutor(spec, ws, plan)
     rng = np.random.default_rng(6)
