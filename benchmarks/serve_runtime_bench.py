@@ -1,0 +1,276 @@
+"""Online serving-runtime benchmark: seeded open-loop traffic against
+the deadline-aware scheduler + replica pool, fused vs unfused.
+
+The offline convserve bench measures steady-state wave compute; this
+one measures the *service*: requests arrive on a Poisson (and, in full
+runs, a bursty) schedule, the scheduler forms deadline-flushed waves,
+replicas share one pre-transformed kernel cache, and the telemetry
+document -- throughput, p50/p95/p99 queue/compute/end-to-end latency,
+wave/partial-wave/reject counters, cache hit rates, per-stage rollup --
+lands in ``BENCH_serve_runtime.json``.  The same seeded trace replays
+against a fused and an unfused compile of the same net, so the A/B
+isolates cross-layer fusion's effect on tail latency under load.
+
+    PYTHONPATH=src python -m benchmarks.serve_runtime_bench [--smoke]
+
+``--smoke`` (the CI path) serves the tiny test net for a few hundred
+milliseconds and asserts the runtime's invariants -- every request
+served or reason-rejected, outputs matching the direct oracle, cache
+hits >= misses after warmup -- rather than producing meaningful
+numbers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.configs.convnets import tiny_testnet, vgg_mixed_channel
+from repro.convserve import Engine, init_weights, run_direct
+from repro.convserve.runtime import (
+    ReplicaPool,
+    RuntimeConfig,
+    ServeRuntime,
+    burst_trace,
+    make_images,
+    poisson_trace,
+)
+from repro.core import analysis
+
+BENCH_PATH = pathlib.Path("BENCH_serve_runtime.json")
+
+
+def _summarize(doc: dict, served: int, makespan_s: float) -> dict:
+    """Flatten a runtime stats() document into the bench record."""
+    lat = doc["latency"]
+
+    def pct(name):
+        h = lat.get(name, {})
+        return {
+            k: h.get(k, 0.0)
+            for k in ("count", "mean_s", "p50_s", "p95_s", "p99_s", "max_s")
+        }
+
+    return {
+        "served": served,
+        "makespan_s": makespan_s,
+        "throughput_rps": served / makespan_s if makespan_s > 0 else 0.0,
+        "e2e": pct("e2e"),
+        "queue_wait": pct("queue_wait"),
+        "compute": pct("compute"),
+        "counters": doc["counters"],
+        "scheduler": doc["scheduler"],
+        "pool": {
+            k: doc["pool"][k]
+            for k in ("replicas", "dispatched", "compiled_programs")
+        },
+        "cache": doc["cache"],
+        "stages": doc.get("stages"),
+    }
+
+
+def _run_variant(
+    spec,
+    ws,
+    cfg: RuntimeConfig,
+    trace,
+    images,
+    *,
+    fuse: bool,
+    replicas: int,
+    input_hw,
+    profile_bucket=None,
+) -> dict:
+    """One seeded trace against one compile (fused or unfused) of the
+    net: warm the per-bucket programs + kernel cache, replay the trace
+    open-loop, return the summarized telemetry document."""
+    engine = Engine(hw=analysis.SKYLAKE_X)
+    pool = ReplicaPool.build(
+        engine, spec, ws, n=replicas, input_hw=input_hw, fuse=fuse
+    )
+    rt = ServeRuntime(pool, cfg)
+    try:
+        # compile the steady-state programs on every replica and prepare
+        # the shared transforms, so the trace measures serving, not jit
+        # compiles -- and so the acceptance check "hits >= misses after
+        # warmup" is about reuse, not cold starts
+        rt.warmup()
+        warm_misses = pool.cache.stats()["misses"]
+
+        t0 = time.perf_counter()
+        rt.play(trace, images)
+        makespan = time.perf_counter() - t0
+        served = sum(1 for a in trace if a.rid in rt.results)
+        doc = rt.stats(profile_bucket=profile_bucket)
+        out = _summarize(doc, served, makespan)
+        out["cache_misses_after_warmup"] = (
+            doc["cache"]["misses"] - warm_misses
+        )
+        out["results"] = {a.rid: rt.results.get(a.rid) for a in trace}
+        return out
+    finally:
+        rt.pool.shutdown()
+
+
+def _check_exactness(spec, ws, record: dict, trace, images) -> None:
+    """Every served output must equal the net run on that image alone."""
+    worst = 0.0
+    for a in trace:
+        y = record["results"].get(a.rid)
+        if y is None:
+            continue
+        ref = run_direct(spec, ws, jnp.asarray(images[a.rid])[None])[0]
+        rel = float(jnp.abs(y - ref).max() / jnp.abs(ref).max())
+        worst = max(worst, rel)
+    assert worst < 1e-3, f"served output diverged from oracle: {worst}"
+    record["oracle_rel"] = worst
+
+
+def bench_net(
+    spec,
+    *,
+    cfg: RuntimeConfig,
+    trace,
+    replicas: int,
+    input_hw,
+    record: dict,
+    check_outputs: bool = False,
+    require_hits: bool = False,
+) -> None:
+    ws = init_weights(spec, seed=0)
+    c0 = spec.conv_layers()[0][1].c_in
+    images = make_images(trace, c0, seed=1)
+    entry = {}
+    for fuse in (True, False):
+        r = _run_variant(
+            spec, ws, cfg, trace, images,
+            fuse=fuse, replicas=replicas, input_hw=input_hw,
+            profile_bucket=(max(cfg.buckets) if fuse else None),
+        )
+        if check_outputs:
+            _check_exactness(spec, ws, r, trace, images)
+        n_total = len(trace)
+        rejected = sum(r["scheduler"]["rejected"].values())
+        assert r["served"] + rejected == n_total, (
+            f"{n_total - r['served'] - rejected} requests vanished "
+            f"(served {r['served']}, rejected {rejected})"
+        )
+        if require_hits:
+            c = r["cache"]
+            assert c["hits"] >= c["misses"], (
+                f"cache reuse regressed: {c['hits']} hits < "
+                f"{c['misses']} misses"
+            )
+        del r["results"]  # arrays don't belong in the JSON artifact
+        name = "fused" if fuse else "unfused"
+        entry[name] = r
+        print(
+            row(
+                f"serve_runtime/{spec.name}/{name}/p99_e2e",
+                r["e2e"]["p99_s"] * 1e6,
+                f"{r['throughput_rps']:.1f}rps;"
+                f"{r['scheduler']['partial_waves']}partial",
+            )
+        )
+        print(
+            row(
+                f"serve_runtime/{spec.name}/{name}/p50_e2e",
+                r["e2e"]["p50_s"] * 1e6,
+                f"hits{r['cache']['hits']};misses{r['cache']['misses']}",
+            )
+        )
+    record[spec.name] = entry
+
+
+def main(
+    smoke: bool = False,
+    requests: int = 120,
+    rate_hz: float = 40.0,
+    replicas: int = 2,
+    seed: int = 7,
+) -> None:
+    record: dict = {}
+    try:
+        if smoke:
+            spec = tiny_testnet(4)
+            cfg = RuntimeConfig(
+                max_batch=4, buckets=(16, 32), queue_depth=64,
+                slo_s=0.25, service_est_s=0.01,
+            )
+            trace = poisson_trace(
+                150.0, 40, seed=seed, sizes=(16, 24, 32),
+            )
+            bench_net(
+                spec, cfg=cfg, trace=trace, replicas=replicas,
+                input_hw=(16, 16), record=record,
+                check_outputs=True, require_hits=True,
+            )
+        else:
+            spec = vgg_mixed_channel(3)
+            cfg = RuntimeConfig(
+                max_batch=8, buckets=(32, 64), queue_depth=128,
+                slo_s=1.0, service_est_s=0.05,
+            )
+            trace = poisson_trace(
+                rate_hz, requests, seed=seed, sizes=(32, 48, 64),
+            )
+            bench_net(
+                spec, cfg=cfg, trace=trace, replicas=replicas,
+                input_hw=(64, 64), record=record, require_hits=True,
+            )
+            # flash-crowd arrivals against a shallow queue: admission
+            # control must shed load with reason-coded rejects instead
+            # of letting the queue (and the tail) grow without bound
+            burst_spec = tiny_testnet(4)
+            burst_cfg = RuntimeConfig(
+                max_batch=4, buckets=(16, 32), queue_depth=8,
+                slo_s=0.25, service_est_s=0.01,
+            )
+            bench_net(
+                burst_spec,
+                cfg=burst_cfg,
+                trace=burst_trace(
+                    60, burst=20, period_s=0.3, seed=seed,
+                    sizes=(16, 24, 32),
+                ),
+                replicas=replicas, input_hw=(16, 16),
+                record=record,
+            )
+            record["burst"] = record.pop(burst_spec.name)
+    finally:
+        # partial results still land on disk (and in the CI artifact)
+        # when an assert fires mid-run
+        BENCH_PATH.write_text(
+            json.dumps(
+                {"bench": "serve_runtime", "smoke": smoke, "seed": seed,
+                 "nets": record},
+                indent=1,
+                sort_keys=True,
+            )
+        )
+        print(f"# wrote {BENCH_PATH}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI invariants run: tiny net, asserts exactness "
+                    "and cache reuse")
+    ap.add_argument("--requests", type=int, default=120)
+    ap.add_argument("--rate", type=float, default=40.0)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="output path (default BENCH_serve_runtime.json)")
+    args = ap.parse_args()
+    if args.json:
+        BENCH_PATH = pathlib.Path(args.json)
+    main(
+        smoke=args.smoke, requests=args.requests, rate_hz=args.rate,
+        replicas=args.replicas, seed=args.seed,
+    )

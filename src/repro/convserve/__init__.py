@@ -3,6 +3,11 @@
 Pipeline:  NetSpec --plan_net--> NetPlan (v3: layer plans + fusion
 groups) --program.lower--> ExecProgram (staged IR, cross-layer fusion
 groups) --Engine.compile--> CompiledNet --ConvServer--> batched serving.
+
+For continuous traffic, `repro.convserve.runtime` layers an online
+serving loop on top: deadline-aware wave scheduling, bounded admission,
+a replica pool sharing one kernel cache, and telemetry
+(`ServeRuntime` / `RuntimeConfig` / `ReplicaPool`, re-exported here).
 """
 
 from repro.core.registry import ConvSpec
@@ -32,6 +37,17 @@ from repro.convserve.program import (
     Stage,
     StageUnit,
     lower,
+)
+from repro.convserve.runtime import (
+    RealClock,
+    Rejection,
+    ReplicaPool,
+    Request,
+    RuntimeConfig,
+    ServeRuntime,
+    SimClock,
+    Telemetry,
+    WaveScheduler,
 )
 from repro.convserve.serving import ConvServeConfig, ConvServer, ImageRequest
 
@@ -64,4 +80,13 @@ __all__ = [
     "ConvServer",
     "ConvServeConfig",
     "ImageRequest",
+    "RuntimeConfig",
+    "ServeRuntime",
+    "ReplicaPool",
+    "WaveScheduler",
+    "Request",
+    "Rejection",
+    "Telemetry",
+    "RealClock",
+    "SimClock",
 ]

@@ -15,14 +15,22 @@ so that
   * two layers that happen to share a geometry but hold different weights
     never collide (the layer index and weight hash are part of the key).
 
-Hit/miss counters make the reuse observable; `stats()` feeds benchmarks
-and the serving front-end's metrics.
+The store is optionally bounded: with `capacity_bytes` set, entries
+evict least-recently-used once the resident transforms exceed the
+budget (many nets/buckets sharing one engine no longer grow without
+bound; an evicted layer simply re-transforms on next use and counts a
+miss).  Hit/miss/eviction/invalidation counters make reuse and
+weight-update churn observable; `stats()` feeds benchmarks, the serving
+front-ends, and the runtime's telemetry.  All mutation happens under an
+internal lock so replica pools can share one cache across threads.
 """
 
 from __future__ import annotations
 
 import hashlib
-from typing import Dict, Optional, Tuple
+import threading
+from collections import OrderedDict
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -43,12 +51,20 @@ def weights_fingerprint(w) -> str:
 
 
 class KernelCache:
-    """Memoized right-hand (transformed-kernel) matrices."""
+    """Memoized right-hand (transformed-kernel) matrices, optionally
+    LRU-bounded to `capacity_bytes` of resident transforms."""
 
-    def __init__(self):
-        self._store: Dict[Tuple, jnp.ndarray] = {}
+    def __init__(self, capacity_bytes: Optional[int] = None):
+        if capacity_bytes is not None and capacity_bytes <= 0:
+            raise ValueError(f"capacity_bytes must be > 0, got {capacity_bytes}")
+        self._store: "OrderedDict[Tuple, jnp.ndarray]" = OrderedDict()
+        self._lock = threading.RLock()
+        self._nbytes = 0
+        self.capacity_bytes = capacity_bytes
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
 
     @staticmethod
     def key(net: str, plan: LayerPlan, dtype, w_fp: str) -> Tuple:
@@ -81,30 +97,63 @@ class KernelCache:
         if not alg.consumes_wt:
             return None
         key = self.key(net, plan, dtype, w_fp or weights_fingerprint(w))
-        cached = self._store.get(key)
-        if cached is not None:
-            self.hits += 1
-            return cached
-        self.misses += 1
+        with self._lock:
+            cached = self._store.get(key)
+            if cached is not None:
+                self.hits += 1
+                self._store.move_to_end(key)  # most-recently-used
+                return cached
+            self.misses += 1
+        # transform outside the lock: kernel prep is the expensive part,
+        # and a racing replica at worst duplicates work, never corrupts
         wt = alg.prepare_weights(jnp.asarray(w, dtype), plan.algo_plan())
-        self._store[key] = wt
+        with self._lock:
+            if key not in self._store:
+                self._store[key] = wt
+                self._nbytes += wt.nbytes
+                self._evict_over_capacity(keep=key)
         return wt
 
+    def _evict_over_capacity(self, keep: Tuple) -> None:
+        """Drop LRU entries until under budget.  The entry being served
+        right now (`keep`) is never evicted -- a single transform larger
+        than the whole budget still serves, it just lives alone."""
+        if self.capacity_bytes is None:
+            return
+        while self._nbytes > self.capacity_bytes and len(self._store) > 1:
+            key = next(iter(self._store))
+            if key == keep:
+                self._store.move_to_end(key)
+                key = next(iter(self._store))
+            wt = self._store.pop(key)
+            self._nbytes -= wt.nbytes
+            self.evictions += 1
+
     def invalidate(self, net: Optional[str] = None) -> None:
-        """Drop entries (all, or one net's) -- call after a weight update."""
-        if net is None:
-            self._store.clear()
-        else:
-            self._store = {k: v for k, v in self._store.items() if k[0] != net}
+        """Drop entries (all, or one net's) -- call after a weight
+        update.  Each call counts once in `invalidations`, so weight
+        churn is visible in serving stats."""
+        with self._lock:
+            self.invalidations += 1
+            if net is None:
+                self._store.clear()
+                self._nbytes = 0
+            else:
+                for k in [k for k in self._store if k[0] == net]:
+                    self._nbytes -= self._store.pop(k).nbytes
 
     @property
     def nbytes(self) -> int:
-        return sum(v.nbytes for v in self._store.values())
+        return self._nbytes
 
     def stats(self) -> dict:
-        return {
-            "hits": self.hits,
-            "misses": self.misses,
-            "entries": len(self._store),
-            "bytes": self.nbytes,
-        }
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "entries": len(self._store),
+                "bytes": self._nbytes,
+                "capacity_bytes": self.capacity_bytes,
+                "evictions": self.evictions,
+                "invalidations": self.invalidations,
+            }

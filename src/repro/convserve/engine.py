@@ -87,6 +87,7 @@ class Engine:
         self.hw = hw or tune_mod.default_hw()
         self.cache = cache if cache is not None else KernelCache()
         self.dtype = jnp.dtype(dtype)
+        self.nets_compiled = 0
 
     def compile(
         self,
@@ -123,6 +124,21 @@ class Engine:
         executor = NetExecutor(
             spec, weights, plan, cache=self.cache, dtype=self.dtype
         )
+        self.nets_compiled += 1
         return CompiledNet(
             spec=spec, plan=plan, program=executor.program, executor=executor
         )
+
+    def invalidate(self, net: Optional[str] = None) -> None:
+        """Drop cached transforms (all, or one net's) after a weight
+        update; the churn shows up as `invalidations` in `stats()`."""
+        self.cache.invalidate(net)
+
+    def stats(self) -> dict:
+        """Engine-level rollup: nets compiled against this engine plus
+        the shared kernel-cache counters (hits/misses/evictions/
+        invalidations)."""
+        return {
+            "nets_compiled": self.nets_compiled,
+            "cache": self.cache.stats(),
+        }

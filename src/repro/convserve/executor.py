@@ -130,6 +130,8 @@ class NetExecutor:
         }
         self._plans = {p.layer: p for p in plan.layers}
         self._compiled: Dict[tuple, object] = {}
+        self.calls = 0  # batches served through __call__
+        self.images = 0  # batch rows served (padding rows included)
 
     @property
     def compile_count(self) -> int:
@@ -149,6 +151,8 @@ class NetExecutor:
         return {
             "compiled_programs": self.compile_count,
             "compiles_per_bucket": self.compiles_by_bucket(),
+            "calls": self.calls,
+            "images": self.images,
             "cache": self.cache.stats(),
         }
 
@@ -293,6 +297,8 @@ class NetExecutor:
         if fn is None:
             fn = jax.jit(self._forward)
             self._compiled[key] = fn
+        self.calls += 1
+        self.images += int(x.shape[0])
         return fn(x, self.weights, wts, sizes)
 
     def profile_stages(

@@ -76,9 +76,12 @@ def plan_net(
     wisdom_path=None,
     dtype: str = "float32",
     fuse: bool = True,
+    allowed: Optional[Sequence[str]] = None,
 ) -> NetPlan:
     """Plan every conv layer of `spec` at reference input (h, w), then
-    (``fuse=True``) the cross-layer fusion groups on top."""
+    (``fuse=True``) the cross-layer fusion groups on top.  `allowed`
+    restricts the algorithm candidates per layer (e.g. ``("direct",)``
+    for a bitwise-reproducible baseline plan)."""
     hw = hw or tune_mod.default_hw()
     convs = spec.conv_layers()
     if not convs:
@@ -100,6 +103,7 @@ def plan_net(
                     hw, i, cspec,
                     m=m, t_fft=t_fft, consider_fft=consider_fft,
                     tune_r=tune_r, wisdom_path=wisdom_path,
+                    allowed=allowed,
                 )
             )
         cur_h, cur_w = shapes[i][0], shapes[i][1]

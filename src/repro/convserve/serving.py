@@ -1,23 +1,36 @@
-"""Batched image-serving front-end: queue + shape bucketing over the
-planned executor (the convnet analogue of serve/engine.py's wave loop).
+"""Offline batched-serving front-end: the blocking wrapper over the
+runtime's wave scheduler.
 
-Requests carry variably-sized HWC images.  Each is assigned the smallest
-spatial bucket that holds it, zero-padded there, and batched with
-like-bucketed requests into waves of at most `max_batch`; wave sizes are
-rounded up to powers of two.  Compiled-program count is therefore bounded
-by  #buckets x log2(max_batch)  regardless of traffic, and every wave
-after the first reuses the kernel cache's pre-transformed matrices.
-Per-sample true extents ride along to the executor, whose post-conv
-masking makes padded serving *exact* -- each output equals the net run
-on that image alone (see executor module docstring).
+Requests carry variably-sized HWC images.  Each is assigned the
+smallest spatial bucket that holds it, zero-padded there, and batched
+with like-bucketed requests into waves of at most `max_batch`; wave
+sizes are rounded up to powers of two.  Compiled-program count is
+therefore bounded by  #buckets x log2(max_batch)  regardless of
+traffic, and every wave after the first reuses the kernel cache's
+pre-transformed matrices.  Per-sample true extents ride along to the
+executor, whose post-conv masking makes padded serving *exact* -- each
+output equals the net run on that image alone (see executor module
+docstring).
+
+Wave formation itself -- bucketing, priority/FIFO order, power-of-two
+padding with batch-size hysteresis, round-robin across buckets -- is
+NOT implemented here: `ConvServer.run` admits every request into the
+same `runtime.WaveScheduler` the online `ServeRuntime` uses and drains
+it to completion.  The offline path is literally the online scheduler
+with all deadlines at infinity, so the two can never disagree about
+what a wave is.  For continuous traffic (deadlines, admission control,
+replicas, telemetry) use `repro.convserve.runtime.ServeRuntime`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Sequence
 
 import numpy as np
+
+from repro.convserve.runtime.queueing import Request
+from repro.convserve.runtime.scheduler import RuntimeConfig, WaveScheduler
 
 
 @dataclasses.dataclass
@@ -35,93 +48,77 @@ class ConvServeConfig:
     buckets: Sequence[int] = (32, 64, 128, 224)
     pad_batch: bool = True  # round wave sizes up to a power of two
 
+    def runtime_config(self) -> RuntimeConfig:
+        """The online config this offline surface is a slice of: no
+        SLOs, and a queue deep enough that offline admission never
+        rejects for depth (run() takes the whole request list at once)."""
+        return RuntimeConfig(
+            max_batch=self.max_batch,
+            buckets=tuple(self.buckets),
+            pad_batch=self.pad_batch,
+            queue_depth=1 << 30,
+            slo_s=None,
+        )
+
 
 class ConvServer:
     """Serves a compiled net (`engine.CompiledNet`, or a bare
-    `NetExecutor`) in bucketed waves."""
+    `NetExecutor`) in bucketed waves, blocking until all requests in a
+    batch are done."""
 
     def __init__(self, executor, cfg: ConvServeConfig):
-        spec = executor.spec
-        convs = spec.conv_layers()
-        if not convs:
-            raise ValueError(f"net {spec.name!r} has no conv layers")
-        c0 = convs[0][1].c_in
-        # a bucket must survive the true total downsampling factor --
-        # stride-2 convs halve extents before pools ever see them, so a
-        # pool-factor modulo check admits buckets that die at runtime;
-        # simulate the exact shape chain instead
-        for b in cfg.buckets:
-            try:
-                spec.infer_shapes(b, b, c0)
-            except ValueError as e:
-                raise ValueError(
-                    f"bucket {b} does not survive net {spec.name!r}'s "
-                    f"downsampling chain (total factor "
-                    f"{spec.downsample_factor}): {e}"
-                ) from None
+        # scheduler construction validates the net has convs and that
+        # every bucket survives the downsampling chain
+        self.scheduler = WaveScheduler(executor.spec, cfg.runtime_config())
         self.executor = executor
         self.cfg = cfg
-        self.waves_served = 0
-
-    def _bucket_for(self, h: int, w: int) -> int:
-        for b in sorted(self.cfg.buckets):
-            if h <= b and w <= b:
-                return b
-        raise ValueError(
-            f"image ({h}, {w}) exceeds largest bucket {max(self.cfg.buckets)}"
-        )
-
-    def _wave_batch(self, n: int) -> int:
-        if not self.cfg.pad_batch:
-            return n
-        b = 1
-        while b < n:
-            b *= 2
-        return min(b, self.cfg.max_batch)
 
     def run(self, requests: List[ImageRequest]) -> Dict[int, np.ndarray]:
-        """Serve all requests in bucketed waves; rid -> output (H', W', C')."""
-        by_bucket: Dict[int, List[ImageRequest]] = {}
-        for r in requests:
-            h, w, c = r.image.shape
-            # admission-time validation: a bad request must fail here, not
-            # at crop time after its wave-mates have already been computed
-            self.executor.spec.infer_shapes(h, w, c)
-            by_bucket.setdefault(self._bucket_for(h, w), []).append(r)
-        results: Dict[int, np.ndarray] = {}
-        for bucket in sorted(by_bucket):
-            queue = by_bucket[bucket]
-            while queue:
-                wave = queue[: self.cfg.max_batch]
-                queue = queue[self.cfg.max_batch :]
-                results.update(self._run_wave(bucket, wave))
-        return results
+        """Serve all requests in bucketed waves; rid -> output (H', W', C').
 
-    def _run_wave(
-        self, bucket: int, wave: List[ImageRequest]
-    ) -> Dict[int, np.ndarray]:
-        c = wave[0].image.shape[2]
-        b = self._wave_batch(len(wave))
-        batch = np.zeros((b, bucket, bucket, c), wave[0].image.dtype)
-        # batch-padding rows carry extent 0 -> fully masked in the executor
-        sizes = np.zeros((b, 2), np.int32)
-        for i, r in enumerate(wave):
-            h, w, rc = r.image.shape
-            if rc != c:
-                raise ValueError(f"request {r.rid}: channel mismatch {rc}!={c}")
-            batch[i, :h, :w, :] = r.image
-            sizes[i] = (h, w)
-        y = np.asarray(self.executor(batch, sizes))
-        self.waves_served += 1
-        out: Dict[int, np.ndarray] = {}
-        for i, r in enumerate(wave):
-            h, w, _ = r.image.shape
-            oh, ow, _ = self.executor.spec.out_shape(h, w, c)
-            out[r.rid] = y[i, :oh, :ow, :]
-        return out
+        Offline semantics: an inadmissible request (oversized, bad
+        shape) raises before anything is computed, so a batch either
+        serves completely or fails fast.
+        """
+        for r in requests:
+            rej = self.scheduler.admit(
+                Request(rid=r.rid, image=np.asarray(r.image)), now=0.0
+            )
+            if rej is not None:
+                # failed batch must leave no state behind: without the
+                # clear, this request's already-admitted mates would
+                # leak into the next run()'s waves and results
+                self.scheduler.clear()
+                raise ValueError(
+                    f"request {rej.rid} rejected ({rej.reason}): {rej.detail}"
+                )
+        results: Dict[int, np.ndarray] = {}
+        try:
+            while True:
+                wave = self.scheduler.drain_wave()
+                if wave is None:
+                    return results
+                batch, sizes = wave.assemble()
+                y = np.asarray(self.executor(batch, sizes))
+                results.update(wave.crop(self.executor.spec, y))
+        except BaseException:
+            # fail-fast means fail CLEAN: an executor error mid-drain
+            # must not leave the unserved remainder queued, where the
+            # next run() would silently serve it into its own results
+            self.scheduler.clear()
+            raise
 
     def stats(self) -> dict:
         """One dict for the serving counters that used to be scattered
-        across executor/cache internals: waves served, per-bucket compile
-        counts, and the kernel-cache hit/miss accounting."""
-        return {"waves": self.waves_served, **self.executor.stats()}
+        across executor/cache internals: waves served (plus the
+        scheduler's partial-wave/admission accounting), per-bucket
+        compile counts, and the kernel-cache hit/miss/eviction/
+        invalidation accounting."""
+        sched = self.scheduler.stats()
+        return {
+            "waves": sched["waves"],
+            "partial_waves": sched["partial_waves"],
+            "admitted": sched["admitted"],
+            "rejected": sched["rejected"],
+            **self.executor.stats(),
+        }

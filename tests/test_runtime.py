@@ -1,0 +1,523 @@
+"""Online serving runtime under a simulated clock: deadline-flushed
+partial waves are exact, priorities order within buckets, round-robin
+prevents cross-bucket starvation, admission rejects at capacity, batch
+hysteresis reuses compiled programs, replicas share one kernel cache,
+and the cache's LRU bound + invalidation counters behave."""
+
+import json
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.convnets import tiny_testnet
+from repro.convserve import (
+    ConvServeConfig,
+    ConvServer,
+    Engine,
+    ImageRequest,
+    KernelCache,
+    NetExecutor,
+    init_weights,
+    plan_net,
+    run_direct,
+)
+from repro.convserve.runtime import (
+    FLUSH_DEADLINE,
+    INTERACTIVE,
+    REJECT_BAD_SHAPE,
+    REJECT_QUEUE_FULL,
+    REJECT_TOO_LARGE,
+    ReplicaPool,
+    Request,
+    RuntimeConfig,
+    ServeRuntime,
+    SimClock,
+    STANDARD,
+    Telemetry,
+    WaveScheduler,
+    make_images,
+    poisson_trace,
+)
+from repro.core import analysis
+
+BIG_HW = analysis.HardwareModel(
+    name="big", peak_flops=1e12, dram_bw=1e11, fast_shared_bw=5e11,
+    fast_shared_bytes=1 << 30, private_bytes=1 << 24,
+)
+
+SPEC = tiny_testnet(4)
+
+
+def _image(rng, side: int) -> np.ndarray:
+    return (rng.standard_normal((side, side, 4)) * 0.1).astype(np.float32)
+
+
+def _runtime(cfg, *, n=1, clock=None, **compile_kwargs) -> ServeRuntime:
+    """Deterministic runtime: inline replicas (workers=0) + SimClock."""
+    ws = init_weights(SPEC, seed=5)
+    engine = Engine(hw=BIG_HW)
+    pool = ReplicaPool.build(
+        engine, SPEC, ws, n=n, workers=0, input_hw=(16, 16),
+        **compile_kwargs,
+    )
+    return ServeRuntime(pool, cfg, clock=clock or SimClock())
+
+
+# ------------------------------------------------------------- clock/trace
+
+
+def test_sim_clock_advances_on_sleep():
+    c = SimClock()
+    assert c.now() == 0.0
+    c.sleep(0.25)
+    c.advance(0.25)
+    assert c.now() == 0.5
+    with pytest.raises(ValueError):
+        c.advance(-1.0)
+
+
+def test_poisson_trace_is_seed_deterministic():
+    a = poisson_trace(100.0, 20, seed=3, sizes=(12, 16), priorities=(0, 1))
+    b = poisson_trace(100.0, 20, seed=3, sizes=(12, 16), priorities=(0, 1))
+    assert a == b
+    assert [r.t for r in a] == sorted(r.t for r in a)
+    assert make_images(a, 4, seed=1).keys() == {r.rid for r in a}
+
+
+# ------------------------------------------------- deadline-flushed waves
+
+
+def test_deadline_flush_partial_wave_is_exact():
+    """The acceptance gate: a wave dispatched early because the oldest
+    request's slack expired serves outputs identical to the same
+    requests served alone.  Direct-conv plan so the comparison is
+    bitwise, and a ragged (12 in 16-bucket) image rides along."""
+    clock = SimClock()
+    rt = _runtime(
+        RuntimeConfig(max_batch=8, buckets=(16,), slo_s=0.05),
+        clock=clock, allowed=("direct",),
+    )
+    rng = np.random.default_rng(0)
+    imgs = {0: _image(rng, 16), 1: _image(rng, 12), 2: _image(rng, 16)}
+    for rid, im in imgs.items():
+        assert rt.submit(im, rid=rid) is None
+    # 3 < max_batch and slack remains: nothing may dispatch yet
+    clock.advance(0.049)
+    assert rt.poll() == 0
+    # slack expires at t_admit + slo (service_est starts at 0)
+    clock.advance(0.002)
+    assert rt.poll() == 1
+    assert rt.scheduler.partial_waves == 1
+    assert rt.scheduler.waves_by_reason == {FLUSH_DEADLINE: 1}
+    assert rt.telemetry.counter("partial_waves") == 1
+    assert set(rt.results) == {0, 1, 2}
+
+    # served alone through an identical runtime: bitwise identical
+    alone = _runtime(
+        RuntimeConfig(max_batch=8, buckets=(16,), slo_s=0.05),
+        allowed=("direct",),
+    )
+    ws = init_weights(SPEC, seed=5)
+    for rid, im in imgs.items():
+        alone.submit(im, rid=rid)
+        alone.drain()
+        assert np.array_equal(rt.results[rid], alone.results[rid]), rid
+        # and bit-exact against the per-image direct-conv oracle
+        ref = np.asarray(run_direct(SPEC, ws, jnp.asarray(im)[None])[0])
+        assert np.array_equal(rt.results[rid], ref), rid
+
+
+def test_full_wave_dispatches_without_waiting():
+    clock = SimClock()
+    rt = _runtime(
+        RuntimeConfig(max_batch=2, buckets=(16,), slo_s=10.0), clock=clock
+    )
+    rng = np.random.default_rng(1)
+    rt.submit(_image(rng, 16), rid=0)
+    assert rt.poll() == 0  # half a wave, plenty of slack: wait
+    rt.submit(_image(rng, 16), rid=1)
+    assert rt.poll() == 1  # full wave: immediate, no deadline needed
+    assert rt.scheduler.partial_waves == 0
+    assert set(rt.results) == {0, 1}
+
+
+# ------------------------------------------------------------- priorities
+
+
+def test_priority_classes_pop_before_fifo():
+    sched = WaveScheduler(
+        SPEC, RuntimeConfig(max_batch=2, buckets=(16,), queue_depth=8)
+    )
+    rng = np.random.default_rng(2)
+    for rid in (1, 2, 3):
+        assert sched.admit(
+            Request(rid=rid, image=_image(rng, 16), priority=STANDARD),
+            now=float(rid),
+        ) is None
+    assert sched.admit(
+        Request(rid=9, image=_image(rng, 16), priority=INTERACTIVE),
+        now=4.0,
+    ) is None
+    wave = sched.next_wave(now=4.0)  # 4 queued >= max_batch: full wave
+    assert [r.rid for r in wave.requests] == [9, 1]  # urgent, then FIFO
+    wave = sched.next_wave(now=4.0)
+    assert [r.rid for r in wave.requests] == [2, 3]
+
+
+def test_interactive_slo_tighter_than_batch():
+    """Per-class SLOs: the interactive class's deadline lands first."""
+    cfg = RuntimeConfig(
+        max_batch=8, buckets=(16,), slo_s={INTERACTIVE: 0.01, STANDARD: 1.0}
+    )
+    sched = WaveScheduler(SPEC, cfg)
+    rng = np.random.default_rng(3)
+    sched.admit(
+        Request(rid=0, image=_image(rng, 16), priority=STANDARD), now=0.0
+    )
+    assert sched.next_wave(0.5) is None  # standard still has slack
+    sched.admit(
+        Request(rid=1, image=_image(rng, 16), priority=INTERACTIVE), now=0.5
+    )
+    wave = sched.next_wave(0.52)  # interactive slack expired
+    assert wave is not None and wave.reason == FLUSH_DEADLINE
+    # the flush takes the whole bucket queue, urgent first
+    assert [r.rid for r in wave.requests] == [1, 0]
+
+
+# ------------------------------------------------------------ round-robin
+
+
+def test_round_robin_alternates_ready_buckets():
+    """Continuous full-wave traffic in one bucket must not starve the
+    other: ready buckets are served alternately."""
+    sched = WaveScheduler(
+        SPEC,
+        RuntimeConfig(max_batch=2, buckets=(16, 32), queue_depth=64),
+    )
+    rng = np.random.default_rng(4)
+    for rid in range(12):
+        side = 16 if rid % 2 == 0 else 32
+        assert sched.admit(
+            Request(rid=rid, image=_image(rng, side)), now=0.0
+        ) is None
+    buckets = []
+    while True:
+        w = sched.next_wave(0.0)
+        if w is None:
+            break
+        buckets.append(w.bucket)
+    assert buckets == [32, 16, 32, 16, 32, 16]
+
+
+# -------------------------------------------------------------- admission
+
+
+def test_admission_rejects_with_reasons():
+    rt = _runtime(
+        RuntimeConfig(max_batch=8, buckets=(16,), queue_depth=2)
+    )
+    rng = np.random.default_rng(5)
+    assert rt.submit(_image(rng, 16), rid=0) is None
+    assert rt.submit(_image(rng, 16), rid=1) is None
+    rej = rt.submit(_image(rng, 16), rid=2)  # depth bound hit
+    assert rej is not None and rej.reason == REJECT_QUEUE_FULL
+    rej = rt.submit(_image(rng, 32), rid=3)  # exceeds largest bucket
+    assert rej is not None and rej.reason == REJECT_TOO_LARGE
+    bad = rng.standard_normal((16, 16, 5)).astype(np.float32)
+    rej = rt.submit(bad, rid=4)  # 5 channels into a 4-channel net
+    assert rej is not None and rej.reason == REJECT_BAD_SHAPE
+    assert rt.telemetry.counter("rejected") == 3
+    assert rt.telemetry.counter(f"rejected.{REJECT_QUEUE_FULL}") == 1
+    assert rt.scheduler.stats()["rejected"] == {
+        REJECT_QUEUE_FULL: 1, REJECT_TOO_LARGE: 1, REJECT_BAD_SHAPE: 1,
+    }
+    assert set(rt.rejections) == {2, 3, 4}
+    rt.drain()  # the two admitted requests still serve
+    assert set(rt.results) == {0, 1}
+
+
+# ------------------------------------------------------------- hysteresis
+
+
+def test_partial_wave_hysteresis_reuses_compiled_batch_size():
+    """A deadline-flushed single request rides the power-of-two batch
+    the bucket already compiled instead of minting a new program."""
+    clock = SimClock()
+    rt = _runtime(
+        RuntimeConfig(max_batch=4, buckets=(16,), slo_s=0.05),
+        clock=clock, allowed=("direct",),
+    )
+    rng = np.random.default_rng(6)
+    for rid in range(3):
+        rt.submit(_image(rng, 16), rid=rid)
+    clock.advance(0.06)
+    assert rt.poll() == 1  # wave of 3, padded to pow2 -> 4
+    assert rt.pool.stats()["compiled_programs"] == 1
+    rt.submit(_image(rng, 16), rid=7)
+    clock.advance(0.06)
+    assert rt.poll() == 1  # wave of 1: hysteresis pads to the warm 4
+    assert rt.pool.stats()["compiled_programs"] == 1  # no new program
+    assert set(rt.results) == {0, 1, 2, 7}
+    # without hysteresis the same traffic compiles a second program
+    rt2 = _runtime(
+        RuntimeConfig(max_batch=4, buckets=(16,), slo_s=0.05,
+                      pad_batch=False),
+        clock=SimClock(), allowed=("direct",),
+    )
+    for rid in range(3):
+        rt2.submit(_image(rng, 16), rid=rid)
+    rt2.clock.advance(0.06)
+    rt2.poll()
+    rt2.submit(_image(rng, 16), rid=7)
+    rt2.clock.advance(0.06)
+    rt2.poll()
+    assert rt2.pool.stats()["compiled_programs"] == 2
+
+
+# ------------------------------------------------------------ replica pool
+
+
+def test_replica_pool_shares_cache_and_balances():
+    clock = SimClock()
+    rt = _runtime(
+        RuntimeConfig(max_batch=1, buckets=(16,)), n=2, clock=clock
+    )
+    rng = np.random.default_rng(7)
+    imgs = {rid: _image(rng, 16) for rid in range(4)}
+    for rid, im in imgs.items():
+        rt.submit(im, rid=rid)
+        rt.poll()  # max_batch=1: every request is a full wave
+    pool = rt.pool.stats()
+    assert pool["dispatched"] == [2, 2]  # least-loaded alternates
+    assert pool["in_flight"] == [0, 0]
+    cache = rt.pool.cache.stats()
+    # transforms prepared once for the whole pool, reused by the peer
+    # replica and by every later wave
+    assert cache["misses"] == 4
+    assert cache["hits"] == 12
+    ws = init_weights(SPEC, seed=5)
+    for rid, im in imgs.items():
+        ref = run_direct(SPEC, ws, jnp.asarray(im)[None])[0]
+        rel = float(jnp.abs(rt.results[rid] - ref).max()
+                    / jnp.abs(ref).max())
+        assert rel < 1e-3, (rid, rel)
+
+
+def test_replica_pool_rejects_split_caches():
+    ws = init_weights(SPEC, seed=5)
+    a = Engine(hw=BIG_HW).compile(SPEC, ws, input_hw=(16, 16))
+    b = Engine(hw=BIG_HW).compile(SPEC, ws, input_hw=(16, 16))
+    with pytest.raises(ValueError, match="share one KernelCache"):
+        ReplicaPool([a, b], workers=0)
+
+
+# ------------------------------------------------------- cache satellites
+
+
+def test_kernel_cache_lru_eviction_under_byte_capacity():
+    ws = init_weights(SPEC, seed=1)
+    plan = plan_net(SPEC, 16, 16, hw=BIG_HW, consider_fft=False)
+    probe = KernelCache()
+    sizes = {}
+    for i, _ in SPEC.conv_layers():
+        probe.get(plan.net, plan.layer_plan(i), ws[i])
+        sizes[i] = probe.nbytes - sum(sizes.values())
+    total = probe.nbytes
+
+    cache = KernelCache(capacity_bytes=total - 1)  # can't hold all four
+    for i, _ in SPEC.conv_layers():
+        cache.get(plan.net, plan.layer_plan(i), ws[i])
+    st = cache.stats()
+    assert st["capacity_bytes"] == total - 1
+    assert st["evictions"] >= 1
+    assert st["bytes"] <= total - 1
+    assert st["entries"] < 4
+    # least-recently-used went first: layer 0's entry re-misses, the
+    # most recent layer still hits
+    convs = [i for i, _ in SPEC.conv_layers()]
+    cache.get(plan.net, plan.layer_plan(convs[-1]), ws[convs[-1]])
+    assert cache.stats()["hits"] == 1
+    miss0 = cache.stats()["misses"]
+    cache.get(plan.net, plan.layer_plan(convs[0]), ws[convs[0]])
+    assert cache.stats()["misses"] == miss0 + 1
+    with pytest.raises(ValueError):
+        KernelCache(capacity_bytes=0)
+
+
+def test_single_oversized_entry_still_serves():
+    ws = init_weights(SPEC, seed=1)
+    plan = plan_net(SPEC, 16, 16, hw=BIG_HW, consider_fft=False)
+    cache = KernelCache(capacity_bytes=1)  # smaller than any transform
+    i0 = SPEC.conv_layers()[0][0]
+    wt = cache.get(plan.net, plan.layer_plan(i0), ws[i0])
+    assert wt is not None
+    assert cache.stats()["entries"] == 1  # kept: never evict the entry
+    assert cache.get(plan.net, plan.layer_plan(i0), ws[i0]) is not None
+    assert cache.stats()["hits"] == 1
+
+
+def test_invalidations_counted_and_surfaced():
+    ws = init_weights(SPEC, seed=5)
+    plan = plan_net(SPEC, 16, 16, hw=BIG_HW)
+    ex = NetExecutor(SPEC, ws, plan)
+    srv = ConvServer(ex, ConvServeConfig(max_batch=2, buckets=(16,)))
+    rng = np.random.default_rng(8)
+    srv.run([ImageRequest(0, _image(rng, 16))])
+    ex.cache.invalidate(plan.net)
+    ex.cache.invalidate("some-other-net")
+    st = srv.stats()
+    assert st["cache"]["invalidations"] == 2
+    assert st["cache"]["entries"] == 0
+    # engine-level surface too
+    engine = Engine(hw=BIG_HW)
+    engine.compile(SPEC, ws, input_hw=(16, 16))
+    engine.invalidate()
+    assert engine.stats()["cache"]["invalidations"] == 1
+    assert engine.stats()["nets_compiled"] == 1
+
+
+# ---------------------------------------------------- offline front-end
+
+
+def test_offline_server_reports_scheduler_counters():
+    ws = init_weights(SPEC, seed=5)
+    plan = plan_net(SPEC, 16, 16, hw=BIG_HW)
+    srv = ConvServer(
+        NetExecutor(SPEC, ws, plan),
+        ConvServeConfig(max_batch=2, buckets=(16,)),
+    )
+    rng = np.random.default_rng(9)
+    out = srv.run([ImageRequest(r, _image(rng, 16)) for r in range(3)])
+    assert set(out) == {0, 1, 2}
+    st = srv.stats()
+    assert st["waves"] == 2  # one full, one drained partial
+    assert st["partial_waves"] == 1
+    assert st["admitted"] == 3 and st["rejected"] == {}
+    assert st["calls"] == 2  # executor-level plumbing
+    # hysteresis holds offline too: the drained single request pads to
+    # the already-compiled size-2 wave, so one program serves both
+    assert st["images"] == 2 + 2
+    assert st["compiled_programs"] == 1
+
+
+def test_offline_failed_batch_leaves_no_state_behind():
+    """A rejected request aborts its whole batch: the already-admitted
+    mates must not leak into the next run()'s waves or results."""
+    ws = init_weights(SPEC, seed=5)
+    plan = plan_net(SPEC, 16, 16, hw=BIG_HW)
+    srv = ConvServer(
+        NetExecutor(SPEC, ws, plan),
+        ConvServeConfig(max_batch=4, buckets=(16,)),
+    )
+    rng = np.random.default_rng(10)
+    with pytest.raises(ValueError, match="too_large"):
+        srv.run([
+            ImageRequest(1, _image(rng, 16)),
+            ImageRequest(2, _image(rng, 64)),  # oversized: aborts batch
+        ])
+    assert srv.scheduler.stats()["cleared"] == 1
+    out = srv.run([ImageRequest(3, _image(rng, 16))])
+    assert set(out) == {3}  # rid 1 did not leak into this batch
+
+
+def test_offline_executor_failure_mid_drain_clears_queue():
+    """An executor error on wave 2 must not leave waves 3+ queued for
+    the next run() to silently serve."""
+    ws = init_weights(SPEC, seed=5)
+    plan = plan_net(SPEC, 16, 16, hw=BIG_HW)
+    ex = NetExecutor(SPEC, ws, plan)
+
+    class Boom:
+        def __init__(self, inner):
+            self.inner = inner
+            self.spec = inner.spec
+            self.calls = 0
+
+        def __call__(self, batch, sizes):
+            self.calls += 1
+            if self.calls == 2:
+                raise RuntimeError("boom")
+            return self.inner(batch, sizes)
+
+        def stats(self):
+            return self.inner.stats()
+
+    srv = ConvServer(Boom(ex), ConvServeConfig(max_batch=2, buckets=(16,)))
+    rng = np.random.default_rng(14)
+    with pytest.raises(RuntimeError, match="boom"):
+        srv.run([ImageRequest(r, _image(rng, 16)) for r in range(6)])
+    assert srv.scheduler.stats()["queue_depth"] == 0  # nothing left behind
+    out = srv.run([ImageRequest(9, _image(rng, 16))])
+    assert set(out) == {9}
+
+
+# -------------------------------------------------------------- telemetry
+
+
+def test_histogram_percentiles_and_snapshot():
+    t = Telemetry()
+    for ms in range(1, 101):  # 1..100 ms uniform
+        t.observe("queue_wait", ms * 1e-3)
+    h = t.histogram("queue_wait")
+    assert h.count == 100
+    # log-bucketed estimate: within one bucket ratio (2**0.25) of truth
+    assert h.percentile(0.5) == pytest.approx(0.050, rel=0.2)
+    assert h.percentile(0.99) == pytest.approx(0.100, rel=0.2)
+    assert h.percentile(0.5) <= h.percentile(0.95) <= h.percentile(0.99)
+    assert h.percentile(0.99) <= h.max
+    t.inc("waves")
+    t.set_gauge("queue_depth", 3)
+    doc = t.snapshot(cache={"hits": 1}, stages=None)
+    json.dumps(doc)
+    assert doc["counters"]["waves"] == 1
+    assert doc["cache"] == {"hits": 1}
+    assert "stages" not in doc
+    assert doc["latency"]["queue_wait"]["p99_s"] > 0
+
+
+# ----------------------------------------------------- end-to-end (sim)
+
+
+def test_poisson_trace_end_to_end_under_sim_clock():
+    clock = SimClock()
+    rt = _runtime(
+        RuntimeConfig(max_batch=4, buckets=(16,), slo_s=0.05,
+                      queue_depth=32),
+        clock=clock,
+    )
+    trace = poisson_trace(200.0, 12, seed=11, sizes=(12, 16))
+    images = make_images(trace, 4, seed=12)
+    results = rt.play(trace, images)
+    assert set(results) == {a.rid for a in trace}
+    assert rt.telemetry.histogram("e2e").count == 12
+    assert rt.telemetry.histogram("queue_wait").count == 12
+    sched = rt.scheduler.stats()
+    assert sched["queue_depth"] == 0
+    assert sched["waves"] >= 3  # 12 requests, max_batch 4
+    # queue waits are bounded by the SLO window in simulated time
+    assert rt.telemetry.histogram("queue_wait").max <= 0.05 + 1e-9
+    doc = rt.stats(profile_bucket=16)
+    json.dumps(doc)
+    for section in ("counters", "latency", "scheduler", "pool", "cache",
+                    "stages"):
+        assert section in doc, section
+    ws = init_weights(SPEC, seed=5)
+    for a in trace:
+        ref = run_direct(SPEC, ws, jnp.asarray(images[a.rid])[None])[0]
+        rel = float(jnp.abs(results[a.rid] - ref).max()
+                    / jnp.abs(ref).max())
+        assert rel < 1e-3, (a.rid, rel)
+
+
+def test_scheduler_next_event_drives_wakeups():
+    sched = WaveScheduler(
+        SPEC, RuntimeConfig(max_batch=8, buckets=(16,), slo_s=0.1)
+    )
+    assert sched.next_event(0.0) == math.inf  # nothing queued
+    rng = np.random.default_rng(13)
+    sched.admit(Request(rid=0, image=_image(rng, 16)), now=1.0)
+    assert sched.next_event(1.0) == pytest.approx(1.1)  # deadline - est(0)
+    sched.observe_service(16, 0.03)
+    assert sched.next_event(1.0) == pytest.approx(1.07)  # slack shrinks
