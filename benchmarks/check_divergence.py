@@ -1,0 +1,165 @@
+"""The sim-clock adaptive-replanning scenario, end to end, with real
+measurements -- the CI gate for `repro.convserve.adapt`.
+
+The runtime starts on the plan the roofline picks for the few-channel
+FFT net (`fft-fewchannel` -- the documented misprediction: the model
+says fused FFT, measurement says direct is ~2x faster on the paper's
+CPU path).  The adapt controller measures the live stages, probes the
+unfused and direct alternatives, and -- if measured divergence crosses
+the threshold -- replans with measured costs, shadows the candidate
+under live SimClock traffic, and promotes or rolls back.
+
+Hard assertions (the zero-downtime contract):
+
+  * every submitted request is served (zero drops),
+  * every response matches the direct oracle within the documented
+    cross-family tolerance (zero inexact responses),
+  * shadow waves never appear in the client latency histograms,
+  * the plan the loop settles on is measured-no-slower than the seed
+    plan (interleaved `time_pair`, with slack for CI timer noise --
+    when no promotion happened the two plans are identical and the
+    check is an identity).
+
+Everything (audit log, adapt counters, divergence rows, the seed vs
+final timing pair) lands in ``BENCH_adapt.json`` in a finally block, so
+a failing gate still ships the telemetry for triage.
+
+    PYTHONPATH=src python -m benchmarks.check_divergence --smoke
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+from benchmarks.common import row, time_pair
+from repro.configs.convnets import fft_fewchannel
+from repro.convserve import (
+    AdaptConfig,
+    AdaptController,
+    Engine,
+    ReplicaPool,
+    RuntimeConfig,
+    ServeRuntime,
+    SimClock,
+    init_weights,
+    run_direct,
+)
+from repro.core import analysis
+
+BENCH_PATH = pathlib.Path("BENCH_adapt.json")
+
+
+def main(smoke: bool = False) -> None:
+    # side 64 in BOTH modes: the documented misprediction (fused FFT
+    # measured ~2x slower than direct) only manifests at >= 64; smoke
+    # trims the request count, not the geometry
+    side = 64
+    n_requests = 8 if smoke else 32
+    spec = fft_fewchannel(4)
+    ws = init_weights(spec, seed=0)
+    engine = Engine(hw=analysis.SKYLAKE_X)
+    pool = ReplicaPool.build(
+        engine, spec, ws, n=1, workers=0, input_hw=(side, side)
+    )
+    seed_plan = pool.executors[0].plan
+    print(row("adapt/seed/algos", 0.0, ";".join(seed_plan.algos())))
+    print(row("adapt/seed/groups", float(len(seed_plan.groups))))
+
+    cfg = RuntimeConfig(
+        max_batch=2, buckets=(side,), slo_s=10.0, service_est_s=1e-3
+    )
+    rt = ServeRuntime(pool, cfg, clock=SimClock())
+    ac = AdaptController(
+        rt, engine, spec, ws,
+        AdaptConfig(
+            # the measured fused-vs-direct gap at side 64 is ~1.5x on the
+            # reference box; 1.25 keeps the demo firing under CI timer
+            # noise while staying far above the ~1.0 of a matched plan
+            divergence_ratio=1.25,
+            shadow_fraction=1.0,
+            shadow_min_waves=2,
+            promote_margin=0.05,
+            probe_bucket=side,
+            probe_reps=3,
+        ),
+    )
+    record: dict = {"smoke": smoke, "seed_algos": list(seed_plan.algos())}
+    try:
+        ac.measure()
+        ac.probe_alternatives()
+        reason = ac.check()
+        print(row("adapt/replan_triggered", float(ac.replans_triggered),
+                  reason or "within threshold"))
+
+        rng = np.random.default_rng(0)
+        imgs = {
+            i: (rng.standard_normal((side, side, 4)) * 0.1).astype(np.float32)
+            for i in range(n_requests)
+        }
+        for i in range(n_requests):
+            rt.submit(imgs[i], rid=i)
+            rt.poll()
+        rt.drain()
+
+        # ---- the zero-downtime contract
+        missing = [i for i in range(n_requests) if i not in rt.results]
+        assert not missing, f"dropped requests: {missing}"
+        for i in range(n_requests):
+            ref = np.asarray(run_direct(spec, ws, imgs[i][None]))[0]
+            scale = max(float(np.abs(ref).max()), 1e-30)
+            rel = float(np.abs(rt.results[i] - ref).max()) / scale
+            assert rel < 1e-3, f"request {i} inexact: rel {rel}"
+        snap = rt.stats()
+        e2e_count = snap["latency"]["e2e"]["count"]
+        assert e2e_count == n_requests, (
+            f"shadow waves leaked into client latency: e2e count "
+            f"{e2e_count} != {n_requests} requests"
+        )
+
+        final = rt.pool.executors[0]
+        promoted = final.plan != seed_plan
+        print(row("adapt/promotions", float(ac.promotions),
+                  ";".join(final.plan.algos())))
+        print(row("adapt/rollbacks", float(ac.rollbacks)))
+
+        # ---- promoted plan measured-no-slower than the seed plan
+        seed_net = engine.compile(spec, ws, plan=seed_plan, fuse=None)
+        x = np.stack([imgs[i] for i in range(2)])
+        t_final, t_seed = time_pair(final, seed_net, x)
+        print(row("adapt/final_warm", t_final * 1e6,
+                  "promoted" if promoted else "seed kept"))
+        print(row("adapt/seed_warm", t_seed * 1e6))
+        # 1.25x slack: CI timers are noisy and an identical-plan pair
+        # should never flake; a genuinely slower promotion still fails
+        assert t_final <= t_seed * 1.25, (
+            f"promoted plan measured slower than seed: "
+            f"{t_final * 1e6:.0f}us vs {t_seed * 1e6:.0f}us"
+        )
+
+        record.update(
+            {
+                "promoted": promoted,
+                "final_algos": list(final.plan.algos()),
+                "final_groups": [list(g.layers) for g in final.plan.groups],
+                "final_warm_us": t_final * 1e6,
+                "seed_warm_us": t_seed * 1e6,
+                "requests": n_requests,
+                "e2e_count": e2e_count,
+            }
+        )
+    finally:
+        record["adapt"] = ac.stats()
+        record["counters"] = {
+            k: v for k, v in rt.telemetry.snapshot()["counters"].items()
+        }
+        BENCH_PATH.write_text(json.dumps(record, indent=1, sort_keys=True,
+                                         default=str))
+        print(f"# wrote {BENCH_PATH}")
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

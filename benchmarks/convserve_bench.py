@@ -41,9 +41,31 @@ from repro.configs.convnets import (
     vgg_mixed_channel,
 )
 from repro.convserve import Engine, init_weights, run_direct
+from repro.convserve.planner import predict_stage_times
 from repro.core import analysis
 
 BENCH_PATH = pathlib.Path("BENCH_convserve.json")
+
+
+def profile_stage_rows(net, x, hw) -> list:
+    """Measured AND roofline-predicted seconds per stage -- the
+    predicted-vs-measured delta is the cost-model divergence the adapt
+    loop (convserve.adapt) acts on, surfaced in the bench artifact."""
+    predicted = dict(predict_stage_times(net.program, hw))
+    rows = []
+    for label, secs in net.profile_stages(x):
+        pred = predicted[label]
+        rows.append(
+            {
+                "label": label,
+                "us": secs * 1e6,
+                "predicted_us": pred * 1e6,
+                "measured_over_predicted": (
+                    secs / pred if pred > 0 else None
+                ),
+            }
+        )
+    return rows
 
 
 def bench_net(spec, batch: int, side: int, c_in: int, record: dict) -> None:
@@ -93,10 +115,15 @@ def bench_net(spec, batch: int, side: int, c_in: int, record: dict) -> None:
         )
     )
 
-    stages = []
-    for label, secs in net.profile_stages(x):
-        print(row(f"convserve/{spec.name}/stage/{label}", secs * 1e6))
-        stages.append({"label": label, "us": secs * 1e6})
+    stages = profile_stage_rows(net, x, analysis.SKYLAKE_X)
+    for st in stages:
+        print(
+            row(
+                f"convserve/{spec.name}/stage/{st['label']}", st["us"],
+                f"pred{st['predicted_us']:.0f}us;"
+                f"x{st['measured_over_predicted']:.2f}",
+            )
+        )
 
     record[spec.name] = {
         "algos": net.plan.algos(),
@@ -156,6 +183,15 @@ def bench_fft_net(
     print(row(f"convserve/{spec.name}/direct", t_dir * 1e6))
     print(row(f"convserve/{spec.name}/fused_vs_direct", 0.0,
               f"rel{rel_fused:.2e}"))
+    stages = profile_stage_rows(fused, x, analysis.SKYLAKE_X)
+    for st in stages:
+        print(
+            row(
+                f"convserve/{spec.name}/stage/{st['label']}", st["us"],
+                f"pred{st['predicted_us']:.0f}us;"
+                f"x{st['measured_over_predicted']:.2f}",
+            )
+        )
     record[spec.name] = {
         "algos": fused.plan.algos(),
         "fusion_groups": [list(g.layers) for g in fused.plan.groups],
@@ -164,6 +200,7 @@ def bench_fft_net(
         "direct_us": t_dir * 1e6,
         "fused_vs_direct_rel": rel_fused,
         "fused_vs_unfused_rel": rel_pair,
+        "stages": stages,
         "cache": fused.cache.stats(),
     }
 

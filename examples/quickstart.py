@@ -24,7 +24,9 @@ x = jnp.asarray(rng.standard_normal((2, 56, 56, 64)) * 0.1, jnp.float32)
 w = jnp.asarray(rng.standard_normal((3, 3, 64, 64)) * 0.1, jnp.float32)
 
 ref = conv2d_direct(x, w, pad=1)
-for algo in registry.names():
+# every algorithm whose domain covers this problem (the registry also
+# holds e.g. the temporal conv1d algorithm, which declines 2-D specs)
+for algo in registry.supporting(registry.ConvSpec.from_tensors(x, w, pad=1)):
     y = conv2d(x, w, pad=1, algo=algo)
     err = float(jnp.abs(y - ref).max() / jnp.abs(ref).max())
     print(f"{algo:16s} out={tuple(y.shape)} rel_err_vs_direct={err:.2e}")

@@ -8,8 +8,19 @@ For continuous traffic, `repro.convserve.runtime` layers an online
 serving loop on top: deadline-aware wave scheduling, bounded admission,
 a replica pool sharing one kernel cache, and telemetry
 (`ServeRuntime` / `RuntimeConfig` / `ReplicaPool`, re-exported here).
+`repro.convserve.adapt` closes the loop: measured stage costs replace
+the roofline when it mispredicts, with shadow A/B verification and
+zero-downtime plan hot swap (`AdaptController` / `MeasuredCostStore`,
+re-exported here).
 """
 
+from repro.convserve.adapt import (
+    AdaptConfig,
+    AdaptController,
+    MeasuredCostStore,
+    ShadowVerifier,
+    hot_swap,
+)
 from repro.core.registry import ConvSpec
 from repro.convserve.cache import KernelCache
 from repro.convserve.engine import CompiledNet, Engine
@@ -89,4 +100,9 @@ __all__ = [
     "Telemetry",
     "RealClock",
     "SimClock",
+    "AdaptConfig",
+    "AdaptController",
+    "MeasuredCostStore",
+    "ShadowVerifier",
+    "hot_swap",
 ]

@@ -1,0 +1,73 @@
+"""Zero-downtime plan hot swap.
+
+Promotion is three ordered moves, each safe on its own:
+
+1. **Warm** the candidate executors at every (bucket, batch-size) shape
+   the scheduler has ever dispatched (`WaveScheduler.compiled_sizes`),
+   using all-padding waves -- after this, no live request can hit a jit
+   compile on the new program.
+2. **Flip** dispatch: `ReplicaPool.swap` waits for in-flight waves to
+   drain on the old program and switches the executor list under the
+   dispatch lock, so every wave runs wholly on one program or the other
+   -- never a mix, never a drop.
+3. **Invalidate** surgically: the old program's `KernelCache` keys MINUS
+   the keys the new program still uses are evicted.  A promotion that
+   keeps some layers' algorithms keeps their transforms resident.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+
+def warm_executors(
+    executors: Sequence,
+    sizes_by_bucket: dict,
+) -> int:
+    """Compile every (bucket, batch size) program on every candidate
+    executor with all-padding waves (extent-0 rows are fully masked, so
+    warming computes zeros and cannot affect any served output).
+    Returns the number of programs warmed."""
+    n = 0
+    for ex in executors:
+        c0 = ex.spec.conv_layers()[0][1].c_in
+        for bucket, sizes in sizes_by_bucket.items():
+            for s in sizes:
+                x = np.zeros((s, bucket, bucket, c0), np.float32)
+                jax.block_until_ready(ex(x, np.zeros((s, 2), np.int32)))
+                n += 1
+    return n
+
+
+def hot_swap(
+    pool,
+    candidates: Sequence,
+    *,
+    scheduler=None,
+    timeout_s: float = 5.0,
+    invalidate: bool = True,
+) -> list:
+    """Promote `candidates` into `pool` with zero downtime.
+
+    Warms at the scheduler's compiled shapes (skipped when no scheduler
+    is passed), drains + flips dispatch atomically, then drops the old
+    program's now-orphaned cache entries.  Returns the outgoing
+    executors (the rollback path keeps them warm by simply swapping
+    them back)."""
+    if scheduler is not None:
+        warm_executors(candidates, scheduler.compiled_sizes())
+    old = pool.swap(candidates, timeout_s=timeout_s)
+    if invalidate:
+        old_keys = set()
+        new_keys = set()
+        for ex in old:
+            old_keys.update(ex.cache_keys())
+        for ex in pool.executors:
+            new_keys.update(ex.cache_keys())
+        stale = old_keys - new_keys
+        if stale:
+            pool.cache.invalidate_keys(stale)
+    return old

@@ -68,6 +68,9 @@ class CompiledNet:
     def profile_stages(self, x, sizes=None) -> List[Tuple[str, float]]:
         return self.executor.profile_stages(x, sizes)
 
+    def cache_keys(self) -> list:
+        return self.executor.cache_keys()
+
     def stats(self) -> dict:
         return self.executor.stats()
 
@@ -96,7 +99,7 @@ class Engine:
         *,
         input_hw: Tuple[int, int] = (64, 64),
         plan: Optional[NetPlan] = None,
-        fuse: bool = True,
+        fuse: Optional[bool] = True,
         **plan_kwargs,
     ) -> CompiledNet:
         """NetSpec (+ weights) -> CompiledNet.
@@ -104,19 +107,26 @@ class Engine:
         Without `plan`, plans at reference `input_hw` on the engine's
         hardware model.  With `plan` (e.g. loaded from a plan file), the
         per-layer decisions are taken as-is; a v2-era plan with no
-        fusion groups is upgraded through the same roofline model first
-        (pass ``fuse=False`` to serve strictly layer-by-layer).
+        fusion groups is upgraded through the same roofline model first.
+        Pass ``fuse=False`` to serve strictly layer-by-layer, or
+        ``fuse=None`` to take the plan's groups exactly as given -- the
+        adapt loop needs this to compile a deliberately-unfused
+        candidate without the upgrade path re-deriving groups for it.
         """
         if plan is None:
             plan = plan_net(
                 spec, input_hw[0], input_hw[1],
-                hw=self.hw, dtype=self.dtype.name, fuse=fuse, **plan_kwargs,
+                hw=self.hw, dtype=self.dtype.name,
+                fuse=bool(fuse) if fuse is not None else True,
+                **plan_kwargs,
             )
         elif plan_kwargs:
             raise ValueError(
                 f"plan_kwargs {sorted(plan_kwargs)} are planning knobs: "
                 "meaningless with an explicit `plan`"
             )
+        elif fuse is None:
+            pass  # take the plan verbatim, fused or not
         elif fuse:
             plan = upgrade_plan(spec, plan, self.hw)
         else:

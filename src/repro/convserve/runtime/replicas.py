@@ -143,6 +143,39 @@ class ReplicaPool:
         """Synchronous convenience wrapper."""
         return self.submit(wave).result()
 
+    def swap(self, executors: Sequence, *, timeout_s: float = 5.0) -> list:
+        """Atomically replace every replica's executor with `executors`
+        (the hot-swap path).  Waits for all in-flight waves to drain on
+        the OLD program first -- the drain check and the flip happen
+        under the dispatch lock, so no wave can be picked between them.
+        Returns the outgoing executors (the caller diffs their cache
+        keys against the new ones to invalidate stale transforms).
+        """
+        new = list(executors)
+        if len(new) != len(self.executors):
+            raise ValueError(
+                f"swap needs {len(self.executors)} executors, got {len(new)}"
+            )
+        for ex in new:
+            if ex.cache is not self.cache:
+                raise ValueError(
+                    "swapped-in replicas must share the pool's KernelCache"
+                )
+            if ex.spec is not self.spec and ex.spec != self.spec:
+                raise ValueError("swapped-in replicas must serve the same NetSpec")
+        deadline = time.monotonic() + timeout_s
+        while True:
+            with self._lock:
+                if sum(self.in_flight) == 0:
+                    old = self.executors
+                    self.executors = new
+                    return old
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"in-flight waves did not drain within {timeout_s}s"
+                )
+            time.sleep(0.001)
+
     def has_capacity(self) -> bool:
         """Whether a dispatched wave would start immediately.  The
         runtime gates wave formation on this: dispatching into a

@@ -350,6 +350,14 @@ class WaveScheduler:
             if bucket in self._sizes:
                 self._sizes[bucket].add(size)
 
+    def compiled_sizes(self) -> Dict[int, list]:
+        """Snapshot of every batch shape each bucket has dispatched (or
+        had warmed): ``{bucket: sorted sizes}``.  The hot-swap path warms
+        a candidate program at exactly these shapes, so the swapped-in
+        replicas never cold-compile under live traffic."""
+        with self._lock:
+            return {b: sorted(s) for b, s in self._sizes.items()}
+
     def observe_service(self, bucket: int, seconds: float) -> None:
         """Feed a measured wave compute time back into the slack model."""
         a = self.cfg.service_ewma

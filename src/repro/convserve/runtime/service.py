@@ -65,6 +65,17 @@ class ServeRuntime:
         self.results: Dict[int, np.ndarray] = {}
         self.rejections: Dict[int, Rejection] = {}
         self.errors: List[BaseException] = []
+        self._wave_observers: List = []
+
+    def add_wave_observer(self, fn) -> None:
+        """Register ``fn(result: WaveResult)`` to run after each wave's
+        client-side bookkeeping completes.  This is the adapt loop's tap
+        point: shadow duplication happens here, strictly AFTER the live
+        wave's results and latency histograms are recorded, so whatever
+        the observer does can never count toward client latency SLOs.
+        Observer exceptions are counted (`wave_observer_errors`), never
+        propagated into the serving path."""
+        self._wave_observers.append(fn)
 
     # ------------------------------------------------------ admission
 
@@ -188,6 +199,11 @@ class ServeRuntime:
             self.results.update(res.outputs)
             self._outstanding -= 1
             self._done_cv.notify_all()
+        for fn in self._wave_observers:
+            try:
+                fn(res)
+            except Exception:
+                self.telemetry.inc("wave_observer_errors")
 
     # ------------------------------------------------------ the loop
 

@@ -137,6 +137,26 @@ def predicted_utilization(
     return min(1.0, u_fast, u_dram)
 
 
+def conv_time_s(
+    hw: HardwareModel,
+    *,
+    out_h: int,
+    out_w: int,
+    c_in: int,
+    c_out: int,
+    k: int,
+    groups: int = 1,
+    predicted_util: float = 1.0,
+) -> float:
+    """Modeled wall time of one conv: direct FLOP count over peak,
+    derated by the predicted utilization (floored at 5% so a degenerate
+    utilization estimate never produces an infinite time).  This is the
+    roofline prediction that `convserve.adapt` compares measured stage
+    times against."""
+    flops = 2 * out_h * out_w * c_in * c_out * k * k // groups
+    return flops / (hw.peak_flops * max(predicted_util, 0.05))
+
+
 MATRIX_RESIDENCY_FRAC = 0.5  # paper S4.1.1's constant fraction -- the ONE
 # copy: fused_is_feasible, fused_cost_ta, and the convserve fusion-group
 # planner all gate on this same threshold

@@ -34,6 +34,7 @@ from repro.core import analysis, registry
 from repro.core.fft_conv import conv2d_fft_fused  # noqa: F401  (re-export +
 from repro.core.fused import conv2d_l3_fused  # noqa: F401      registers the
 from repro.core.three_stage import conv2d_three_stage  # noqa: F401  algos)
+from repro.kernels.conv1d_fused import ops as _conv1d_ops  # noqa: F401
 from repro.kernels.fused_winograd import ops as _pallas_ops  # noqa: F401
 
 if TYPE_CHECKING:  # convserve imports core; keep the runtime edge one-way
@@ -74,7 +75,9 @@ class DirectAlgorithm(registry.Algorithm):
     consumes_wt = False
 
     def supports(self, spec: registry.ConvSpec) -> bool:
-        return True
+        # temporal (1-D causal) specs carry left-only pad semantics the
+        # symmetric-pad 2-D path cannot express
+        return not spec.temporal
 
     def plan(self, spec, hw, *, hints=None, tune_r=False, wisdom_path=None):
         return registry.AlgoPlan(

@@ -69,8 +69,11 @@ class FFTFusedAlgorithm(pipeline.TransformedAlgorithm):
     def supports(self, spec: registry.ConvSpec) -> bool:
         # lax.fft computes in f32/f64; bf16/fp16 ride the fp32 compute
         # path and are cast back after assembly (a real path, not a
-        # fallback)
-        return spec.dtype in ("float32", "float64", "bfloat16", "float16")
+        # fallback).  Temporal (1-D causal) specs have different pad
+        # semantics and belong to the conv1d algorithm.
+        return not spec.temporal and spec.dtype in (
+            "float32", "float64", "bfloat16", "float16"
+        )
 
     def make_transform(self, spec, params):
         return transforms.FFTTransform(t=int(params["t_fft"]), k=spec.k)

@@ -281,8 +281,9 @@ class TransformedAlgorithm(registry.Algorithm):
     def supports(self, spec: registry.ConvSpec) -> bool:
         # the engine handles stride (decimation), groups (block-diagonal
         # mix) and ragged geometry for every family; dtype domains may
-        # narrow this in subclasses
-        return True
+        # narrow this in subclasses.  Temporal (1-D causal) specs have
+        # left-only pad semantics outside the 2-D tiling engine.
+        return not spec.temporal
 
     def r_floor(self, hw: analysis.HardwareModel) -> int:
         return max(self.r_floor_base, analysis.min_r(hw) // 2)

@@ -45,6 +45,14 @@ class ConvSpec:
     was posed at; executors may apply a plan to other runtime shapes --
     the structural fields (k, pad, stride, groups, dtype) are what the
     algorithms condition on.
+
+    **Temporal specs** (``h == 1`` with ``k > 1``) pose a 1-D problem:
+    the kernel is 1 x k along `w` (a length-`w` sequence of `c` channels)
+    and `pad` is interpreted as CAUSAL left-only padding along `w` --
+    ``pad = k - 1`` gives a same-length causal conv, the shape sequence
+    models use.  2-D algorithms must decline temporal specs in
+    `supports` (symmetric-pad k x k semantics do not apply); the fused
+    conv1d kernel registers as their Algorithm.
     """
 
     h: int
@@ -67,8 +75,16 @@ class ConvSpec:
                 f"channels ({self.c_in}->{self.c_out}) not divisible by "
                 f"groups {self.groups}"
             )
-        if self.h + 2 * self.pad < self.k or self.w + 2 * self.pad < self.k:
+        if self.temporal:
+            if self.w + self.pad < self.k:
+                raise ValueError(f"kernel larger than padded sequence: {self}")
+        elif self.h + 2 * self.pad < self.k or self.w + 2 * self.pad < self.k:
             raise ValueError(f"kernel larger than padded input: {self}")
+
+    @property
+    def temporal(self) -> bool:
+        """1-D (causal) problem posed on the `w` axis: h == 1, k > 1."""
+        return self.h == 1 and self.k > 1
 
     @staticmethod
     def from_tensors(
@@ -93,6 +109,8 @@ class ConvSpec:
 
     @property
     def out_hw(self) -> Tuple[int, int]:
+        if self.temporal:  # causal left-only pad along w, h untouched
+            return (1, (self.w + self.pad - self.k) // self.stride + 1)
         return (
             (self.h + 2 * self.pad - self.k) // self.stride + 1,
             (self.w + 2 * self.pad - self.k) // self.stride + 1,

@@ -64,6 +64,50 @@ def _load(path: pathlib.Path) -> dict:
         return {}
 
 
+# Wisdom values are either a bare int R (legacy files) or a stamped entry
+# {"r": int, "gen": int, "ts": float}.  `gen` is a monotonic generation
+# counter per wisdom file; `ts` is wall-clock seconds.  Stamps let online
+# measurement layers (convserve.adapt) and offline tuning expire each
+# other's entries by age or generation instead of silently shadowing.
+
+
+def _entry_r(value) -> int:
+    return int(value["r"]) if isinstance(value, dict) else int(value)
+
+
+def _entry_gen(value) -> int:
+    return int(value.get("gen", 0)) if isinstance(value, dict) else 0
+
+
+def _entry_ts(value) -> float:
+    return float(value.get("ts", 0.0)) if isinstance(value, dict) else 0.0
+
+
+def wisdom_generation(wisdom_path: Optional[pathlib.Path] = None) -> int:
+    """Highest generation stamped in the wisdom file (0 when empty or
+    fully legacy).  Writers stamp `wisdom_generation() + 1`."""
+    path = pathlib.Path(wisdom_path or _DEFAULT_WISDOM)
+    wisdom = _load_cached(path)
+    return max((_entry_gen(v) for v in wisdom.values()), default=0)
+
+
+def entry_info(
+    h: int, w: int, c_in: int, c_out: int, *, k: int = 3, m: int = 5,
+    transform: Optional[transforms.Transform] = None,
+    wisdom_path: Optional[pathlib.Path] = None,
+) -> Optional[dict]:
+    """Full stamped view of one wisdom entry: {"r", "gen", "ts"}, with
+    legacy bare-int entries normalized to gen 0 / ts 0.0.  None when the
+    key has never been tuned."""
+    path = pathlib.Path(wisdom_path or _DEFAULT_WISDOM)
+    wisdom = _load_cached(path)
+    key = _key(_resolve_transform(transform, k, m), h, w, c_in, c_out)
+    if key not in wisdom:
+        return None
+    v = wisdom[key]
+    return {"r": _entry_r(v), "gen": _entry_gen(v), "ts": _entry_ts(v)}
+
+
 _WISDOM_CACHE: dict = {}  # path -> (mtime_ns, parsed wisdom)
 
 
@@ -134,15 +178,35 @@ def lookup_r(
     h: int, w: int, c_in: int, c_out: int, *, k: int = 3, m: int = 5,
     transform: Optional[transforms.Transform] = None,
     wisdom_path: Optional[pathlib.Path] = None,
+    max_age_s: Optional[float] = None,
+    min_gen: int = 0,
+    now: Optional[float] = None,
 ) -> Optional[int]:
     """Non-measuring wisdom read: the tuned R for this transform family +
     layer geometry if a previous `tuned_r` pass stored one, else None.
     This is how ``algo="auto"`` benefits from the wisdom file without
-    ever paying a measurement at dispatch time."""
+    ever paying a measurement at dispatch time.
+
+    Staleness-aware: with `max_age_s` set, entries whose timestamp is
+    older than ``now - max_age_s`` read as absent (legacy unstamped
+    entries have ts 0.0 and therefore always expire); with `min_gen`
+    set, entries stamped with an older generation read as absent."""
     path = pathlib.Path(wisdom_path or _DEFAULT_WISDOM)
     wisdom = _load_cached(path)
     key = _key(_resolve_transform(transform, k, m), h, w, c_in, c_out)
-    return int(wisdom[key]) if key in wisdom else None
+    if key not in wisdom:
+        return None
+    v = wisdom[key]
+    if _entry_gen(v) < min_gen:
+        return None
+    if max_age_s is not None:
+        now = time.time() if now is None else now
+        ts = _entry_ts(v)
+        # an age bound only admits entries of KNOWN age: legacy
+        # unstamped entries (ts 0.0) read as absent unconditionally
+        if ts <= 0.0 or ts < now - max_age_s:
+            return None
+    return _entry_r(v)
 
 
 def measure_r(
@@ -190,9 +254,10 @@ def tuned_r(
     wisdom = _load(path)
     key = _key(tr, h, w, c_in, c_out)
     if key in wisdom:
-        return int(wisdom[key])
+        return _entry_r(wisdom[key])
     r = measure_r(h, w, c_in, c_out, transform=tr)
     wisdom = _load(path)  # re-read: another tuner may have written meanwhile
-    wisdom[key] = int(r)
+    gen = max((_entry_gen(v) for v in wisdom.values()), default=0) + 1
+    wisdom[key] = {"r": int(r), "gen": gen, "ts": time.time()}
     atomic_write_text(path, json.dumps(wisdom, indent=1, sort_keys=True))
     return r

@@ -1,0 +1,454 @@
+"""Adaptive replanning under a simulated clock: measured divergence on
+a mispredicting fused plan triggers a background replan, shadow waves
+are bit-exact and never count toward client latency SLOs, promotion
+hot-swaps with zero dropped/inexact responses, rollback restores the
+old program, and a well-calibrated store never replans.  Plus the
+satellite surfaces: the measured-cost store's EWMA/staleness
+discipline, wisdom generation/timestamp stamps, the temporal conv1d
+registry path, and the telemetry snapshot schema."""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.convnets import tiny_testnet
+from repro.convserve import (
+    AdaptConfig,
+    AdaptController,
+    Engine,
+    MeasuredCostStore,
+    ShadowVerifier,
+    hot_swap,
+    init_weights,
+    run_direct,
+)
+from repro.convserve import planner
+from repro.convserve.runtime import (
+    ReplicaPool,
+    RuntimeConfig,
+    ServeRuntime,
+    SimClock,
+    Telemetry,
+)
+from repro.convserve.runtime.telemetry import stage_rollup
+from repro.core import analysis, registry, transforms, tune
+
+BIG_HW = analysis.HardwareModel(
+    name="big", peak_flops=1e12, dram_bw=1e11, fast_shared_bw=5e11,
+    fast_shared_bytes=1 << 30, private_bytes=1 << 24,
+)
+
+SPEC = tiny_testnet(4)
+
+
+def _image(rng, side: int) -> np.ndarray:
+    return (rng.standard_normal((side, side, 4)) * 0.1).astype(np.float32)
+
+
+def _runtime(cfg=None, *, clock=None, n=1):
+    """Deterministic adapt testbed: inline replicas + SimClock.  Returns
+    (runtime, engine, weights) -- the controller needs all three."""
+    ws = init_weights(SPEC, seed=5)
+    engine = Engine(hw=BIG_HW)
+    pool = ReplicaPool.build(
+        engine, SPEC, ws, n=n, workers=0, input_hw=(16, 16)
+    )
+    cfg = cfg or RuntimeConfig(
+        max_batch=2, buckets=(16,), slo_s=1.0, service_est_s=1e-4
+    )
+    return ServeRuntime(pool, cfg, clock=clock or SimClock()), engine, ws
+
+
+def _probe(engine, fused_factor=10.0, single_factor=1.0,
+           direct_factor=100.0):
+    """Fake stage-timing probe: each stage 'measures' at its roofline
+    prediction scaled by a per-kind factor -- a fused_factor of 10 seeds
+    the store with a grossly mispredicting fused plan without depending
+    on host timer behaviour.  Direct stages default expensive (their
+    util=1.0 prediction is the most optimistic in the model, and these
+    tests want the unfused transformed plan, not direct, to be the
+    measured winner)."""
+
+    def factor(stage):
+        if stage.fused:
+            return fused_factor
+        if stage.units[0].plan.algo == "direct":
+            return direct_factor
+        return single_factor
+
+    def probe(net, bucket, batch):
+        preds = planner.predict_stage_times(net.program, engine.hw)
+        return [
+            (label, pred * factor(stage))
+            for stage, (label, pred) in zip(net.program.stages, preds)
+        ]
+
+    return probe
+
+
+def _controller(rt, engine, ws, probe, shadow_timer=None, **cfg_kw):
+    kw = dict(
+        divergence_ratio=2.0, shadow_fraction=1.0, shadow_min_waves=2,
+        cooldown_s=0.5,
+    )
+    kw.update(cfg_kw)
+    return AdaptController(
+        rt, engine, SPEC, ws, AdaptConfig(**kw),
+        probe=probe, shadow_timer=shadow_timer,
+    )
+
+
+# ------------------------------------------- (a) divergence -> replan
+
+
+def test_divergence_triggers_replan_and_opens_shadow():
+    """A fused stage measuring 10x its prediction (singles on-model)
+    must trigger a replan whose measured-cost candidate drops the fusion
+    groups but keeps the per-layer algorithms -- a bitwise-comparable
+    candidate."""
+    rt, engine, ws = _runtime()
+    ac = _controller(rt, engine, ws, _probe(engine, fused_factor=10.0))
+    live_plan = rt.pool.executors[0].plan
+    assert live_plan.groups, "seed plan must be fused for this test"
+
+    ac.measure()
+    ac.probe_alternatives()
+    reason = ac.check()
+    assert reason is not None
+    assert ac.replans_triggered == 1
+    assert ac.state == "shadow"
+    assert ac.candidate_plan.groups == ()
+    assert ac.candidate_plan.algos() == live_plan.algos()
+    assert ac.verifier.mode == "bitwise"
+    assert rt.telemetry.counter("adapt.replans_triggered") == 1
+    # the trigger and the shadow opening are both audited
+    assert [a["event"] for a in ac.audit] == ["replan", "shadow_open"]
+
+
+def test_matched_measurements_never_replan():
+    """(d) measurements at the roofline's own predictions (uniform
+    ratio, no cheaper measured alternative): check() stays quiet."""
+    rt, engine, ws = _runtime()
+    ac = _controller(
+        rt, engine, ws, _probe(engine, fused_factor=1.0, single_factor=1.0)
+    )
+    ac.measure()
+    ac.probe_alternatives()
+    assert ac.check() is None
+    assert ac.replans_triggered == 0
+    assert ac.state == "idle"
+    assert ac.audit == []
+
+
+# ------------------------- (b)+(c) shadow exactness, promote, rollback
+
+
+def _serve(rt, n_requests, side=16, seed=0):
+    rng = np.random.default_rng(seed)
+    imgs = {i: _image(rng, side) for i in range(n_requests)}
+    for i in range(n_requests):
+        assert rt.submit(imgs[i], rid=i) is None
+        rt.poll()
+    rt.drain()
+    return imgs
+
+
+def _assert_all_exact(rt, ws, imgs):
+    missing = [i for i in imgs if i not in rt.results]
+    assert not missing, f"dropped requests: {missing}"
+    for i, im in imgs.items():
+        ref = np.asarray(run_direct(SPEC, ws, im[None]))[0]
+        scale = max(float(np.abs(ref).max()), 1e-30)
+        rel = float(np.abs(rt.results[i] - ref).max()) / scale
+        assert rel < 1e-3, f"request {i} inexact: rel {rel}"
+
+
+def test_shadow_promotion_hot_swaps_with_zero_downtime():
+    """The acceptance gate: shadows run bit-exact beside live traffic,
+    the injected timer says the candidate is faster, and promotion
+    swaps the pool's program mid-traffic -- every request served, every
+    response exact, no shadow wave in the client e2e histogram."""
+    rt, engine, ws = _runtime()
+    ac = _controller(
+        rt, engine, ws, _probe(engine, fused_factor=10.0),
+        shadow_timer=lambda res, cand_s: (0.010, 0.004),
+    )
+    seed_plan = rt.pool.executors[0].plan
+    ac.measure()
+    ac.probe_alternatives()
+    assert ac.check() is not None
+
+    n = 8  # max_batch=2 -> 4 waves: 1 cold + 2 warm pairs + 1 post-swap
+    imgs = _serve(rt, n)
+    _assert_all_exact(rt, ws, imgs)
+
+    assert ac.promotions == 1
+    assert ac.rollbacks == 0
+    assert ac.state == "idle"
+    assert rt.pool.executors[0].plan.groups == ()
+    assert rt.pool.executors[0].plan != seed_plan
+    assert ac.last_verifier.mismatches == 0
+    assert ac.last_verifier.mode == "bitwise"
+    assert rt.telemetry.counter("adapt.promotions") == 1
+    assert ac.audit[-1]["event"] == "promote"
+
+    snap = rt.stats()
+    # SLO exclusion: shadow waves ran (their own histogram proves it)
+    # yet the client e2e histogram counts exactly the client requests
+    assert snap["latency"]["e2e"]["count"] == n
+    assert snap["latency"]["adapt.shadow_compute"]["count"] >= 2
+
+
+def test_shadow_rollback_restores_live_program():
+    """A candidate the injected timer calls slower is rolled back: the
+    seed program keeps serving, the audit says why, and the cooldown
+    holds off an immediate re-trigger."""
+    rt, engine, ws = _runtime()
+    ac = _controller(
+        rt, engine, ws, _probe(engine, fused_factor=10.0),
+        shadow_timer=lambda res, cand_s: (0.004, 0.010),  # candidate slower
+    )
+    seed_plan = rt.pool.executors[0].plan
+    ac.measure()
+    ac.probe_alternatives()
+    assert ac.check() is not None
+
+    imgs = _serve(rt, 8)
+    _assert_all_exact(rt, ws, imgs)
+
+    assert ac.rollbacks == 1
+    assert ac.promotions == 0
+    assert ac.state == "idle"
+    assert rt.pool.executors[0].plan == seed_plan
+    roll = [a for a in ac.audit if a["event"] == "rollback"]
+    assert roll and roll[0]["reason"] == "shadow_slower"
+    assert rt.telemetry.counter("adapt.rollbacks") == 1
+    # cooldown: the store still says "diverged" but check() waits
+    assert ac.check() is None
+    assert ac.replans_triggered == 1
+
+
+def test_hot_swap_invalidates_stale_cache_keys():
+    """Swapping to a program that consumes no pre-transformed kernels
+    must drop the outgoing program's cache entries (and only then)."""
+    ws = init_weights(SPEC, seed=5)
+    engine = Engine(hw=BIG_HW)
+    pool = ReplicaPool.build(
+        engine, SPEC, ws, n=1, workers=0, input_hw=(16, 16)
+    )
+    live = pool.executors[0]
+    x = np.zeros((1, 16, 16, 4), np.float32)
+    jax.block_until_ready(live(x))  # populate the shared cache
+    assert live.cache_keys()
+
+    cand = engine.compile(
+        SPEC, ws, input_hw=(16, 16), allowed=("direct",), fuse=False
+    )
+    old = hot_swap(pool, [cand], timeout_s=1.0)
+    assert pool.executors[0] is cand
+    assert old[0] is live
+    assert pool.cache.stats()["invalidations"] >= 1
+
+
+# ------------------------------------------- measured-cost store unit
+
+
+def test_cost_store_ewma_cold_exclusion_and_staleness():
+    store = MeasuredCostStore(ewma=0.5)
+    store.observe("k", 1.0, predicted_s=0.5, now=0.0)
+    store.observe("k", 2.0, now=10.0)
+    e = store.entry("k")
+    assert e.measured_s == pytest.approx(1.5)  # EWMA fold, not overwrite
+    assert e.n == 2
+    assert e.predicted_s == 0.5  # prediction survives a bare observe
+    assert e.ratio == pytest.approx(3.0)
+    assert e.gen == 2 and e.ts == 10.0
+
+    # cold samples never touch the EWMA, but are counted
+    store.observe("k", 100.0, cold=True)
+    assert store.entry("k").measured_s == pytest.approx(1.5)
+    assert store.cold_skipped == 1
+
+    # staleness: age and generation gates read as absent
+    assert store.lookup("k", max_age_s=5.0, now=20.0) is None
+    assert store.lookup("k", max_age_s=15.0, now=20.0) == pytest.approx(1.5)
+    assert store.entry("k", min_gen=3) is None
+    assert store.entry("k", min_gen=2) is not None
+
+
+def test_cost_store_ratio_scale_is_median():
+    store = MeasuredCostStore()
+    store.observe("a", 1.0, predicted_s=1.0, now=0.0)   # ratio 1
+    store.observe("b", 2.0, predicted_s=2.0, now=0.0)   # ratio 1
+    store.observe("c", 10.0, predicted_s=1.0, now=0.0)  # ratio 10
+    assert store.ratio_scale() == pytest.approx(1.0)
+    assert len(store) == 3
+
+
+def test_cost_store_roundtrips_through_json(tmp_path):
+    store = MeasuredCostStore()
+    store.observe("x", 3.0, predicted_s=1.5, now=7.0)
+    path = tmp_path / "costs.json"
+    store.save(path)
+    back = MeasuredCostStore.load(path)
+    e = back.entry("x")
+    assert e.measured_s == 3.0 and e.predicted_s == 1.5 and e.ts == 7.0
+    assert back.generation == store.generation
+
+
+# -------------------------------------------------- shadow verifier unit
+
+
+def test_shadow_verifier_mismatch_is_immediately_disqualifying():
+    v = ShadowVerifier(mode="bitwise", min_waves=3)
+    a = np.ones((2, 2), np.float32)
+    assert v.record({0: a}, {0: a}, live_compute_s=1.0, cand_compute_s=1.0)
+    # one bit of drift: rollback regardless of how few waves have run
+    assert not v.record(
+        {1: a}, {1: a + 1e-7}, live_compute_s=1.0, cand_compute_s=1.0
+    )
+    assert v.verdict() == "rollback"
+    assert v.mismatches == 1
+
+
+def test_shadow_verifier_needs_min_waves_and_skips_cold_pairs():
+    v = ShadowVerifier(mode="rtol", rtol=1e-3, min_waves=2)
+    a = np.ones((2, 2), np.float32)
+    b = a * (1 + 1e-5)  # within tolerance
+    v.record({0: a}, {0: b}, live_compute_s=0.010, cand_compute_s=0.004)
+    assert v.verdict() is None  # one pair < min_waves
+    v.record({1: a}, {1: b}, live_compute_s=0.010, cand_compute_s=0.004,
+             cold=True)
+    assert v.cold_skipped == 1
+    assert v.verdict() is None  # cold pair did not count
+    v.record({2: a}, {2: b}, live_compute_s=0.010, cand_compute_s=0.004)
+    assert v.verdict() == "promote"
+    assert v.cand_mean_s == pytest.approx(0.004)
+
+
+# --------------------------------------- wisdom stamps (tune satellite)
+
+
+def test_wisdom_entries_stamped_and_staleness_aware(tmp_path):
+    """Entries carry generation + timestamp; `lookup_r` treats too-old
+    or out-generationed entries as absent, and legacy bare-int entries
+    (gen 0 / ts 0.0) always expire under an age bound."""
+    path = tmp_path / "wisdom.json"
+    wino = transforms.WinogradTransform(m=5, k=3)
+    legacy = tune._key(wino, 8, 8, 4, 4)
+    stamped = tune._key(wino, 16, 16, 4, 4)
+    path.write_text(json.dumps({
+        legacy: 7,
+        stamped: {"r": 9, "gen": 3, "ts": 100.0},
+    }))
+
+    assert tune.wisdom_generation(path) == 3
+    assert tune.entry_info(8, 8, 4, 4, transform=wino, wisdom_path=path) == {
+        "r": 7, "gen": 0, "ts": 0.0
+    }
+    assert tune.entry_info(
+        16, 16, 4, 4, transform=wino, wisdom_path=path
+    ) == {"r": 9, "gen": 3, "ts": 100.0}
+    assert tune.entry_info(32, 32, 4, 4, transform=wino,
+                           wisdom_path=path) is None
+
+    # plain reads see both entries
+    assert tune.lookup_r(8, 8, 4, 4, transform=wino, wisdom_path=path) == 7
+    assert tune.lookup_r(16, 16, 4, 4, transform=wino, wisdom_path=path) == 9
+    # age gate: stamped entry inside / outside the window; legacy always out
+    kw = dict(transform=wino, wisdom_path=path, now=200.0)
+    assert tune.lookup_r(16, 16, 4, 4, max_age_s=150.0, **kw) == 9
+    assert tune.lookup_r(16, 16, 4, 4, max_age_s=50.0, **kw) is None
+    assert tune.lookup_r(8, 8, 4, 4, max_age_s=1e9, **kw) is None
+    # generation gate
+    assert tune.lookup_r(16, 16, 4, 4, transform=wino, wisdom_path=path,
+                         min_gen=3) == 9
+    assert tune.lookup_r(16, 16, 4, 4, transform=wino, wisdom_path=path,
+                         min_gen=4) is None
+
+
+# ------------------------------- temporal conv1d via the registry
+
+
+def test_temporal_spec_plans_conv1d_fused_and_matches_lax():
+    """A depthwise-causal temporal spec auto-plans onto the registered
+    conv1d_fused algorithm, every 2-D algorithm declines it, and the
+    result matches lax's grouped causal convolution."""
+    b, length, d, k = 2, 64, 8, 4
+    spec = registry.ConvSpec(
+        h=1, w=length, c_in=d, c_out=d, k=k, pad=k - 1, stride=1, groups=d
+    )
+    assert spec.temporal
+    assert spec.out_hw == (1, length)
+    for name in ("direct", "l3_fused", "three_stage", "fft_fused"):
+        assert not registry.get(name).supports(spec)
+
+    ap = registry.plan_conv(spec, analysis.SKYLAKE_X)
+    assert ap.algo == "conv1d_fused"
+
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal((b, 1, length, d)) * 0.1).astype(np.float32)
+    w = (rng.standard_normal((1, k, 1, d)) * 0.1).astype(np.float32)
+    y = np.asarray(registry.get(ap.algo).execute(x, w, None, ap))
+    ref = np.asarray(jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(1, 1),
+        padding=((0, 0), (k - 1, 0)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=d,
+    ))
+    assert y.shape == ref.shape == (b, 1, length, d)
+    np.testing.assert_allclose(y, ref, atol=1e-5)
+
+
+# ----------------------------------------- telemetry snapshot schema
+
+
+def test_telemetry_snapshot_schema_is_stable():
+    """The snapshot document's key sets are a wire format (dashboards
+    scrape them): top level, per-histogram keys, and percentile
+    ordering must not drift."""
+    t = Telemetry()
+    t.inc("waves")
+    t.set_gauge("queue_depth", 3.0)
+    for v in [1e-4, 5e-4, 2e-3, 8e-3, 3e-2, 1e-1, 1e-1, 4e-1]:
+        t.observe("e2e", v)
+    snap = t.snapshot(scheduler={"depth": 0}, stages=None)
+    # a None section is omitted, a real one merges in by name
+    assert set(snap) == {"counters", "gauges", "latency", "scheduler"}
+    assert snap["counters"]["waves"] == 1
+    lat = snap["latency"]["e2e"]
+    assert set(lat) == {"count", "mean_s", "p50_s", "p95_s", "p99_s", "max_s"}
+    assert lat["count"] == 8
+    assert lat["p50_s"] <= lat["p95_s"] <= lat["p99_s"] <= lat["max_s"]
+    json.dumps(snap)  # the whole document stays plain JSON
+
+
+def test_stage_rollup_schema_is_stable():
+    rows = stage_rollup([("conv0", 1e-3), ("fuse[1+2]", 2e-3)])
+    assert [set(r) for r in rows] == [{"label", "us"}] * 2
+    assert rows[0] == {"label": "conv0", "us": pytest.approx(1000.0)}
+
+
+def test_runtime_stats_document_includes_adapt_counters():
+    """End to end: after a promotion the runtime's single JSON document
+    carries the adapt counters next to the serving counters."""
+    rt, engine, ws = _runtime()
+    ac = _controller(
+        rt, engine, ws, _probe(engine, fused_factor=10.0),
+        shadow_timer=lambda res, cand_s: (0.010, 0.004),
+    )
+    ac.measure()
+    ac.probe_alternatives()
+    assert ac.check() is not None
+    _serve(rt, 8)
+    snap = rt.stats()
+    c = snap["counters"]
+    assert c["adapt.replans_triggered"] == 1
+    assert c["adapt.shadows_run"] >= 2
+    assert c["adapt.promotions"] == 1
+    assert "wave_observer_errors" not in c  # the observer never threw
+    json.dumps(ac.stats(), default=str)  # stats() is a report, not a crash
