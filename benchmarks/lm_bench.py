@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.models import init_lm, lm_decode_step, lm_prefill
+from repro.models import lm_decode_step, lm_prefill
 from repro.train.step import TrainConfig, init_train_state, make_train_step
 
 from benchmarks.common import time_fn

@@ -19,11 +19,7 @@ from repro.core import analysis as an
 from repro.core import tiling
 from repro.core.conv import conv2d_direct
 from repro.core.fused import conv2d_l3_fused
-from repro.core.three_stage import (
-    ThreeStageStaged,
-    conv2d_three_stage,
-    transform_kernels,
-)
+from repro.core.three_stage import ThreeStageStaged, transform_kernels
 
 from benchmarks.common import time_fn
 

@@ -19,7 +19,7 @@ import os
 import pathlib
 import shutil
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np

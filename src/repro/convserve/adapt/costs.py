@@ -102,9 +102,9 @@ class MeasuredCostStore:
         self.ewma = ewma
         self._clock = clock
         self._lock = threading.Lock()
-        self._entries: Dict[str, CostEntry] = {}
-        self._gen = 0
-        self.cold_skipped = 0
+        self._entries: Dict[str, CostEntry] = {}  # guarded-by: _lock
+        self._gen = 0  # guarded-by: _lock
+        self.cold_skipped = 0  # guarded-by: _lock
 
     def _now(self) -> float:
         return self._clock.now() if self._clock is not None else 0.0

@@ -42,7 +42,6 @@ measure -> diverge -> replan -> shadow -> promote/rollback loop:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -53,6 +52,7 @@ from repro.convserve import planner
 from repro.convserve.adapt.costs import MeasuredCostStore, stage_key
 from repro.convserve.adapt.shadow import ShadowVerifier
 from repro.convserve.adapt.swap import hot_swap
+from repro.convserve.check.ir import verify_program
 
 IDLE = "idle"
 SHADOW = "shadow"
@@ -321,6 +321,20 @@ class AdaptController:
             self._audit("replan_noop", "measured costs reproduce live plan")
             self._cooldown_until = self._now() + cfg.cooldown_s
             return None
+        # static verification gate: a candidate that fails the IR
+        # verifier is reason-coded rejected here -- it never compiles,
+        # never receives shadow traffic
+        report = verify_program(self.spec, plan, hw=self.engine.hw)
+        if report.errors:
+            codes = ",".join(sorted({d.code for d in report.errors}))
+            self._inc("verify_rejected")
+            self._audit(
+                "replan_rejected",
+                f"candidate failed static verification [{codes}]",
+                codes=codes,
+            )
+            self._cooldown_until = self._now() + cfg.cooldown_s
+            return None
         n = len(self.runtime.pool.executors)
         self.candidate = [
             self.engine.compile(self.spec, self.weights, plan=plan, fuse=None)
@@ -364,9 +378,13 @@ class AdaptController:
         ex = self.candidate[0]
         batch, sizes = result.wave.assemble()
         before = ex.compile_count
-        t0 = time.perf_counter()
+        # the POOL's clock, not the runtime's: live waves are timed on it
+        # (`ReplicaPool._run`), so shadow/live latency pairs compare on
+        # one timeline whichever clock is injected
+        clock = self.runtime.pool.clock
+        t0 = clock.now()
         y = np.asarray(jax.block_until_ready(ex(batch, sizes)))
-        cand_s = time.perf_counter() - t0
+        cand_s = clock.now() - t0
         cand_cold = ex.compile_count > before
         outputs = result.wave.crop(self.spec, y)
         if self._shadow_timer is not None:

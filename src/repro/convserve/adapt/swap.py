@@ -17,7 +17,7 @@ Promotion is three ordered moves, each safe on its own:
 
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 import numpy as np
@@ -49,14 +49,39 @@ def hot_swap(
     scheduler=None,
     timeout_s: float = 5.0,
     invalidate: bool = True,
+    verify: bool = True,
 ) -> list:
     """Promote `candidates` into `pool` with zero downtime.
+
+    With ``verify`` (default), any candidate exposing a spec + plan is
+    first run through the static IR verifier against the hardware model
+    it was compiled for (`CompiledNet.hw`) — a failing candidate raises
+    `VerificationError` BEFORE any warmup or drain, so a corrupted plan
+    can never flip into live dispatch.  (The adapt loop verifies again
+    earlier, at candidate-planning time; this is the last line of
+    defense for hand-rolled swaps.)
 
     Warms at the scheduler's compiled shapes (skipped when no scheduler
     is passed), drains + flips dispatch atomically, then drops the old
     program's now-orphaned cache entries.  Returns the outgoing
     executors (the rollback path keeps them warm by simply swapping
     them back)."""
+    if verify:
+        from repro.convserve.check.diagnostics import VerificationError
+        from repro.convserve.check.ir import verify_program
+
+        for ex in candidates:
+            spec = getattr(ex, "spec", None)
+            plan = getattr(ex, "plan", None)
+            if spec is None or plan is None:
+                continue
+            report = verify_program(
+                spec, plan,
+                program=getattr(ex, "program", None),
+                hw=getattr(ex, "hw", None),
+            )
+            if report.errors:
+                raise VerificationError(report)
     if scheduler is not None:
         warm_executors(candidates, scheduler.compiled_sizes())
     old = pool.swap(candidates, timeout_s=timeout_s)

@@ -57,14 +57,14 @@ class KernelCache:
     def __init__(self, capacity_bytes: Optional[int] = None):
         if capacity_bytes is not None and capacity_bytes <= 0:
             raise ValueError(f"capacity_bytes must be > 0, got {capacity_bytes}")
-        self._store: "OrderedDict[Tuple, jnp.ndarray]" = OrderedDict()
+        self._store: "OrderedDict[Tuple, jnp.ndarray]" = OrderedDict()  # guarded-by: _lock
         self._lock = threading.RLock()
-        self._nbytes = 0
+        self._nbytes = 0  # guarded-by: _lock
         self.capacity_bytes = capacity_bytes
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.invalidations = 0
+        self.hits = 0  # guarded-by: _lock
+        self.misses = 0  # guarded-by: _lock
+        self.evictions = 0  # guarded-by: _lock
+        self.invalidations = 0  # guarded-by: _lock
 
     @staticmethod
     def key(net: str, plan: LayerPlan, dtype, w_fp: str) -> Tuple:
@@ -115,6 +115,7 @@ class KernelCache:
         return wt
 
     def _evict_over_capacity(self, keep: Tuple) -> None:
+        # holds-lock: _lock (callers evict inside their locked section)
         """Drop LRU entries until under budget.  The entry being served
         right now (`keep`) is never evicted -- a single transform larger
         than the whole budget still serves, it just lives alone."""

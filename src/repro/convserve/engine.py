@@ -24,11 +24,15 @@ import jax.numpy as jnp
 from repro.core import analysis
 from repro.core import tune as tune_mod
 from repro.convserve.cache import KernelCache
+from repro.convserve.check.diagnostics import CheckReport, VerificationError
 from repro.convserve.executor import NetExecutor
 from repro.convserve.graph import NetSpec
 from repro.convserve.plan import NetPlan
 from repro.convserve.planner import plan_net, upgrade_plan
 from repro.convserve.program import ExecProgram
+from repro.convserve.runtime.clock import Clock
+
+VERIFY_MODES = ("strict", "warn", "off")
 
 
 @dataclasses.dataclass
@@ -44,6 +48,10 @@ class CompiledNet:
     plan: NetPlan
     program: ExecProgram
     executor: NetExecutor
+    # the hardware model the plan was verified against and the verifier's
+    # report -- the hot-swap path re-verifies candidates through these
+    hw: Optional[analysis.HardwareModel] = None
+    report: Optional[CheckReport] = None
 
     def __call__(self, x, sizes=None):
         return self.executor(x, sizes)
@@ -86,10 +94,12 @@ class Engine:
         hw: Optional[analysis.HardwareModel] = None,
         cache: Optional[KernelCache] = None,
         dtype=jnp.float32,
+        clock: Optional[Clock] = None,
     ):
         self.hw = hw or tune_mod.default_hw()
         self.cache = cache if cache is not None else KernelCache()
         self.dtype = jnp.dtype(dtype)
+        self.clock = clock  # threaded into every executor (None = real)
         self.nets_compiled = 0
 
     def compile(
@@ -100,6 +110,7 @@ class Engine:
         input_hw: Tuple[int, int] = (64, 64),
         plan: Optional[NetPlan] = None,
         fuse: Optional[bool] = True,
+        verify: str = "strict",
         **plan_kwargs,
     ) -> CompiledNet:
         """NetSpec (+ weights) -> CompiledNet.
@@ -112,6 +123,12 @@ class Engine:
         ``fuse=None`` to take the plan's groups exactly as given -- the
         adapt loop needs this to compile a deliberately-unfused
         candidate without the upgrade path re-deriving groups for it.
+
+        `verify` runs the static IR verifier (`check.ir.verify_program`)
+        on the lowered program before any weights bind: ``"strict"``
+        (default) raises `VerificationError` on any finding, ``"warn"``
+        prints findings and serves anyway, ``"off"`` skips the pass.
+        The report rides on the returned net as `CompiledNet.report`.
         """
         if plan is None:
             plan = plan_net(
@@ -131,12 +148,27 @@ class Engine:
             plan = upgrade_plan(spec, plan, self.hw)
         else:
             plan = dataclasses.replace(plan, groups=())
+        if verify not in VERIFY_MODES:
+            raise ValueError(
+                f"verify must be one of {VERIFY_MODES}, got {verify!r}"
+            )
+        report = None
+        if verify != "off":
+            from repro.convserve.check.ir import verify_program
+
+            report = verify_program(spec, plan, hw=self.hw)
+            if report.errors and verify == "strict":
+                raise VerificationError(report)
+            if report.diagnostics and verify == "warn":
+                print(report.format())
         executor = NetExecutor(
-            spec, weights, plan, cache=self.cache, dtype=self.dtype
+            spec, weights, plan, cache=self.cache, dtype=self.dtype,
+            clock=self.clock,
         )
         self.nets_compiled += 1
         return CompiledNet(
-            spec=spec, plan=plan, program=executor.program, executor=executor
+            spec=spec, plan=plan, program=executor.program,
+            executor=executor, hw=self.hw, report=report,
         )
 
     def invalidate(self, net: Optional[str] = None) -> None:

@@ -29,7 +29,6 @@ the padded run exactly equal to running each image unpadded.
 
 from __future__ import annotations
 
-import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -38,6 +37,7 @@ import jax.numpy as jnp
 from repro.core import registry
 from repro.convserve.cache import KernelCache, weights_fingerprint
 from repro.convserve.graph import NetSpec
+from repro.convserve.runtime.clock import Clock, RealClock
 from repro.convserve.plan import NetPlan
 from repro.convserve.program import EpilogueOp, ExecProgram, Stage, lower
 
@@ -111,6 +111,7 @@ class NetExecutor:
         *,
         cache: Optional[KernelCache] = None,
         dtype=jnp.float32,
+        clock: Optional[Clock] = None,
     ):
         missing = [i for i, _ in spec.param_layers() if i not in weights]
         if missing:
@@ -122,6 +123,7 @@ class NetExecutor:
         self.plan = plan
         self.dtype = jnp.dtype(dtype)
         self.cache = cache if cache is not None else KernelCache()
+        self.clock = clock or RealClock()
         self.weights = {i: jnp.asarray(w, dtype) for i, w in weights.items()}
         # hash once here, not per request: the fingerprint keys the cache
         # to these parameter values (shared caches stay collision-free)
@@ -346,10 +348,10 @@ class NetExecutor:
             fn = jax.jit(step)
             args = (x, self.weights, wts, ext0.hs, ext0.ws)
             jax.block_until_ready(fn(*args))  # compile outside the timing
-            t0 = time.perf_counter()
+            t0 = self.clock.now()
             y, hs, ws_cols = fn(*args)
             x = jax.block_until_ready(y)
-            rows.append((stage.label, time.perf_counter() - t0))
+            rows.append((stage.label, self.clock.now() - t0))
             ext0 = _Extent(hs, ws_cols)
         want = self.spec.out_shape(b_h, b_w, b_c)
         if tuple(x.shape[1:]) != want:

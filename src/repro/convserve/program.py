@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
+from repro.convserve.check.diagnostics import program_error
 from repro.convserve.graph import LayerSpec, NetSpec
 from repro.convserve.plan import NetPlan
 
@@ -49,7 +50,9 @@ class EpilogueOp:
 
     def __post_init__(self):
         if self.kind not in EPILOGUE_KINDS:
-            raise ValueError(f"unknown epilogue kind {self.kind!r}")
+            raise program_error(
+                "CVK104", f"unknown epilogue kind {self.kind!r}"
+            )
 
     @property
     def elementwise(self) -> bool:
@@ -87,14 +90,15 @@ class Stage:
 
     def __post_init__(self):
         if not self.units:
-            raise ValueError("stage with no units")
+            raise program_error("CVK104", "stage with no units")
         # pool inside a fusion group would change the coordinate system
         # mid-chain; lowering only ever places it in the final unit
         for u in self.units[:-1]:
             if u.has_pool:
-                raise ValueError(
+                raise program_error(
+                    "CVK110",
                     f"maxpool inside fusion group (layer {u.layer}): pool "
-                    "must end a group"
+                    "must end a group",
                 )
 
     @property
@@ -157,7 +161,9 @@ def split_units(
                 EpilogueOp.from_layer(i, layer)
             )
         else:
-            raise ValueError(f"layer {i}: unknown kind {layer.kind!r}")
+            raise program_error(
+                "CVK104", f"layer {i}: unknown kind {layer.kind!r}"
+            )
     if current is not None:
         units.append((current, tuple(ops)))
     return tuple(prologue), units
@@ -172,12 +178,15 @@ def lower(spec: NetSpec, plan: NetPlan) -> ExecProgram:
     not at request time.
     """
     if plan.net != spec.name:
-        raise ValueError(f"plan is for net {plan.net!r}, spec is {spec.name!r}")
+        raise program_error(
+            "CVK101",
+            f"plan is for net {plan.net!r}, spec is {spec.name!r}",
+        )
     plans = {p.layer: p for p in plan.layers}
     for i, layer in spec.conv_layers():
         p = plans.get(i)
         if p is None:
-            raise ValueError(f"plan missing conv layer {i}")
+            raise program_error("CVK102", f"plan missing conv layer {i}")
         s = p.spec
         got = (s.c_in, s.c_out, s.k, s.pad, s.stride, s.groups)
         want = (
@@ -185,9 +194,10 @@ def lower(spec: NetSpec, plan: NetPlan) -> ExecProgram:
             layer.stride, layer.groups,
         )
         if got != want:
-            raise ValueError(
+            raise program_error(
+                "CVK103",
                 f"plan layer {i} geometry {got} != spec {want} "
-                "(stale plan file?)"
+                "(stale plan file?)",
             )
     prologue, units = split_units(spec)
     unit_pos = {conv_idx: pos for pos, (conv_idx, _) in enumerate(units)}
@@ -196,19 +206,22 @@ def lower(spec: NetSpec, plan: NetPlan) -> ExecProgram:
         positions = []
         for conv_idx in g.layers:
             if conv_idx not in unit_pos:
-                raise ValueError(
+                raise program_error(
+                    "CVK107",
                     f"fusion group {g.layers} names layer {conv_idx}, which "
-                    "is not a conv layer of the net"
+                    "is not a conv layer of the net",
                 )
             positions.append(unit_pos[conv_idx])
         if positions != list(range(positions[0], positions[0] + len(positions))):
-            raise ValueError(
-                f"fusion group {g.layers} is not a run of adjacent convs"
+            raise program_error(
+                "CVK108",
+                f"fusion group {g.layers} is not a run of adjacent convs",
             )
         for conv_idx in g.layers:
             if conv_idx in grouped:
-                raise ValueError(
-                    f"layer {conv_idx} appears in two fusion groups"
+                raise program_error(
+                    "CVK109",
+                    f"layer {conv_idx} appears in two fusion groups",
                 )
             grouped[conv_idx] = g
     stages: List[Stage] = []

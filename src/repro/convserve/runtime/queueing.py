@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List
 
 import numpy as np
 

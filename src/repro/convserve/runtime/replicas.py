@@ -13,7 +13,6 @@ clock tests use (no thread interleaving, same results, same counters).
 from __future__ import annotations
 
 import threading
-import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence
 
@@ -22,6 +21,7 @@ import dataclasses
 import jax
 import numpy as np
 
+from repro.convserve.runtime.clock import Clock, RealClock
 from repro.convserve.runtime.scheduler import Wave
 
 
@@ -49,7 +49,8 @@ class ReplicaPool:
     replica.
     """
 
-    def __init__(self, executors: Sequence, *, workers: Optional[int] = None):
+    def __init__(self, executors: Sequence, *, workers: Optional[int] = None,
+                 clock: Optional[Clock] = None):
         if not executors:
             raise ValueError("replica pool needs at least one executor")
         cache = executors[0].cache
@@ -62,9 +63,9 @@ class ReplicaPool:
                 )
             if ex.spec is not spec and ex.spec != spec:
                 raise ValueError("replicas must serve the same NetSpec")
-        self.executors = list(executors)
         self.spec = spec
         self.cache = cache
+        self.clock = clock or RealClock()
         self.workers = len(executors) if workers is None else workers
         self._pool = (
             ThreadPoolExecutor(
@@ -74,12 +75,14 @@ class ReplicaPool:
             else None
         )
         self._lock = threading.Lock()
-        self.in_flight = [0] * len(executors)
-        self.dispatched = [0] * len(executors)
+        self.executors = list(executors)  # guarded-by: _lock
+        self.in_flight = [0] * len(executors)  # guarded-by: _lock
+        self.dispatched = [0] * len(executors)  # guarded-by: _lock
 
     @classmethod
     def build(cls, engine, spec, weights, n: int, *,
-              workers: Optional[int] = None, **compile_kwargs):
+              workers: Optional[int] = None,
+              clock: Optional[Clock] = None, **compile_kwargs):
         """Compile `n` replicas of one net on one engine (hence one
         shared cache) and pool them.  The net is PLANNED once; replicas
         2..n bind the first replica's plan -- planning n times would be
@@ -92,13 +95,15 @@ class ReplicaPool:
             engine.compile(spec, weights, plan=first.plan, fuse=fuse)
             for _ in range(n - 1)
         ]
-        return cls(nets, workers=workers)
+        return cls(nets, workers=workers, clock=clock)
 
     # ------------------------------------------------------- dispatch
 
-    def _pick(self) -> int:
+    def _pick(self):
         """Least-loaded replica; dispatch count breaks ties so the
-        synchronous mode still spreads waves across replicas."""
+        synchronous mode still spreads waves across replicas.  Returns
+        ``(index, executor)`` -- the executor is read under the same
+        lock, so a concurrent `swap` cannot slip between pick and run."""
         with self._lock:
             i = min(
                 range(len(self.executors)),
@@ -106,17 +111,16 @@ class ReplicaPool:
             )
             self.in_flight[i] += 1
             self.dispatched[i] += 1
-            return i
+            return i, self.executors[i]
 
-    def _run(self, i: int, wave: Wave) -> WaveResult:
+    def _run(self, i: int, ex, wave: Wave) -> WaveResult:
         try:
             batch, sizes = wave.assemble()
-            ex = self.executors[i]
             before = ex.compile_count
-            t0 = time.perf_counter()
+            t0 = self.clock.now()
             y = ex(batch, sizes)
             y = np.asarray(jax.block_until_ready(y))
-            dt = time.perf_counter() - t0
+            dt = self.clock.now() - t0
             return WaveResult(
                 wave=wave, outputs=wave.crop(self.spec, y),
                 replica=i, compute_s=dt,
@@ -129,15 +133,15 @@ class ReplicaPool:
     def submit(self, wave: Wave) -> "Future[WaveResult]":
         """Run the wave on the least-loaded replica.  Returns a Future;
         with ``workers=0`` it is already completed (inline execution)."""
-        i = self._pick()
+        i, ex = self._pick()
         if self._pool is None:
             fut: Future = Future()
             try:
-                fut.set_result(self._run(i, wave))
+                fut.set_result(self._run(i, ex, wave))
             except BaseException as e:  # mirror executor.submit semantics
                 fut.set_exception(e)
             return fut
-        return self._pool.submit(self._run, i, wave)
+        return self._pool.submit(self._run, i, ex, wave)
 
     def run(self, wave: Wave) -> WaveResult:
         """Synchronous convenience wrapper."""
@@ -163,18 +167,18 @@ class ReplicaPool:
                 )
             if ex.spec is not self.spec and ex.spec != self.spec:
                 raise ValueError("swapped-in replicas must serve the same NetSpec")
-        deadline = time.monotonic() + timeout_s
+        deadline = self.clock.now() + timeout_s
         while True:
             with self._lock:
                 if sum(self.in_flight) == 0:
                     old = self.executors
                     self.executors = new
                     return old
-            if time.monotonic() > deadline:
+            if self.clock.now() > deadline:
                 raise TimeoutError(
                     f"in-flight waves did not drain within {timeout_s}s"
                 )
-            time.sleep(0.001)
+            self.clock.sleep(0.001)
 
     def has_capacity(self) -> bool:
         """Whether a dispatched wave would start immediately.  The
@@ -214,12 +218,13 @@ class ReplicaPool:
                 "dispatched": list(self.dispatched),
                 "in_flight": list(self.in_flight),
             }
+            executors = list(self.executors)
         return {
-            "replicas": len(self.executors),
+            "replicas": len(executors),
             "workers": self.workers,
             **per_replica,
             "compiled_programs": sum(
-                ex.compile_count for ex in self.executors
+                ex.compile_count for ex in executors
             ),
             "cache": self.cache.stats(),
         }

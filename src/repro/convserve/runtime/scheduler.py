@@ -159,21 +159,23 @@ class WaveScheduler:
         # concurrency (an unguarded depth check would race into
         # BucketQueue's OverflowError).
         self._lock = threading.RLock()
-        self._queues: Dict[int, BucketQueue] = {
+        self._queues: Dict[int, BucketQueue] = {  # guarded-by: _lock
             b: BucketQueue(b, cfg.queue_depth) for b in sorted(cfg.buckets)
         }
         self._order = sorted(cfg.buckets)
-        self._rr = 0  # index into _order of the last bucket served
-        self._sizes: Dict[int, Set[int]] = {b: set() for b in self._order}
-        self.service_est: Dict[int, float] = {
+        self._rr = 0  # guarded-by: _lock (index of last bucket served)
+        self._sizes: Dict[int, Set[int]] = {  # guarded-by: _lock
+            b: set() for b in self._order
+        }
+        self.service_est: Dict[int, float] = {  # guarded-by: _lock
             b: cfg.service_est_s for b in self._order
         }
-        self.admitted = 0
-        self.rejected: Dict[str, int] = {}
-        self.cleared = 0
-        self.waves = 0
-        self.partial_waves = 0
-        self.waves_by_reason: Dict[str, int] = {}
+        self.admitted = 0  # guarded-by: _lock
+        self.rejected: Dict[str, int] = {}  # guarded-by: _lock
+        self.cleared = 0  # guarded-by: _lock
+        self.waves = 0  # guarded-by: _lock
+        self.partial_waves = 0  # guarded-by: _lock
+        self.waves_by_reason: Dict[str, int] = {}  # guarded-by: _lock
 
     # ------------------------------------------------------- admission
 
@@ -316,6 +318,7 @@ class WaveScheduler:
         return p
 
     def _form(self, bucket: int, reason: str, now: float) -> Wave:
+        # holds-lock: _lock (only called from poll()'s locked section)
         reqs = self._queues[bucket].pop(self.cfg.max_batch)
         size = self._wave_size(bucket, len(reqs))
         self._sizes[bucket].add(size)

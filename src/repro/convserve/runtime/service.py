@@ -60,11 +60,11 @@ class ServeRuntime:
         self._lock = threading.Lock()
         self._done_cv = threading.Condition(self._lock)
         self._wake = threading.Event()  # set by submit(): interrupts idle
-        self._outstanding = 0
-        self._next_rid = 0
-        self.results: Dict[int, np.ndarray] = {}
-        self.rejections: Dict[int, Rejection] = {}
-        self.errors: List[BaseException] = []
+        self._outstanding = 0  # guarded-by: _lock
+        self._next_rid = 0  # guarded-by: _lock
+        self.results: Dict[int, np.ndarray] = {}  # guarded-by: _lock
+        self.rejections: Dict[int, Rejection] = {}  # guarded-by: _lock
+        self.errors: List[BaseException] = []  # guarded-by: _lock
         self._wave_observers: List = []
 
     def add_wave_observer(self, fn) -> None:

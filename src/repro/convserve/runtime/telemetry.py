@@ -85,9 +85,9 @@ class Telemetry:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._counters: Dict[str, int] = {}
-        self._gauges: Dict[str, float] = {}
-        self._hists: Dict[str, Histogram] = {}
+        self._counters: Dict[str, int] = {}  # guarded-by: _lock
+        self._gauges: Dict[str, float] = {}  # guarded-by: _lock
+        self._hists: Dict[str, Histogram] = {}  # guarded-by: _lock
 
     def inc(self, name: str, n: int = 1) -> None:
         with self._lock:

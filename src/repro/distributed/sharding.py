@@ -19,7 +19,7 @@ the flash-decoding split-K pattern).
 from __future__ import annotations
 
 import re
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np

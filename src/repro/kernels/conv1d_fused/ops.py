@@ -10,7 +10,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import analysis, registry
+from repro.core import registry
 from repro.kernels.conv1d_fused.kernel import conv1d_fused_call
 
 

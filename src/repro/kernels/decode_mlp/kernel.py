@@ -18,7 +18,6 @@ elimination of the U and M round-trips.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import SHAPES, cell_is_defined, get_arch, list_archs
 from repro.distributed import sharding as shd
@@ -110,9 +109,9 @@ def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool):
             )
             mf = model_flops_infer(cfg, shape, decode=True)
 
-        t0 = time.time()
+        t0 = time.monotonic()
         compiled = lowered.compile()
-        compile_s = time.time() - t0
+        compile_s = time.monotonic() - t0
 
     cost = compiled.cost_analysis() or {}
     mem = compiled.memory_analysis()

@@ -30,23 +30,8 @@ def main():
     else:
         runtime_flags.set_baseline()
 
-    from repro.launch import dryrun
     from repro.launch.hlo_analysis import hlo_top_offenders
-
-    # reuse the dry-run lowering, but keep the compiled text
-    import repro.launch.dryrun as dr
-
-    rec_holder = {}
-    orig = dr.lower_cell
-
-    cfg_hlo = {}
-
-    def patched(arch, shape, *, multi_pod):
-        rec = orig(arch, shape, multi_pod=multi_pod)
-        return rec
-
-    # simplest: call internals directly
-    from repro.launch.dryrun import lower_cell  # noqa
+    from repro.launch.dryrun import lower_cell
 
     # re-run lowering manually to keep hlo text
     import json

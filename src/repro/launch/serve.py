@@ -42,9 +42,9 @@ def main(argv=None):
         )
         for i in range(args.requests)
     ]
-    t0 = time.time()
+    t0 = time.monotonic()
     results = eng.run(reqs, seed=args.seed)
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     n_tok = sum(len(v) for v in results.values())
     print(f"[serve] {len(reqs)} requests, {n_tok} tokens in {dt:.1f}s "
           f"({n_tok / dt:.1f} tok/s, batch={args.max_batch})")

@@ -8,7 +8,7 @@ directly.  Shardings attach via the rule engine in repro.distributed.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,6 @@ form used by the dry-run and the CPU tests.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ control flow is exercised with injected failures (tests/test_fault.py).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, List, Optional
 
 

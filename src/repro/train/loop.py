@@ -73,10 +73,10 @@ def train_loop(
                 batch = next_batch(step)
                 if injector is not None:
                     injector.check(step)
-                t0 = time.time()
+                t0 = time.monotonic()
                 state, metrics = train_step(state, batch)
                 jax.block_until_ready(metrics["loss"])
-                dt = time.time() - t0
+                dt = time.monotonic() - t0
                 alarm = watchdog.observe(step, dt)
                 if alarm:
                     log(f"[straggler] step {step}: {dt:.3f}s vs p50 "

@@ -8,6 +8,8 @@ when the real package is present these are the real objects, otherwise
 degrade to inert placeholders.
 """
 
+__all__ = ["given", "settings", "st", "HAS_HYPOTHESIS"]
+
 try:
     from hypothesis import given, settings, strategies as st
 

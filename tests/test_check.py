@@ -1,0 +1,638 @@
+"""convcheck: the static verifier must pass every benched config clean,
+and every seeded mutation must fail with its documented CVK code.  Plus
+the integration points: `Engine.compile(verify=)`, the adapt loop's
+reason-coded candidate rejection (no shadow traffic for a corrupt
+plan), `hot_swap`'s last-line-of-defense gate, and the injected-clock
+routing the clock rules enforce."""
+
+import dataclasses
+import json
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.configs import convnets
+from repro.convserve import (
+    AdaptConfig,
+    AdaptController,
+    Engine,
+    hot_swap,
+    init_weights,
+    planner,
+)
+from repro.convserve.check.diagnostics import (
+    CheckReport,
+    Diagnostic,
+    ProgramError,
+    VerificationError,
+    program_error,
+)
+from repro.convserve.check.__main__ import BENCHED_CONFIGS, main as check_main
+from repro.convserve.check.ir import verify_compiled, verify_program
+from repro.convserve.check.locks import analyze_locks
+from repro.convserve.check.rules import analyze_rules
+from repro.convserve.graph import NetSpec, conv, maxpool, relu
+from repro.convserve.plan import FusionGroup
+from repro.convserve.planner import plan_net
+from repro.convserve.program import lower
+from repro.convserve.runtime import (
+    ReplicaPool,
+    RuntimeConfig,
+    ServeRuntime,
+    SimClock,
+)
+from repro.core import analysis
+
+BIG_HW = analysis.HardwareModel(
+    name="big", peak_flops=1e12, dram_bw=1e11, fast_shared_bw=5e11,
+    fast_shared_bytes=1 << 30, private_bytes=1 << 24,
+)
+
+SPEC = convnets.tiny_testnet(4)
+
+
+@pytest.fixture(scope="module")
+def tiny_plan():
+    return plan_net(SPEC, 64, 64, hw=BIG_HW)
+
+
+def _codes(report):
+    return {d.code for d in report.diagnostics}
+
+
+# ------------------------------------------------- diagnostics core
+
+
+def test_diagnostic_format_and_hint_autofill():
+    d = Diagnostic(code="CVK111", message="slab too big", loc="net/fuse")
+    assert d.severity == "error"
+    assert d.hint  # auto-filled from HINTS
+    s = d.format()
+    assert "CVK111" in s and "net/fuse" in s and "slab too big" in s
+
+    rep = CheckReport(analyzer="ir")
+    assert rep.ok and not rep.errors
+    rep.add(d)
+    assert not rep.ok and rep.has("CVK111")
+    assert list(rep.codes()) == ["CVK111"]
+    doc = rep.to_dict()
+    assert doc["analyzer"] == "ir" and len(doc["diagnostics"]) == 1
+    json.loads(rep.to_json())  # round-trips
+
+
+def test_program_error_is_plain_valueerror():
+    e = program_error("CVK101", "plan is for net 'a', spec is 'b'")
+    assert isinstance(e, ProgramError) and isinstance(e, ValueError)
+    assert str(e) == "plan is for net 'a', spec is 'b'"  # message unprefixed
+    assert e.code == "CVK101" and e.diagnostic.code == "CVK101"
+
+
+def test_verification_error_carries_codes():
+    rep = CheckReport(analyzer="ir")
+    rep.add(Diagnostic(code="CVK105", message="dtype break", loc="x"))
+    err = VerificationError(rep)
+    assert list(err.codes) == ["CVK105"]
+    assert "CVK105" in str(err)
+
+
+# ------------------------------------------- IR: clean on benched configs
+
+
+def test_benched_configs_verify_clean():
+    for name in BENCHED_CONFIGS:
+        spec = getattr(convnets, name)()
+        plan = plan_net(spec, 64, 64, hw=BIG_HW)
+        rep = verify_program(spec, plan, hw=BIG_HW)
+        assert rep.ok, f"{name}: {rep.format()}"
+
+
+# --------------------------------------------- IR: seeded plan mutations
+#
+# Each mutation corrupts one invariant and must surface exactly the
+# documented code (property-style: plan from the real planner, one
+# targeted edit, one expected diagnostic).
+
+
+def test_mutation_oversized_tile_rows_is_cvk111(tiny_plan):
+    assert tiny_plan.groups, "seed plan must be fused"
+    g0 = tiny_plan.groups[0]
+    bad = dataclasses.replace(
+        tiny_plan,
+        groups=(dataclasses.replace(g0, tile_rows=10_000_000),)
+        + tiny_plan.groups[1:],
+    )
+    rep = verify_program(SPEC, bad, hw=BIG_HW)
+    assert rep.has("CVK111"), rep.format()
+
+
+def test_mutation_dtype_break_is_cvk105(tiny_plan):
+    l0 = tiny_plan.layers[0]
+    bad = dataclasses.replace(
+        tiny_plan,
+        layers=(
+            dataclasses.replace(
+                l0, spec=dataclasses.replace(l0.spec, dtype="bfloat16")
+            ),
+        )
+        + tiny_plan.layers[1:],
+    )
+    rep = verify_program(SPEC, bad, hw=BIG_HW)
+    assert rep.has("CVK105"), rep.format()
+
+
+def test_mutation_dropped_weight_param_is_cvk114(tiny_plan):
+    from repro.core import registry
+
+    idx, dropped = next(
+        (i, registry.get(p.algo).weight_params[0])
+        for i, p in enumerate(tiny_plan.layers)
+        if registry.get(p.algo).consumes_wt
+        and registry.get(p.algo).weight_params
+    )
+    p = tiny_plan.layers[idx]
+    params = {k: v for k, v in p.params.items() if k != dropped}
+    bad = dataclasses.replace(
+        tiny_plan,
+        layers=tiny_plan.layers[:idx]
+        + (dataclasses.replace(p, params=params),)
+        + tiny_plan.layers[idx + 1:],
+    )
+    rep = verify_program(SPEC, bad, hw=BIG_HW)
+    assert rep.has("CVK114"), rep.format()  # under-keyed cache entry
+
+
+def test_mutation_renamed_net_is_cvk101(tiny_plan):
+    bad = dataclasses.replace(tiny_plan, net="somebody-else")
+    rep = verify_program(SPEC, bad, hw=BIG_HW)
+    assert rep.has("CVK101"), rep.format()
+
+
+def test_mutation_wrong_input_hw_breaks_shape_chain(tiny_plan):
+    # tiny_testnet pools; 63 is neither the planned extent nor divisible
+    bad = dataclasses.replace(tiny_plan, input_hw=(63, 63))
+    rep = verify_program(SPEC, bad, hw=BIG_HW)
+    assert rep.errors and (rep.has("CVK116") or rep.has("CVK113")), (
+        rep.format()
+    )
+
+
+def test_mutation_pool_mid_group_is_cvk110():
+    spec = NetSpec(
+        name="pool-mid",
+        layers=(conv(4, 8), relu(), maxpool(2), conv(8, 8), relu()),
+    )
+    plan = plan_net(spec, 16, 16, hw=BIG_HW)
+    # force-fuse across the pool: layers 0 and 3 are adjacent convs, but
+    # layer 0's epilogue holds the maxpool -- lower() must refuse
+    bad = dataclasses.replace(plan, groups=(FusionGroup(layers=(0, 3)),))
+    rep = verify_program(spec, bad, hw=BIG_HW)
+    assert rep.has("CVK110"), rep.format()
+
+
+def test_mutation_duplicate_units_collide_cache_keys(tiny_plan):
+    prog = lower(SPEC, tiny_plan)
+    dup = dataclasses.replace(
+        prog, stages=(prog.stages[0], prog.stages[0]) + prog.stages[1:]
+    )
+    rep = verify_program(SPEC, tiny_plan, program=dup, hw=BIG_HW)
+    assert rep.has("CVK114"), rep.format()
+
+
+def test_mutation_phantom_rows_is_cvk116(tiny_plan):
+    prog = lower(SPEC, tiny_plan)
+    fi = next(i for i, st in enumerate(prog.stages) if st.fused)
+    st = prog.stages[fi]
+    u0 = st.units[0]
+    # shrink the first member's true extent under the recursion's feet:
+    # the stage's output rows now want input rows past h + pad
+    shrunk = dataclasses.replace(
+        u0, plan=dataclasses.replace(
+            u0.plan, spec=dataclasses.replace(u0.plan.spec, h=2)
+        )
+    )
+    bad_stage = dataclasses.replace(st, units=(shrunk,) + st.units[1:])
+    bad = dataclasses.replace(
+        prog,
+        stages=prog.stages[:fi] + (bad_stage,) + prog.stages[fi + 1:],
+    )
+    rep = verify_program(SPEC, tiny_plan, program=bad, hw=BIG_HW)
+    assert rep.has("CVK116"), rep.format()
+
+
+# ------------------------------------------------ Engine.compile(verify=)
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return init_weights(SPEC, seed=5)
+
+
+def _corrupt(plan):
+    g0 = plan.groups[0]
+    return dataclasses.replace(
+        plan,
+        groups=(dataclasses.replace(g0, tile_rows=10_000_000),)
+        + plan.groups[1:],
+    )
+
+
+def test_compile_strict_rejects_corrupt_plan(tiny_plan, weights):
+    engine = Engine(hw=BIG_HW)
+    with pytest.raises(VerificationError) as ei:
+        engine.compile(SPEC, weights, plan=_corrupt(tiny_plan), fuse=None)
+    assert "CVK111" in ei.value.codes
+
+
+def test_compile_verify_off_and_warn_still_compile(tiny_plan, weights,
+                                                   capsys):
+    engine = Engine(hw=BIG_HW)
+    bad = _corrupt(tiny_plan)
+    net = engine.compile(SPEC, weights, plan=bad, fuse=None, verify="off")
+    assert net.report is None  # skipped entirely
+
+    net = engine.compile(SPEC, weights, plan=bad, fuse=None, verify="warn")
+    assert net.report is not None and net.report.has("CVK111")
+    assert "CVK111" in capsys.readouterr().out
+
+
+def test_compile_strict_clean_plan_attaches_report(weights):
+    engine = Engine(hw=BIG_HW)
+    net = engine.compile(SPEC, weights, input_hw=(16, 16))
+    assert net.report is not None and net.report.ok
+    assert net.hw is BIG_HW
+    assert verify_compiled(net).ok
+
+
+def test_compile_rejects_unknown_verify_mode(weights):
+    with pytest.raises(ValueError, match="verify"):
+        Engine(hw=BIG_HW).compile(
+            SPEC, weights, input_hw=(16, 16), verify="sometimes"
+        )
+
+
+# --------------------------------------------------- hot_swap's gate
+
+
+def test_hot_swap_refuses_verification_failing_candidate(weights):
+    engine = Engine(hw=BIG_HW)
+    pool = ReplicaPool.build(
+        engine, SPEC, weights, n=1, workers=0, input_hw=(16, 16)
+    )
+    live = pool.executors[0]
+    cand = engine.compile(
+        SPEC, weights, plan=_corrupt(live.plan), fuse=None, verify="off"
+    )
+    with pytest.raises(VerificationError) as ei:
+        hot_swap(pool, [cand])
+    assert "CVK111" in ei.value.codes
+    assert pool.executors[0] is live  # dispatch never flipped
+
+    # and the gate is the only thing refusing: verify=False swaps
+    old = hot_swap(pool, [cand], verify=False)
+    assert old == [live]
+    hot_swap(pool, old, verify=False)  # rollback
+
+
+# ------------------------------------- adapt: reason-coded rejection
+
+
+def test_adapt_rejects_corrupt_candidate_before_shadow(monkeypatch):
+    """A replan candidate that fails static verification must be
+    reason-coded into the audit log and counters, cool the loop down,
+    and never compile or receive shadow traffic."""
+    ws = init_weights(SPEC, seed=5)
+    engine = Engine(hw=BIG_HW)
+    pool = ReplicaPool.build(
+        engine, SPEC, ws, n=1, workers=0, input_hw=(16, 16)
+    )
+    rt = ServeRuntime(
+        pool,
+        RuntimeConfig(max_batch=2, buckets=(16,), slo_s=1.0,
+                      service_est_s=1e-4),
+        clock=SimClock(),
+    )
+
+    def probe(net, bucket, batch):
+        preds = planner.predict_stage_times(net.program, engine.hw)
+        return [
+            (label, pred * (10.0 if stage.fused else 1.0))
+            for stage, (label, pred) in zip(net.program.stages, preds)
+        ]
+
+    ac = AdaptController(
+        rt, engine, SPEC, ws,
+        AdaptConfig(divergence_ratio=2.0, shadow_fraction=1.0,
+                    shadow_min_waves=2, cooldown_s=0.5),
+        probe=probe,
+    )
+
+    real_plan_net = planner.plan_net
+
+    def corrupting_plan_net(*a, **kw):
+        # break the dtype chain mid-net: layer 0 claims bfloat16 in a
+        # float32 plan -- the measured-cost candidate drops the fusion
+        # groups, so the corruption must not rely on one existing
+        plan = real_plan_net(*a, **kw)
+        l0 = plan.layers[0]
+        return dataclasses.replace(
+            plan,
+            layers=(
+                dataclasses.replace(
+                    l0, spec=dataclasses.replace(l0.spec, dtype="bfloat16")
+                ),
+            )
+            + plan.layers[1:],
+        )
+
+    monkeypatch.setattr(planner, "plan_net", corrupting_plan_net)
+
+    ac.measure()
+    ac.probe_alternatives()
+    ac.check()
+
+    events = [a["event"] for a in ac.audit]
+    assert events == ["replan", "replan_rejected"]
+    rejected = ac.audit[-1]
+    assert "CVK105" in rejected["codes"]  # reason-coded
+    assert rt.telemetry.counter("adapt.verify_rejected") == 1
+    assert rt.telemetry.counter("adapt.shadows_run") == 0
+    assert ac.state == "idle" and ac.candidate is None
+    assert ac._cooldown_until > rt.clock.now()  # loop backed off
+
+
+# --------------------------------------------------- clock routing
+
+
+def test_engine_clock_threads_into_executors(weights):
+    clk = SimClock()
+    engine = Engine(hw=BIG_HW, clock=clk)
+    net = engine.compile(SPEC, weights, input_hw=(16, 16))
+    assert net.executor.clock is clk
+
+    pool = ReplicaPool.build(
+        engine, SPEC, weights, n=1, workers=0, input_hw=(16, 16), clock=clk
+    )
+    assert pool.clock is clk
+    assert pool.executors[0].executor.clock is clk
+
+
+def test_profile_stages_reads_injected_clock(weights):
+    clk = SimClock()
+    engine = Engine(hw=BIG_HW, clock=clk)
+    net = engine.compile(SPEC, weights, input_hw=(16, 16))
+    x = np.zeros((1, 16, 16, 4), np.float32)
+    rows = net.profile_stages(x)
+    assert rows and all(dt == 0.0 for _, dt in rows)  # sim time stood still
+
+
+# --------------------------------------------- locks: fixture tree
+
+
+def _write(tmp_path, rel, src):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(src))
+    return p
+
+
+def test_locks_flags_mutation_outside_lock(tmp_path):
+    f = _write(tmp_path, "box.py", """\
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.items = []  # guarded-by: _lock
+
+            def good(self):
+                with self._lock:
+                    self.items.append(1)
+
+            def bad(self):
+                self.items.append(2)
+
+            def also_bad(self):
+                self.items = []
+        """)
+    rep = analyze_locks([f])
+    cvk201 = [d for d in rep.errors if d.code == "CVK201"]
+    assert len(cvk201) == 2
+    assert all("Box.items" in d.message for d in cvk201)
+    assert not rep.has("CVK203")  # annotated class, no warning
+
+
+def test_locks_honors_waivers_and_condition_alias(tmp_path):
+    f = _write(tmp_path, "waived.py", """\
+        import threading
+
+        class Waived:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cv = threading.Condition(self._lock)
+                self.n = 0  # guarded-by: _lock
+
+            def _bump_locked(self):
+                self.n += 1
+
+            def helper(self):
+                # holds-lock: _lock
+                self.n += 1
+
+            def via_cv(self):
+                with self._cv:
+                    self.n += 1
+        """)
+    rep = analyze_locks([f])
+    assert rep.ok, rep.format()
+
+
+def test_locks_rejects_lock_order_cycle(tmp_path):
+    f = _write(tmp_path, "cycle.py", """\
+        import threading
+
+        class Tangle:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+                self.x = 0  # guarded-by: _a
+
+            def one(self):
+                with self._a:
+                    with self._b:
+                        self.x = 1
+
+            def two(self):
+                with self._b:
+                    with self._a:
+                        self.x = 2
+        """)
+    rep = analyze_locks([f])
+    assert rep.has("CVK202"), rep.format()
+    cyc = next(d for d in rep.errors if d.code == "CVK202")
+    assert "Tangle._a" in cyc.message and "Tangle._b" in cyc.message
+
+
+def test_locks_warns_on_unannotated_lock_owner(tmp_path):
+    f = _write(tmp_path, "naked.py", """\
+        import threading
+
+        class Naked:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.x = 0
+        """)
+    rep = analyze_locks([f])
+    assert not rep.errors
+    assert rep.has("CVK203")
+
+
+def test_locks_warns_on_unparseable_file(tmp_path):
+    f = _write(tmp_path, "broken.py", "def nope(:\n")
+    rep = analyze_locks([f])
+    assert rep.has("CVK203") and not rep.errors
+
+
+def test_committed_tree_has_clean_lock_discipline():
+    import repro.convserve as cs
+    from pathlib import Path
+
+    root = Path(cs.__file__).parent
+    rep = analyze_locks(
+        [root / "runtime", root / "adapt", root / "cache.py"]
+    )
+    assert not rep.errors, rep.format()
+
+
+# --------------------------------------------- rules: fixture tree
+
+
+def test_rules_ban_direct_time_reads(tmp_path):
+    _write(tmp_path, "leaky.py", """\
+        import time
+
+        def stamp():
+            return time.time()
+
+        def measure():
+            return time.perf_counter()
+        """)
+    _write(tmp_path, "fromimp.py", """\
+        from time import perf_counter as pc
+
+        def measure():
+            return pc()
+        """)
+    # the clock itself is the allowlisted time source
+    _write(tmp_path, "runtime/clock.py", """\
+        import time
+
+        def now():
+            return time.perf_counter()
+        """)
+    rep = analyze_rules([tmp_path])
+    codes = [d.code for d in rep.errors]
+    assert codes.count("CVK301") == 1
+    assert codes.count("CVK302") == 2  # leaky.py + fromimp.py, not clock.py
+    assert all("clock.py" not in d.loc for d in rep.errors)
+
+
+def test_rules_ban_monotonic_and_sleep_only_inside_convserve(tmp_path):
+    _write(tmp_path, "convserve/waiter.py", """\
+        import time
+
+        def wait():
+            time.sleep(0.1)
+            return time.monotonic()
+        """)
+    _write(tmp_path, "offline.py", """\
+        import time
+
+        def wait():
+            time.sleep(0.1)
+            return time.monotonic()
+        """)
+    rep = analyze_rules([tmp_path])
+    cvk303 = [d for d in rep.errors if d.code == "CVK303"]
+    assert len(cvk303) == 2
+    assert all("convserve" in d.loc for d in cvk303)
+
+
+def test_rules_supports_before_execute(tmp_path):
+    f = _write(tmp_path, "algos.py", """\
+        class Algorithm:
+            pass
+
+        class Good(Algorithm):
+            def supports(self, spec):
+                return True
+
+            def execute(self, spec, x, w):
+                return x
+
+        class InheritsSupports(Good):
+            def execute(self, spec, x, w):
+                return x
+
+        class OutOfOrder(Algorithm):
+            def execute(self, spec, x, w):
+                return x
+
+            def supports(self, spec):
+                return True
+
+        class NoSupportsAnywhere(Algorithm):
+            def execute(self, spec, x, w):
+                return x
+        """)
+    rep = analyze_rules([f])
+    cvk310 = [d for d in rep.errors if d.code == "CVK310"]
+    assert len(cvk310) == 2
+    msgs = " | ".join(d.message for d in cvk310)
+    assert "OutOfOrder" in msgs and "NoSupportsAnywhere" in msgs
+    assert "Good" not in msgs.replace("NoSupportsAnywhere", "")
+
+
+def test_rules_wt_to_non_consuming_algo(tmp_path):
+    f = _write(tmp_path, "calls.py", """\
+        from repro.core.registry import conv2d
+
+        def run(x, w, wt):
+            a = conv2d(x, w, algo="direct", wt=wt)      # flagged
+            b = conv2d(x, w, algo="l3_fused", wt=wt)    # consumes wt
+            c = conv2d(x, w, algo="auto", wt=wt)        # resolver's call
+            d = conv2d(x, w, algo="direct", wt=None)    # explicit no-op
+            return a, b, c, d
+        """)
+    rep = analyze_rules([f])
+    cvk311 = [d for d in rep.errors if d.code == "CVK311"]
+    assert len(cvk311) == 1
+    assert "direct" in cvk311[0].message
+
+
+def test_rules_warn_on_unparseable(tmp_path):
+    f = _write(tmp_path, "broken.py", "class (:\n")
+    rep = analyze_rules([f])
+    assert rep.has("CVK304") and not rep.errors
+
+
+# ------------------------------------------------------- CLI / CI job
+
+
+def test_cli_strict_is_clean_on_committed_tree(tmp_path, capsys):
+    """The CI acceptance gate: `python -m repro.convserve.check --strict`
+    exits 0 on the committed tree and writes the baseline artifact."""
+    baseline = tmp_path / "convcheck.json"
+    rc = check_main(["--strict", "--baseline", str(baseline)])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    doc = json.loads(baseline.read_text())
+    assert doc["errors"] == 0 and doc["warnings"] == 0
+    assert {r["analyzer"] for r in doc["reports"]} == {"ir", "locks", "rules"}
+
+
+def test_cli_only_selects_one_analyzer(capsys):
+    rc = check_main(["--only", "locks"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "1 analyzer(s)" in out

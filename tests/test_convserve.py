@@ -3,7 +3,6 @@ numerical agreement with the direct oracle, and the serving front-end."""
 
 import json
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -20,10 +19,8 @@ from repro.convserve import (
     NetSpec,
     conv,
     init_weights,
-    maxpool,
     plan_layer,
     plan_net,
-    relu,
     run_direct,
 )
 from repro.core import analysis

@@ -1,6 +1,5 @@
 """Shared-buffer planner: the paper's S4.2 aliasing invariant + savings."""
 
-import pytest
 from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core.sharedbuf import SharedBufferPlan, max_r_for_budget
