@@ -1,0 +1,153 @@
+"""Serving-performance regression gate against a committed baseline.
+
+Compares a fresh ``BENCH_serve_runtime.json`` (produced by
+``serve_runtime_bench``) to the reference numbers committed under
+``benchmarks/baselines/``: per net, the fused path's throughput must
+not fall below ``(1 - tol) x`` baseline and its p95 end-to-end latency
+must not rise above ``(1 + tol) x`` baseline.  The band is wide by
+design -- CI machines vary run to run -- so a trip means a real
+regression (an accidental cold-compile in the serving path, a cache
+that stopped reusing transforms), not noise.
+
+    PYTHONPATH=src python -m benchmarks.serve_runtime_bench --smoke
+    PYTHONPATH=src python -m benchmarks.check_regression --smoke
+
+``--smoke`` checks the smoke-mode baseline (the CI pairing); without it
+the full-mode baseline is checked when one is committed, otherwise the
+gate reports nothing-to-check and passes.  ``--update`` rewrites the
+baseline from the current bench artifact (commit the result when a
+deliberate change moves the reference).  Exit status 1 on regression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+BENCH_PATH = pathlib.Path("BENCH_serve_runtime.json")
+BASELINE_DIR = pathlib.Path(__file__).resolve().parent / "baselines"
+
+# wide bands: the gate is for order-of-magnitude breakage, not jitter
+DEFAULT_THROUGHPUT_TOL = 0.6  # fail below 40% of baseline throughput
+DEFAULT_P95_TOL = 2.0  # fail above 3x baseline p95
+
+
+def baseline_path(smoke: bool) -> pathlib.Path:
+    return BASELINE_DIR / (
+        "serve_runtime_smoke.json" if smoke else "serve_runtime_full.json"
+    )
+
+
+def extract(bench: dict) -> dict:
+    """The comparable core of a bench artifact: per net, the fused
+    path's throughput and p95 e2e."""
+    out = {}
+    for net, entry in bench.get("nets", {}).items():
+        fused = entry.get("fused")
+        if not fused:
+            continue
+        out[net] = {
+            "throughput_rps": fused["throughput_rps"],
+            "p95_e2e_s": fused["e2e"]["p95_s"],
+        }
+    return out
+
+
+def compare(current: dict, baseline: dict, *, tput_tol: float,
+            p95_tol: float) -> list:
+    """Regression findings (empty = pass).  Nets present only on one
+    side are reported as findings too: a silently vanished net would
+    otherwise make the gate vacuous."""
+    findings = []
+    for net, base in baseline.items():
+        cur = current.get(net)
+        if cur is None:
+            findings.append(f"{net}: in baseline but missing from bench")
+            continue
+        t_floor = base["throughput_rps"] * (1.0 - tput_tol)
+        if cur["throughput_rps"] < t_floor:
+            findings.append(
+                f"{net}: fused throughput {cur['throughput_rps']:.1f} rps "
+                f"< floor {t_floor:.1f} (baseline "
+                f"{base['throughput_rps']:.1f}, tol {tput_tol:.0%})"
+            )
+        p_ceil = base["p95_e2e_s"] * (1.0 + p95_tol)
+        if cur["p95_e2e_s"] > p_ceil:
+            findings.append(
+                f"{net}: fused p95 e2e {cur['p95_e2e_s'] * 1e3:.2f} ms "
+                f"> ceiling {p_ceil * 1e3:.2f} (baseline "
+                f"{base['p95_e2e_s'] * 1e3:.2f}, tol {p95_tol:.0%})"
+            )
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="check against the smoke-mode baseline (CI)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current artifact")
+    ap.add_argument("--bench", default=None, metavar="PATH",
+                    help="bench artifact (default BENCH_serve_runtime.json)")
+    ap.add_argument("--tol-throughput", type=float,
+                    default=DEFAULT_THROUGHPUT_TOL)
+    ap.add_argument("--tol-p95", type=float, default=DEFAULT_P95_TOL)
+    args = ap.parse_args(argv)
+
+    bench_path = pathlib.Path(args.bench) if args.bench else BENCH_PATH
+    if not bench_path.exists():
+        print(f"check_regression: no bench artifact at {bench_path} -- "
+              f"run serve_runtime_bench first")
+        return 1
+    bench = json.loads(bench_path.read_text())
+    if bool(bench.get("smoke")) != args.smoke:
+        print(
+            f"check_regression: {bench_path} is "
+            f"{'a smoke' if bench.get('smoke') else 'a full'} artifact but "
+            f"the gate was asked to check "
+            f"{'smoke' if args.smoke else 'full'} mode"
+        )
+        return 1
+    current = extract(bench)
+
+    path = baseline_path(args.smoke)
+    if args.update:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(
+            {"bench": "serve_runtime", "smoke": args.smoke,
+             "nets": current},
+            indent=1, sort_keys=True,
+        ) + "\n")
+        print(f"check_regression: baseline updated at {path}")
+        return 0
+    if not path.exists():
+        print(f"check_regression: no committed baseline at {path} -- "
+              f"nothing to check")
+        return 0
+    baseline = json.loads(path.read_text())
+
+    findings = compare(
+        current, baseline["nets"],
+        tput_tol=args.tol_throughput, p95_tol=args.tol_p95,
+    )
+    for net in sorted(baseline["nets"]):
+        base, cur = baseline["nets"][net], current.get(net, {})
+        print(
+            f"check_regression: {net}: throughput "
+            f"{cur.get('throughput_rps', float('nan')):.1f} rps "
+            f"(baseline {base['throughput_rps']:.1f}), p95 "
+            f"{cur.get('p95_e2e_s', float('nan')) * 1e3:.2f} ms "
+            f"(baseline {base['p95_e2e_s'] * 1e3:.2f})"
+        )
+    if findings:
+        for f in findings:
+            print(f"REGRESSION: {f}")
+        return 1
+    print("check_regression: within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

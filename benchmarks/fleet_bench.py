@@ -1,0 +1,418 @@
+"""Fleet serving benchmark: a simulated million-user day + scale-out.
+
+The serve-runtime bench measures one pool on a real clock for a few
+seconds; this one measures the *fleet* on a simulated clock for a whole
+day.  Requests follow a diurnal curve (quiet night, busy noon) with
+flash-crowd bursts superimposed; the elastic pool grows and shrinks on
+the autoscaler's telemetry signals; injected faults crash a replica,
+slow another, and corrupt the shared kernel cache mid-trace.  Outputs
+are computed by the real executors while a deterministic service model
+charges simulated replica time, so the day runs in minutes of wall time
+with exact latency stamps.  Everything lands in ``BENCH_fleet.json``:
+
+  * the day: served/lost/rejected accounting, SLO attainment, latency
+    percentiles, autoscaler events, fault + repair counters;
+  * the scale-out curve: throughput and p95 vs fleet size N under a
+    saturating trace (the headline: T(4) >= 2.5 x T(1));
+  * exactness: sharded N-replica serving is bit-identical to the
+    single-replica oracle on the same trace, ragged waves included.
+
+    PYTHONPATH=src python -m benchmarks.fleet_bench [--smoke]
+
+``--smoke`` (the CI path) compresses the day to a minute of simulated
+time at reduced request count, keeps the crash fault enabled, and
+asserts the invariants: exact accounting (admitted == served + lost,
+total == admitted + rejected), reason-coded losses only, bit-exact
+outputs vs the oracle, at least one autoscale-up, and the scale-out
+floor.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.configs.convnets import tiny_testnet
+from repro.convserve import Engine, init_weights
+from repro.convserve.fleet import (
+    AutoscalerConfig,
+    ElasticPool,
+    FixedServiceModel,
+    FleetRuntime,
+    LOSS_REASONS,
+)
+from repro.convserve.runtime import (
+    RuntimeConfig,
+    SimClock,
+    burst_trace,
+    diurnal_trace,
+    make_images,
+    merge_traces,
+    poisson_trace,
+)
+from repro.core import analysis
+from repro.runtime.fault import FaultPlan, ReplicaFault
+
+BENCH_PATH = pathlib.Path("BENCH_fleet.json")
+
+HW = analysis.HardwareModel(
+    name="fleet-host", peak_flops=1e12, dram_bw=1e11, fast_shared_bw=5e11,
+    fast_shared_bytes=1 << 30, private_bytes=1 << 24,
+)
+
+
+class ImageBank:
+    """Bounded pool of seeded images cycled by rid: a million-user day
+    must not hold a million tensors (the fleet's accounting is by rid;
+    the pixels only need to be deterministic per rid, which cycling
+    preserves)."""
+
+    def __init__(self, trace, c: int, *, seed: int, slots: int = 256):
+        sizes = sorted({(a.h, a.w) for a in trace})
+        rng = np.random.default_rng(seed)
+        per = max(1, slots // max(1, len(sizes)))
+        self._pool = {
+            hw: [
+                (rng.standard_normal((hw[0], hw[1], c)) * 0.1).astype(
+                    np.float32
+                )
+                for _ in range(per)
+            ]
+            for hw in sizes
+        }
+
+    def get(self, arrival) -> np.ndarray:
+        bucket = self._pool[(arrival.h, arrival.w)]
+        return bucket[arrival.rid % len(bucket)]
+
+
+def _percentiles(doc: dict, name: str) -> dict:
+    h = doc["latency"].get(name, {})
+    return {
+        k: h.get(k, 0.0)
+        for k in ("count", "mean_s", "p50_s", "p95_s", "p99_s", "max_s")
+    }
+
+
+def _replay(rt: FleetRuntime, trace, bank: ImageBank, *,
+            keep_results: bool = False) -> float:
+    """Open-loop replay on the simulated clock; returns the simulated
+    makespan.  Results are dropped as they land unless kept -- a
+    day-scale run must not accumulate a day of output tensors."""
+    clock = rt.clock
+    t0 = clock.now()
+    for a in trace:
+        rt.run_until(t0 + a.t)
+        rt.submit(
+            bank.get(a), rid=a.rid,
+            priority=a.priority, deadline_s=a.deadline_s,
+        )
+        if not keep_results and len(rt.results) > 4096:
+            rt.results.clear()
+    rt.drain()
+    return clock.now() - t0
+
+
+def _build_fleet(spec, ws, *, n, clock, service_model, fault_plan=None,
+                 startup_s, probe_interval_s=None, shards=1,
+                 max_replicas=8):
+    engine = Engine(hw=HW)
+    return ElasticPool.build(
+        engine, spec, ws, n=n, clock=clock, input_hw=(16, 16),
+        shards=shards, service_model=service_model, fault_plan=fault_plan,
+        startup_s=startup_s, probe_interval_s=probe_interval_s,
+        max_replicas=max_replicas,
+    )
+
+
+def _accounting(rt: FleetRuntime, total: int) -> dict:
+    c = rt.stats()["counters"]
+    served = c.get("images", 0)
+    lost = c.get("lost_images", 0)
+    admitted = c.get("admitted", 0)
+    rejected = c.get("rejected", 0)
+    assert served + lost == admitted, (
+        f"{admitted - served - lost} admitted requests vanished "
+        f"(served {served}, lost {lost}, admitted {admitted})"
+    )
+    assert admitted + rejected == total, (
+        f"{total - admitted - rejected} submitted requests unaccounted "
+        f"(admitted {admitted}, rejected {rejected}, total {total})"
+    )
+    for reason in rt.pool.losses:
+        assert reason in LOSS_REASONS, f"uncoded loss reason {reason!r}"
+    return {
+        "total": total, "admitted": admitted, "served": served,
+        "lost": lost, "rejected": rejected,
+        "deadline_miss": c.get("deadline_miss", 0),
+        "slo_attainment": (
+            1.0 - c.get("deadline_miss", 0) / served if served else 0.0
+        ),
+    }
+
+
+# ------------------------------------------------------------- the day
+
+
+def bench_day(record: dict, *, smoke: bool, requests: int,
+              seed: int) -> None:
+    """The diurnal day with bursts, autoscaling, and injected faults."""
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=0)
+    day_s = 60.0 if smoke else 86400.0
+    mean_hz = requests / (day_s * 0.72)  # thinning mean ~ requests/day
+    base = diurnal_trace(
+        mean_hz, requests, seed=seed, depth=0.8, period_s=day_s,
+        sizes=(12, 16), deadline_s=None,
+    )
+    # flash crowds riding the daily curve; the service model is sized so
+    # the noon peak needs more replicas than the night trough (the full
+    # day uses a slower model -- at a million requests the absolute rate
+    # is low, and elasticity should come from the rate SHAPE, not from
+    # making the simulated hardware comically slow elsewhere)
+    if smoke:
+        bursts = burst_trace(
+            max(requests // 10, 40), burst=max(requests // 50, 20),
+            period_s=day_s / 8, seed=seed + 1, sizes=(16,),
+        )
+        service = FixedServiceModel(base_s=0.004, per_image_s=0.002)
+    else:
+        bursts = burst_trace(
+            requests // 10, burst=400,
+            period_s=day_s / 250, seed=seed + 1, sizes=(16,),
+        )
+        service = FixedServiceModel(base_s=0.05, per_image_s=0.025)
+    trace = merge_traces(base, bursts)
+    trace = [a for a in trace if a.t <= day_s * 1.5]
+    clock = SimClock()
+    # the drill: one replica crashes on the morning ramp, the shared
+    # cache is corrupted at noon, an afternoon replica goes slow
+    faults = FaultPlan([
+        ReplicaFault(t=day_s * 0.30, kind="crash", replica=0),
+        ReplicaFault(t=day_s * 0.50, kind="cache_corrupt"),
+        ReplicaFault(t=day_s * 0.65, kind="slow", replica=1, factor=8.0),
+    ], clock=clock)
+    pool = _build_fleet(
+        spec, ws, n=2, clock=clock, service_model=service,
+        fault_plan=faults, startup_s=day_s / 100,
+        probe_interval_s=day_s / 20, max_replicas=6,
+    )
+    cfg = RuntimeConfig(
+        max_batch=8, buckets=(16,), queue_depth=512,
+        slo_s=0.5, service_est_s=service.service_s(
+            _probe_wave(), shards=1
+        ),
+    )
+    auto = AutoscalerConfig(
+        min_replicas=2, max_replicas=6,
+        tick_interval_s=day_s / 200, cooldown_s=day_s / 50,
+        queue_high=6.0, queue_low=0.5, slack_min_s=0.05,
+        admission_queue_per_replica=256.0,
+    )
+    rt = FleetRuntime(pool, cfg, clock=clock, autoscaler=auto)
+    rt.warmup()
+    bank = ImageBank(trace, 4, seed=1)
+    wall0 = time.perf_counter()
+    makespan = _replay(rt, trace, bank)
+    wall = time.perf_counter() - wall0
+
+    doc = rt.stats()
+    acct = _accounting(rt, len(trace))
+    p = doc["pool"]
+    entry = {
+        "requests": len(trace),
+        "sim_day_s": day_s,
+        "sim_makespan_s": makespan,
+        "wall_s": wall,
+        "speedup_over_realtime": makespan / wall if wall > 0 else 0.0,
+        "accounting": acct,
+        "e2e": _percentiles(doc, "e2e"),
+        "queue_wait": _percentiles(doc, "queue_wait"),
+        "pool": {
+            k: p[k]
+            for k in ("replicas", "states", "dispatches", "retries",
+                      "orphaned", "losses", "grown", "retired", "failures",
+                      "quarantines", "cache_repairs", "probe_mismatches")
+        },
+        "faults": p["faults"],
+        "autoscaler": {
+            k: doc["autoscaler"][k]
+            for k in ("ticks", "scale_ups", "scale_downs", "replacements",
+                      "events")
+        },
+        "counters": doc["counters"],
+    }
+    record["day"] = entry
+
+    assert p["failures"] >= 1, "the crash fault never fired"
+    assert p["cache_repairs"] >= 1, (
+        "cache corruption was never detected + repaired"
+    )
+    auto_stats = doc["autoscaler"]
+    scaled = auto_stats["scale_ups"] + auto_stats["replacements"]
+    assert scaled >= 1, "the day never triggered a scale event"
+    if smoke:
+        assert acct["slo_attainment"] >= 0.95, (
+            f"SLO attainment {acct['slo_attainment']:.4f} < 0.95"
+        )
+    print(row(
+        "fleet/day/p95_e2e", entry["e2e"]["p95_s"] * 1e6,
+        f"{acct['served']}srv;{acct['lost']}lost;"
+        f"slo{acct['slo_attainment']:.3f}",
+    ))
+    print(row(
+        "fleet/day/makespan", makespan * 1e6,
+        f"x{entry['speedup_over_realtime']:.0f}rt;"
+        f"{auto_stats['scale_ups']}up;{auto_stats['scale_downs']}down",
+    ))
+
+
+def _probe_wave():
+    """A stand-in full wave for sizing the initial service estimate."""
+    class _W:
+        requests = [None] * 8
+    return _W()
+
+
+# ------------------------------------------------------ scale-out curve
+
+
+def bench_scaleout(record: dict, *, smoke: bool, seed: int) -> None:
+    """Throughput and p95 vs fleet size under one saturating trace."""
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=0)
+    n_requests = 480 if smoke else 4000
+    service = FixedServiceModel(base_s=0.004, per_image_s=0.002)
+    curve = {}
+    for n in (1, 2, 4):
+        trace = poisson_trace(
+            5000.0, n_requests, seed=seed, sizes=(16,),
+        )
+        clock = SimClock()
+        pool = _build_fleet(
+            spec, ws, n=n, clock=clock, service_model=service,
+            startup_s=1.0, max_replicas=n,
+        )
+        cfg = RuntimeConfig(
+            max_batch=8, buckets=(16,), queue_depth=n_requests,
+            slo_s=None, service_est_s=0.02,
+        )
+        rt = FleetRuntime(pool, cfg, clock=clock)
+        rt.warmup()
+        bank = ImageBank(trace, 4, seed=1)
+        makespan = _replay(rt, trace, bank)
+        acct = _accounting(rt, len(trace))
+        doc = rt.stats()
+        curve[str(n)] = {
+            "replicas": n,
+            "served": acct["served"],
+            "sim_makespan_s": makespan,
+            "throughput_rps": acct["served"] / makespan,
+            "e2e": _percentiles(doc, "e2e"),
+        }
+        print(row(
+            f"fleet/scaleout/n{n}", makespan * 1e6,
+            f"{curve[str(n)]['throughput_rps']:.0f}rps",
+        ))
+    t1 = curve["1"]["throughput_rps"]
+    t4 = curve["4"]["throughput_rps"]
+    curve["speedup_4v1"] = t4 / t1 if t1 else 0.0
+    record["scaleout"] = curve
+    assert t4 >= 2.5 * t1, (
+        f"scale-out floor missed: T(4)={t4:.0f}rps < 2.5 x T(1)={t1:.0f}rps"
+    )
+
+
+# ------------------------------------------------------------ exactness
+
+
+def bench_exactness(record: dict, *, seed: int) -> None:
+    """Sharded 3-replica fleet vs single-replica oracle: bit-identical
+    outputs on the same trace, ragged/partial waves included."""
+    spec = tiny_testnet(4)
+    ws = init_weights(spec, seed=0)
+    trace = poisson_trace(
+        45.0, 60, seed=seed, sizes=(8, 12, 16), deadline_s=0.08,
+    )
+    images = make_images(trace, 4, seed=1)
+    service = FixedServiceModel(base_s=0.004, per_image_s=0.002)
+
+    def serve(n, shards):
+        clock = SimClock()
+        pool = _build_fleet(
+            spec, ws, n=n, clock=clock, service_model=service,
+            startup_s=1.0, shards=shards, max_replicas=n,
+        )
+        cfg = RuntimeConfig(
+            max_batch=4, buckets=(16,), queue_depth=128,
+            slo_s=0.1, service_est_s=0.01,
+        )
+        rt = FleetRuntime(pool, cfg, clock=clock)
+        rt.warmup([2, 4])
+        return rt.play(trace, images), rt.stats()
+
+    fleet_out, fleet_doc = serve(3, shards=4)
+    oracle_out, _ = serve(1, shards=1)
+    assert fleet_out.keys() == oracle_out.keys(), "served sets differ"
+    mismatch = [
+        rid for rid in oracle_out
+        if not np.array_equal(fleet_out[rid], oracle_out[rid])
+    ]
+    assert not mismatch, (
+        f"{len(mismatch)} outputs differ from the single-replica oracle "
+        f"(first: rid {mismatch[0]})"
+    )
+    record["exactness"] = {
+        "requests": len(trace),
+        "replicas": 3,
+        "shards": 4,
+        "bit_exact": True,
+        "partial_waves": fleet_doc["scheduler"]["partial_waves"],
+    }
+    assert fleet_doc["scheduler"]["partial_waves"] >= 1, (
+        "exactness trace formed no ragged/partial waves -- the check "
+        "is not exercising reassembly"
+    )
+    print(row("fleet/exactness/requests", len(trace) * 1.0, "bit-exact"))
+
+
+def main(smoke: bool = False, requests: int = 0, seed: int = 11) -> None:
+    record: dict = {}
+    if requests <= 0:
+        requests = 6000 if smoke else 1_000_000
+    try:
+        bench_exactness(record, seed=seed)
+        bench_scaleout(record, smoke=smoke, seed=seed)
+        bench_day(record, smoke=smoke, requests=requests, seed=seed)
+    finally:
+        # partial results still land on disk (and in the CI artifact)
+        # when an assert fires mid-run
+        BENCH_PATH.write_text(
+            json.dumps(
+                {"bench": "fleet", "smoke": smoke, "seed": seed, **record},
+                indent=1, sort_keys=True,
+            )
+        )
+        print(f"# wrote {BENCH_PATH}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI invariants run: compressed day, reduced "
+                    "request count, crash fault enabled")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="day-trace request count (default: 6000 smoke, "
+                    "1,000,000 full)")
+    ap.add_argument("--seed", type=int, default=11)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="output path (default BENCH_fleet.json)")
+    args = ap.parse_args()
+    if args.json:
+        BENCH_PATH = pathlib.Path(args.json)
+    main(smoke=args.smoke, requests=args.requests, seed=args.seed)

@@ -108,6 +108,8 @@ class AdaptController:
         self._probe = probe
         self._shadow_timer = shadow_timer
         self.state = IDLE
+        self.paused = False  # scale events gate shadow traffic off
+        self._pause_reason: Optional[str] = None
         self.candidate: Optional[List] = None  # per-replica CompiledNets
         self.candidate_plan = None
         self.verifier: Optional[ShadowVerifier] = None
@@ -171,6 +173,28 @@ class AdaptController:
             self.store.observe(
                 stage_key(stage), t_meas, predicted_s=t_pred
             )
+
+    # ------------------------------------------------------- pausing
+
+    def pause(self, reason: str = "scale_event") -> None:
+        """Suspend the control loop: no new replans open and -- the part
+        scale events care about -- `on_wave` duplicates NOTHING while
+        paused, so shadow compute never competes with replicas that are
+        warming up or draining.  An open shadow keeps its candidate and
+        evidence; `resume` picks up exactly where it stopped."""
+        if self.paused:
+            return
+        self.paused = True
+        self._pause_reason = reason
+        self._inc("paused")
+        self._audit("pause", reason)
+
+    def resume(self) -> None:
+        if not self.paused:
+            return
+        self.paused = False
+        self._audit("resume", f"was paused for {self._pause_reason}")
+        self._pause_reason = None
 
     # ------------------------------------------------------- measure
 
@@ -275,6 +299,8 @@ class AdaptController:
         measured costs and open a shadow.  Returns the trigger reason,
         or None (in cooldown / already shadowing / within threshold /
         replan was a no-op)."""
+        if self.paused:
+            return None
         if self.state != IDLE or self._now() < self._cooldown_until:
             return None
         rows = self.divergence()
@@ -366,6 +392,8 @@ class AdaptController:
         """Runtime wave observer: duplicate a trickle of live waves onto
         the candidate.  Runs strictly after the live wave's client-side
         bookkeeping, so shadow work never touches client latency."""
+        if self.paused:
+            return
         if self.state != SHADOW or self.candidate is None:
             return
         self._waves_seen += 1
@@ -455,6 +483,7 @@ class AdaptController:
         v = self.verifier or self.last_verifier
         return {
             "state": self.state,
+            "paused": self.paused,
             "replans_triggered": self.replans_triggered,
             "shadows_run": self.shadows_run,
             "promotions": self.promotions,

@@ -161,6 +161,53 @@ class KernelCache:
                 self.invalidations += 1
         return dropped
 
+    def keys(self) -> list:
+        """Snapshot of resident keys, most-recently-used last."""
+        with self._lock:
+            return list(self._store)
+
+    def entry_nbytes(self, key: Tuple) -> Optional[int]:
+        """Resident bytes of one transform (None when not resident) --
+        the fleet's replicate-vs-shard placement decision reads this."""
+        with self._lock:
+            wt = self._store.get(key)
+            return None if wt is None else int(wt.nbytes)
+
+    def place(self, key: Tuple, put_fn) -> bool:
+        """Re-store one resident transform through ``put_fn(wt) -> wt``
+        (a `jax.device_put` with a mesh sharding, in the fleet's case).
+        The placed array must be value-identical -- placement moves
+        bytes across devices, it never changes what is served.  Returns
+        False when the key is not resident."""
+        with self._lock:
+            wt = self._store.get(key)
+            if wt is None:
+                return False
+            placed = put_fn(wt)
+            if placed.shape != wt.shape or placed.dtype != wt.dtype:
+                raise ValueError(
+                    f"placement changed entry {key}: {wt.shape}/{wt.dtype}"
+                    f" -> {placed.shape}/{placed.dtype}"
+                )
+            self._store[key] = placed
+            return True
+
+    def corrupt_entry(self, key: Optional[Tuple] = None) -> Optional[Tuple]:
+        """FAULT-INJECTION surface (fleet drills / tests only): negate
+        one resident transform in place, silently poisoning every future
+        fetch of it -- the failure mode a bit-flipped shared cache would
+        produce.  Targets the least-recently-used entry when no key is
+        given.  Returns the corrupted key (None when the cache is
+        empty).  Detection and repair are the fleet pool's health-probe
+        job; the cache itself stays silent, which is the point."""
+        with self._lock:
+            if key is None:
+                key = next(iter(self._store), None)
+            if key is None or key not in self._store:
+                return None
+            self._store[key] = -self._store[key]
+            return key
+
     @property
     def nbytes(self) -> int:
         return self._nbytes

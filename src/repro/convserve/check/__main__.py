@@ -52,9 +52,15 @@ def run_ir() -> CheckReport:
 
 def run_locks(src: Path) -> CheckReport:
     convserve = src / "repro" / "convserve"
-    return analyze_locks(
-        [convserve / "runtime", convserve / "adapt", convserve / "cache.py"]
-    )
+    return analyze_locks([
+        convserve / "runtime",
+        convserve / "adapt",
+        convserve / "fleet",
+        convserve / "cache.py",
+        # the fleet's fault schedule lives outside convserve but is
+        # consulted from replica completion paths: same discipline
+        src / "repro" / "runtime" / "fault.py",
+    ])
 
 
 def run_rules(src: Path) -> CheckReport:

@@ -1,0 +1,46 @@
+"""Elastic fleet serving: sharded waves, autoscaling, fault tolerance.
+
+The fleet subsystem turns the single-pool serving runtime into a
+distributed one:
+
+  * `sharding` -- split one wave's rows across a `jax` mesh and decide,
+    per layer, whether pre-transformed kernels replicate or shard;
+  * `pool` -- an elastic replica pool with lifecycle states, a
+    discrete-event simulation core, injectable faults, and health
+    probes that detect (and repair) shared-cache corruption;
+  * `autoscaler` -- the telemetry-driven controller growing and
+    shrinking the fleet with hysteresis, cooldown, and an admission cap
+    while newcomers warm;
+  * `service` -- `FleetRuntime`, the `ServeRuntime` subclass that runs
+    the whole thing on a simulated or real clock.
+"""
+
+from repro.convserve.fleet.autoscaler import (  # noqa: F401
+    Autoscaler,
+    AutoscalerConfig,
+)
+from repro.convserve.fleet.pool import (  # noqa: F401
+    DRAINING,
+    ElasticPool,
+    FAILED,
+    FixedServiceModel,
+    LOSS_NO_HEALTHY_REPLICA,
+    LOSS_REASONS,
+    LOSS_RETRIES_EXHAUSTED,
+    QUARANTINED,
+    READY,
+    RETIRED,
+    Replica,
+    STARTING,
+    WaveLoss,
+)
+from repro.convserve.fleet.service import FleetRuntime  # noqa: F401
+from repro.convserve.fleet.sharding import (  # noqa: F401
+    REPLICATE,
+    SHARD,
+    ShardedWaveExecutor,
+    apply_placement,
+    plan_weight_placement,
+    probe_image,
+    shard_bounds,
+)

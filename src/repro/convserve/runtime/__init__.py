@@ -16,7 +16,10 @@ from repro.convserve.runtime.clock import Clock, RealClock, SimClock
 from repro.convserve.runtime.loadgen import (
     Arrival,
     burst_trace,
+    diurnal_rate,
+    diurnal_trace,
     make_images,
+    merge_traces,
     poisson_trace,
 )
 from repro.convserve.runtime.queueing import (
@@ -25,6 +28,7 @@ from repro.convserve.runtime.queueing import (
     REJECT_BAD_SHAPE,
     REJECT_QUEUE_FULL,
     REJECT_REASONS,
+    REJECT_SCALING,
     REJECT_TOO_LARGE,
     STANDARD,
     BucketQueue,
@@ -61,6 +65,7 @@ __all__ = [
     "REJECT_QUEUE_FULL",
     "REJECT_TOO_LARGE",
     "REJECT_BAD_SHAPE",
+    "REJECT_SCALING",
     "RuntimeConfig",
     "Wave",
     "WaveScheduler",
@@ -76,5 +81,8 @@ __all__ = [
     "Arrival",
     "poisson_trace",
     "burst_trace",
+    "diurnal_rate",
+    "diurnal_trace",
+    "merge_traces",
     "make_images",
 ]

@@ -24,11 +24,16 @@ INTERACTIVE = 0
 STANDARD = 1
 BATCH = 2
 
-# admission-reject reasons (the closed vocabulary telemetry counts by)
+# admission-reject reasons (the closed vocabulary telemetry counts by);
+# "scaling" is the fleet runtime's scale-up admission gate: while new
+# replicas warm, the queue is capped at what the READY ones can drain
 REJECT_QUEUE_FULL = "queue_full"
 REJECT_TOO_LARGE = "too_large"
 REJECT_BAD_SHAPE = "bad_shape"
-REJECT_REASONS = (REJECT_QUEUE_FULL, REJECT_TOO_LARGE, REJECT_BAD_SHAPE)
+REJECT_SCALING = "scaling"
+REJECT_REASONS = (
+    REJECT_QUEUE_FULL, REJECT_TOO_LARGE, REJECT_BAD_SHAPE, REJECT_SCALING,
+)
 
 
 @dataclasses.dataclass

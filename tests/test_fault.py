@@ -4,10 +4,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import pytest
+
 from repro.checkpoint import io as ckpt_io
+from repro.convserve.runtime import SimClock
 from repro.runtime.fault import (
+    FAULT_CACHE_CORRUPT,
+    FAULT_CRASH,
+    FAULT_SLOW,
     FailureInjector,
+    FaultPlan,
     InjectedFailure,
+    ReplicaFault,
     StragglerWatchdog,
     run_supervised,
 )
@@ -89,6 +97,57 @@ def test_straggler_watchdog():
     alarm = wd.observe(10, 1.0)
     assert alarm is not None and alarm["p50"] < 0.2
     assert len(wd.alarms) == 1
+
+
+def test_fault_plan_routes_through_injected_clock():
+    clock = SimClock()
+    plan = FaultPlan([
+        ReplicaFault(t=2.0, kind=FAULT_SLOW, replica=1, factor=8.0),
+        ReplicaFault(t=1.0, kind=FAULT_CRASH, replica=0),
+        ReplicaFault(t=3.0, kind=FAULT_CACHE_CORRUPT),
+    ], clock=clock)
+    # schedule is sorted by time regardless of construction order
+    assert plan.next_t() == 1.0 and plan.pending() == 3
+    assert plan.due() == []  # clock still at 0
+    clock.advance(2.5)
+    ripe = plan.due()  # no explicit `now`: reads the injected clock
+    assert [f.kind for f in ripe] == [FAULT_CRASH, FAULT_SLOW]
+    assert plan.due() == []  # exactly once
+    assert plan.next_t() == 3.0
+    clock.advance(10.0)
+    assert [f.kind for f in plan.due()] == [FAULT_CACHE_CORRUPT]
+    assert plan.next_t() == float("inf") and plan.pending() == 0
+    s = plan.stats()
+    assert s["pending"] == 0 and len(s["fired"]) == 3
+    assert [f["t"] for f in s["fired"]] == [1.0, 2.0, 3.0]
+
+
+def test_fault_plan_without_clock_requires_explicit_now():
+    plan = FaultPlan([ReplicaFault(t=1.0, kind=FAULT_CRASH, replica=0)])
+    with pytest.raises(ValueError, match="no injected clock"):
+        plan.due()
+    assert len(plan.due(now=1.0)) == 1
+
+
+def test_replica_fault_validates():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        ReplicaFault(t=0.0, kind="meteor")
+    with pytest.raises(ValueError, match="needs a target replica"):
+        ReplicaFault(t=0.0, kind=FAULT_CRASH)
+    with pytest.raises(ValueError, match="needs a target replica"):
+        ReplicaFault(t=0.0, kind=FAULT_SLOW)
+    # cache corruption targets the shared cache: no replica needed
+    ReplicaFault(t=0.0, kind=FAULT_CACHE_CORRUPT)
+
+
+def test_straggler_watchdog_stamps_alarms_with_injected_clock():
+    clock = SimClock()
+    wd = StragglerWatchdog(factor=3.0, min_steps=5, clock=clock)
+    for i in range(6):
+        wd.observe(i, 0.1)
+    clock.advance(42.0)
+    alarm = wd.observe(6, 1.0)
+    assert alarm is not None and alarm["t"] == 42.0
 
 
 def test_supervisor_restarts():
