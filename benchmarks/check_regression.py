@@ -4,10 +4,15 @@ Compares a fresh ``BENCH_serve_runtime.json`` (produced by
 ``serve_runtime_bench``) to the reference numbers committed under
 ``benchmarks/baselines/``: per net, the fused path's throughput must
 not fall below ``(1 - tol) x`` baseline and its p95 end-to-end latency
-must not rise above ``(1 + tol) x`` baseline.  The band is wide by
-design -- CI machines vary run to run -- so a trip means a real
-regression (an accidental cold-compile in the serving path, a cache
-that stopped reusing transforms), not noise.
+must not rise above ``(1 + tol) x`` baseline.  When a
+``BENCH_convserve.json`` artifact is present, its per-stage wall times
+(``us`` per ExecProgram stage) are additionally gated against the
+committed stage baseline -- that is the level at which a kernel
+regression actually shows up (one stage going 3x while the net total
+hides it in noise).  The bands are wide by design -- CI machines vary
+run to run -- so a trip means a real regression (an accidental
+cold-compile in the serving path, a cache that stopped reusing
+transforms, a tile-engine block shape gone pathological), not noise.
 
     PYTHONPATH=src python -m benchmarks.serve_runtime_bench --smoke
     PYTHONPATH=src python -m benchmarks.check_regression --smoke
@@ -27,17 +32,65 @@ import pathlib
 import sys
 
 BENCH_PATH = pathlib.Path("BENCH_serve_runtime.json")
+CONVSERVE_PATH = pathlib.Path("BENCH_convserve.json")
 BASELINE_DIR = pathlib.Path(__file__).resolve().parent / "baselines"
 
 # wide bands: the gate is for order-of-magnitude breakage, not jitter
 DEFAULT_THROUGHPUT_TOL = 0.6  # fail below 40% of baseline throughput
 DEFAULT_P95_TOL = 2.0  # fail above 3x baseline p95
+DEFAULT_STAGE_TOL = 2.0  # fail above 3x baseline per-stage us
 
 
 def baseline_path(smoke: bool) -> pathlib.Path:
     return BASELINE_DIR / (
         "serve_runtime_smoke.json" if smoke else "serve_runtime_full.json"
     )
+
+
+def stage_baseline_path(smoke: bool) -> pathlib.Path:
+    return BASELINE_DIR / (
+        "convserve_stages_smoke.json" if smoke else "convserve_stages_full.json"
+    )
+
+
+def extract_stages(bench: dict) -> dict:
+    """Per net, each ExecProgram stage's measured wall time in us."""
+    out = {}
+    for net, entry in bench.get("nets", {}).items():
+        stages = entry.get("stages")
+        if not stages:
+            continue
+        out[net] = {
+            st["label"]: st["us"] for st in stages if st.get("us") is not None
+        }
+    return out
+
+
+def compare_stages(current: dict, baseline: dict, *, tol: float) -> list:
+    """Per-stage regression findings (empty = pass).  A stage present in
+    the baseline but absent from the bench is a finding: replans renaming
+    stages should move the baseline deliberately, not silently shrink the
+    gate."""
+    findings = []
+    for net, base_stages in baseline.items():
+        cur_stages = current.get(net)
+        if cur_stages is None:
+            findings.append(f"{net}: in stage baseline but missing from bench")
+            continue
+        for label, base_us in base_stages.items():
+            cur_us = cur_stages.get(label)
+            if cur_us is None:
+                findings.append(
+                    f"{net}/{label}: in stage baseline but missing from bench"
+                )
+                continue
+            ceil_us = base_us * (1.0 + tol)
+            if cur_us > ceil_us:
+                findings.append(
+                    f"{net}/{label}: stage {cur_us:.0f} us > ceiling "
+                    f"{ceil_us:.0f} (baseline {base_us:.0f}, tol {tol:.0%})"
+                )
+    return findings
 
 
 def extract(bench: dict) -> dict:
@@ -94,6 +147,10 @@ def main(argv=None) -> int:
     ap.add_argument("--tol-throughput", type=float,
                     default=DEFAULT_THROUGHPUT_TOL)
     ap.add_argument("--tol-p95", type=float, default=DEFAULT_P95_TOL)
+    ap.add_argument("--tol-stage", type=float, default=DEFAULT_STAGE_TOL)
+    ap.add_argument("--convserve-bench", default=None, metavar="PATH",
+                    help="convserve bench artifact for the per-stage gate "
+                         "(default BENCH_convserve.json; skipped if absent)")
     args = ap.parse_args(argv)
 
     bench_path = pathlib.Path(args.bench) if args.bench else BENCH_PATH
@@ -112,7 +169,17 @@ def main(argv=None) -> int:
         return 1
     current = extract(bench)
 
+    cs_path = pathlib.Path(
+        args.convserve_bench) if args.convserve_bench else CONVSERVE_PATH
+    cs_bench = None
+    if cs_path.exists():
+        cs_bench = json.loads(cs_path.read_text())
+        if bool(cs_bench.get("smoke")) != args.smoke:
+            cs_bench = None  # artifact from the other mode: not comparable
+    cur_stages = extract_stages(cs_bench) if cs_bench else {}
+
     path = baseline_path(args.smoke)
+    st_path = stage_baseline_path(args.smoke)
     if args.update:
         path.parent.mkdir(parents=True, exist_ok=True)
         path.write_text(json.dumps(
@@ -121,6 +188,13 @@ def main(argv=None) -> int:
             indent=1, sort_keys=True,
         ) + "\n")
         print(f"check_regression: baseline updated at {path}")
+        if cs_bench:
+            st_path.write_text(json.dumps(
+                {"bench": "convserve_stages", "smoke": args.smoke,
+                 "nets": cur_stages},
+                indent=1, sort_keys=True,
+            ) + "\n")
+            print(f"check_regression: stage baseline updated at {st_path}")
         return 0
     if not path.exists():
         print(f"check_regression: no committed baseline at {path} -- "
@@ -132,6 +206,18 @@ def main(argv=None) -> int:
         current, baseline["nets"],
         tput_tol=args.tol_throughput, p95_tol=args.tol_p95,
     )
+    if st_path.exists() and cs_bench:
+        st_baseline = json.loads(st_path.read_text())
+        findings += compare_stages(
+            cur_stages, st_baseline["nets"], tol=args.tol_stage,
+        )
+        for net in sorted(st_baseline["nets"]):
+            for label, base_us in sorted(st_baseline["nets"][net].items()):
+                cur_us = cur_stages.get(net, {}).get(label, float("nan"))
+                print(
+                    f"check_regression: {net}/{label}: {cur_us:.0f} us "
+                    f"(baseline {base_us:.0f})"
+                )
     for net in sorted(baseline["nets"]):
         base, cur = baseline["nets"][net], current.get(net, {})
         print(

@@ -42,19 +42,37 @@ from repro.configs.convnets import (
 )
 from repro.convserve import Engine, init_weights, run_direct
 from repro.convserve.planner import predict_stage_times
-from repro.core import analysis
+from repro.core import analysis, transforms, tune
 
 BENCH_PATH = pathlib.Path("BENCH_convserve.json")
+
+_HW: list = []  # one-shot cache of the calibrated model for this run
+
+
+def bench_hw() -> analysis.HardwareModel:
+    """The calibrated hardware model every bench number is predicted
+    against: the paper-machine constants with compute/memory roofs
+    replaced by the measured GEMM/stream microbenchmark (cached in the
+    wisdom file, so repeat runs pay nothing).  Hardcoded SKYLAKE_X peaks
+    on an arbitrary host made `measured_over_predicted` pure noise
+    (80-440x); calibration is what makes the divergence signal usable."""
+    if not _HW:
+        _HW.append(analysis.calibrated_hw(analysis.SKYLAKE_X))
+    return _HW[0]
 
 
 def profile_stage_rows(net, x, hw) -> list:
     """Measured AND roofline-predicted seconds per stage -- the
     predicted-vs-measured delta is the cost-model divergence the adapt
-    loop (convserve.adapt) acts on, surfaced in the bench artifact."""
+    loop (convserve.adapt) acts on, surfaced in the bench artifact.
+    Modeled stage times are per image; the measured pass runs the whole
+    batch, so predictions are scaled by x's leading dim to compare
+    like with like."""
+    batch = int(x.shape[0])
     predicted = dict(predict_stage_times(net.program, hw))
     rows = []
     for label, secs in net.profile_stages(x):
-        pred = predicted[label]
+        pred = predicted[label] * batch
         rows.append(
             {
                 "label": label,
@@ -74,7 +92,7 @@ def bench_net(spec, batch: int, side: int, c_in: int, record: dict) -> None:
     x = jnp.asarray(
         rng.standard_normal((batch, side, side, c_in)) * 0.1, jnp.float32
     )
-    engine = Engine(hw=analysis.SKYLAKE_X)
+    engine = Engine(hw=bench_hw())
 
     t0 = time.perf_counter()
     net = engine.compile(spec, ws, input_hw=(side, side))
@@ -115,7 +133,7 @@ def bench_net(spec, batch: int, side: int, c_in: int, record: dict) -> None:
         )
     )
 
-    stages = profile_stage_rows(net, x, analysis.SKYLAKE_X)
+    stages = profile_stage_rows(net, x, engine.hw)
     for st in stages:
         print(
             row(
@@ -153,11 +171,30 @@ def bench_fft_net(
     """
     spec = fft_fewchannel(4)
     ws = init_weights(spec, seed=0)
-    engine = Engine(hw=analysis.SKYLAKE_X)
+    # block-autotune both engine families at this net's layer geometries
+    # before planning: lookup_blocks then resolves at plan time and the
+    # auto ranking prices the tuned engine (analysis.engine_cost_ta)
+    # instead of the static idealization.  Repeat runs hit the stamped
+    # wisdom entries and pay nothing.
+    for c_in, c_out in sorted(
+        {(l.c_in, l.c_out) for l in spec.layers if l.kind == "conv"}
+    ):
+        for tr in (
+            transforms.WinogradTransform(m=5, k=3),
+            transforms.FFTTransform(t=16, k=3),
+        ):
+            tune.tuned_blocks(side, side, c_in, c_out, transform=tr)
+    engine = Engine(hw=bench_hw())
     fused = engine.compile(spec, ws, input_hw=(side, side))
     unfused = engine.compile(spec, ws, input_hw=(side, side), fuse=False)
-    assert all(a == "fft_fused" for a in fused.plan.algos()), (
-        f"few-channel net did not plan FFT: {fused.plan.algos()}"
+    # every layer must resolve to a *fused transformed* realization; the
+    # family is the calibrated cost model's call (the paper: FFT wins at
+    # high channel counts, Winograd at few), so the gate is deliberately
+    # family-agnostic -- the FFT family's parity is pinned by the
+    # interpret-mode kernel matrix in tests/test_fused_tile.py
+    fused_algos = {"fft_fused", "l3_fused"}
+    assert all(a in fused_algos for a in fused.plan.algos()), (
+        f"few-channel net did not plan fused transforms: {fused.plan.algos()}"
     )
     assert fused.program.n_fused >= 1, (
         f"FFT net planned no fusion groups: {fused.describe()}"
@@ -183,7 +220,7 @@ def bench_fft_net(
     print(row(f"convserve/{spec.name}/direct", t_dir * 1e6))
     print(row(f"convserve/{spec.name}/fused_vs_direct", 0.0,
               f"rel{rel_fused:.2e}"))
-    stages = profile_stage_rows(fused, x, analysis.SKYLAKE_X)
+    stages = profile_stage_rows(fused, x, engine.hw)
     for st in stages:
         print(
             row(
@@ -210,7 +247,7 @@ def _smoke(record: dict) -> None:
     must agree with the direct oracle (fusion-group parity gate)."""
     spec = tiny_testnet(4)
     ws = init_weights(spec, seed=0)
-    engine = Engine(hw=analysis.SKYLAKE_X)
+    engine = Engine(hw=bench_hw())
     fused = engine.compile(spec, ws, input_hw=(16, 16))
     unfused = engine.compile(spec, ws, input_hw=(16, 16), fuse=False)
     # without this the parity gate is vacuous: a planner regression that
@@ -257,9 +294,19 @@ def main(batch: int = 2, side: int = 64, smoke: bool = False) -> None:
     finally:
         # partial results still land on disk (and in the CI artifact)
         # when a parity gate fires mid-run
+        hw = bench_hw()
         BENCH_PATH.write_text(
             json.dumps(
-                {"bench": "convserve", "smoke": smoke, "nets": record},
+                {
+                    "bench": "convserve",
+                    "smoke": smoke,
+                    "calibration": {
+                        "hw": hw.name,
+                        "peak_flops": hw.peak_flops,
+                        "dram_bw": hw.dram_bw,
+                    },
+                    "nets": record,
+                },
                 indent=1,
                 sort_keys=True,
             )

@@ -14,7 +14,7 @@ Code space (documented in README "Static verification"):
 
   CVK1xx  IR verifier (`check.ir`) — ExecProgram legality
   CVK2xx  lock discipline (`check.locks`)
-  CVK3xx  clock + registry conventions (`check.rules`)
+  CVK3xx  clock + kernel + registry conventions (`check.rules`)
 """
 
 from __future__ import annotations
@@ -61,6 +61,8 @@ HINTS = {
     "CVK304": "fix the syntax error so the linter can parse the file",
     "CVK310": "declare supports() before execute() on the Algorithm",
     "CVK311": "this algorithm does not consume wt=: drop the argument",
+    "CVK320": "move the pallas_call into a kernels/ package (or call "
+              "the tile engine, repro.kernels.fused_tile)",
 }
 
 

@@ -19,6 +19,13 @@ The built-in rules encode two conventions the runtime depends on:
   is CVK302; inside `convserve/` even `time.monotonic()`/`time.sleep()`
   are CVK303 (must go through a Clock so simulation reaches them).
 
+  *kernel discipline* — `pl.pallas_call` is the raw kernel-launch
+  primitive; every launch must live under ``kernels/`` (CVK320), where
+  the parametric tile engine owns grids, BlockSpecs and interpret-mode
+  fallbacks.  A `pallas_call` in core/ or convserve/ bypasses the
+  engine's backend resolution and block autotuning — it would run
+  uninterpreted on CPU CI and untuned everywhere.
+
   *registry discipline* — an `Algorithm` subclass must declare its
   `supports` predicate before (lexically above) its `execute` body
   (CVK310: the capability contract is read top-down, and a class that
@@ -134,6 +141,50 @@ class DirectTimeRule(Rule):
 # ---------------------------------------------------------- registry rules
 
 _ROOT_ALGO_CLASSES = {"Algorithm", "TransformedAlgorithm"}
+
+
+class PallasCallOutsideKernelsRule(Rule):
+    """CVK320: a direct ``pl.pallas_call`` (or a name imported from
+    ``jax.experimental.pallas``) outside ``kernels/``.  Kernel launches
+    belong to the kernel packages; everything else goes through the
+    parametric tile engine's dispatchers."""
+
+    code = "CVK320"
+    name = "pallas-call-outside-kernels"
+
+    def check(self, ctx: FileContext, report: CheckReport) -> None:
+        posix = Path(ctx.path).as_posix()
+        if "/kernels/" in posix:
+            return
+        # names imported straight off the pallas module:
+        #   from jax.experimental.pallas import pallas_call [as pc]
+        direct: Set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if (isinstance(node, ast.ImportFrom)
+                    and node.module
+                    and node.module.endswith("pallas")):
+                for alias in node.names:
+                    if alias.name == "pallas_call":
+                        direct.add(alias.asname or alias.name)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            hit = (
+                isinstance(func, ast.Attribute)
+                and func.attr == "pallas_call"
+                or isinstance(func, ast.Name) and func.id in direct
+            )
+            if hit:
+                report.add(
+                    Diagnostic(
+                        code=self.code,
+                        message="pallas_call outside kernels/: launch "
+                        "through the parametric tile engine "
+                        "(repro.kernels.fused_tile) instead",
+                        loc=f"{ctx.path}:{node.lineno}",
+                    )
+                )
 
 
 class SupportsBeforeExecuteRule(Rule):
@@ -267,6 +318,7 @@ class WtToNonConsumerRule(Rule):
 
 DEFAULT_RULES: List[Rule] = [
     DirectTimeRule(),
+    PallasCallOutsideKernelsRule(),
     SupportsBeforeExecuteRule(),
     WtToNonConsumerRule(),
 ]

@@ -174,19 +174,18 @@ class NetExecutor:
     # ------------------------------------------------------ stage driver
 
     def _elementwise_fn(self, ops: Tuple[EpilogueOp, ...], ws):
-        """Fold bias/relu ops into one callable (None when empty)."""
+        """Fold bias/relu ops into a structured `registry.ElementwiseOps`
+        (None when empty): still a plain ``y -> y`` callable, but fused
+        algorithms can read its static op list and fold the glue into
+        their kernel's scatter phase instead of a separate pass."""
         if not ops:
             return None
-
-        def run(y):
-            for op in ops:
-                if op.kind == "bias":
-                    y = y + ws[op.layer]
-                else:  # relu
-                    y = jax.nn.relu(y)
-            return y
-
-        return run
+        return registry.ElementwiseOps(
+            [
+                ("bias", ws[op.layer]) if op.kind == "bias" else ("relu",)
+                for op in ops
+            ]
+        )
 
     def _apply_tail(
         self, x, ops: Tuple[EpilogueOp, ...], ext: _Extent, ws

@@ -159,11 +159,23 @@ _MATRIX_FRAC = analysis.MATRIX_RESIDENCY_FRAC
 
 
 def _conv_time_s(p: LayerPlan, hw: analysis.HardwareModel) -> float:
-    """Modeled wall time of one conv at its reference geometry (see
-    `analysis.conv_time_s`).  Deliberately reconstructible from a
-    deserialized plan (v2 files keep predicted_util but not the
-    auto-ranking cost)."""
+    """Modeled wall time of one conv at its reference geometry.
+    Deliberately reconstructible from a deserialized plan (v2 files keep
+    predicted_util but not the auto-ranking cost).
+
+    Transformed algorithms are priced by the FLOPs the parametric tile
+    engine actually executes (forward + mix + inverse GEMMs over the full
+    stride-1 tile grid, `TileAlgebra.engine_flops`) -- the direct-conv
+    FLOP count used to stand in for every algorithm, which is why
+    measured/predicted ratios ran orders of magnitude apart between
+    families.  Direct convs keep the `analysis.conv_time_s` charge."""
     s = p.spec
+    ta = registry.get(p.algo).tile_algebra(p.algo_plan())
+    if ta is not None and ta.t_out >= 1 and not s.temporal:
+        oh1 = s.h + 2 * s.pad - s.k + 1
+        ow1 = s.w + 2 * s.pad - s.k + 1
+        flops = ta.engine_flops(oh1, ow1, s.c_in, s.c_out, s.groups)
+        return flops / (hw.peak_flops * max(p.predicted_util, 0.05))
     oh, ow = s.out_hw
     return analysis.conv_time_s(
         hw, out_h=oh, out_w=ow, c_in=s.c_in, c_out=s.c_out, k=s.k,

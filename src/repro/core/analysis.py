@@ -67,6 +67,43 @@ TPU_V5E = HardwareModel(
 )
 
 
+def calibrated_hw(
+    base: "HardwareModel | None" = None,
+    wisdom_path=None,
+    *,
+    measure: bool = True,
+) -> HardwareModel:
+    """`base` with its compute and memory roofs replaced by the one-shot
+    GEMM/stream microbenchmark (`tune.measure_calibration`, cached in the
+    wisdom file per backend).
+
+    Only the absolute roofs change: `fast_shared_bw` is rescaled to
+    preserve the base model's CMR_fast, so the *structure* of planning
+    (min_r, the R bounds, fusion-group thresholds) is untouched while
+    every absolute time prediction is anchored to this host.  With
+    `measure=False` only a cached calibration is consulted (never pays
+    the microbenchmark) and `base` is returned verbatim when none exists.
+    """
+    from repro.core import tune  # deferred: tune imports this module
+
+    base = base or tune.default_hw()
+    entry = (
+        tune.measure_calibration(wisdom_path)
+        if measure
+        else tune.lookup_calibration(wisdom_path)
+    )
+    if not entry:
+        return base
+    peak = float(entry["peak_flops"])
+    return dataclasses.replace(
+        base,
+        name=base.name + ":calibrated",
+        peak_flops=peak,
+        dram_bw=float(entry["dram_bw"]),
+        fast_shared_bw=peak / base.cmr_fast,
+    )
+
+
 def kernel_matrix_bytes(c_in: int, c_out: int, t: int) -> int:
     """Right-hand matrices: 4 C C' T^2 bytes (the fp32 Winograd case; the
     family-exact figure -- complex pairs over the rfft half-spectrum for
@@ -208,6 +245,35 @@ def fused_cost_ta(
         hw, r, c_in, c_out, ta.t, ta.t_out, ta.alpha, groups
     )
     return ta.flops_per_output_px() / max(u, 1e-9)
+
+
+def engine_cost_ta(
+    hw: HardwareModel, c_in: int, c_out: int, ta, r: int,
+    groups: int = 1, stride: int = 1,
+):
+    """Block-aware fused cost: the parametric tile engine's *actual* MAC
+    count (forward basis GEMM + channel mix + inverse basis GEMM, see
+    `TileAlgebra.engine_macs_per_tile`) per final output pixel, in the
+    same C*C' units as `fused_cost_ta`, at the *tuned* block's R
+    utilisation.  The engine always computes the full stride-1 tile grid
+    and decimates, so strided problems simply have stride^2 fewer final
+    pixels per tile -- the decimation waste falls out of the
+    normalization instead of being bolted on as a separate penalty.
+    Returns None when infeasible (same residency gate as the analytic
+    path)."""
+    if ta.t_out < 1:
+        return None
+    matrix = ta.kernel_matrix_bytes(c_in, c_out, groups)
+    if matrix > MATRIX_RESIDENCY_FRAC * hw.fast_shared_bytes:
+        return None
+    u = predicted_utilization(
+        hw, max(1, r), c_in, c_out, ta.t, ta.t_out, ta.alpha, groups
+    )
+    px_units = (
+        2.0 * ta.engine_macs_per_tile(c_in, c_out, groups) * stride**2
+        / (ta.t_out**2 * c_in * c_out)
+    )
+    return px_units / max(u, 1e-9)
 
 
 def fused_cost(

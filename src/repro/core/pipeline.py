@@ -103,8 +103,55 @@ def fused_tile_conv(
     wt: Optional[jnp.ndarray] = None,
     groups: int = 1,
     epilogue=None,
+    blocks=None,
+    backend: Optional[str] = None,
 ) -> jnp.ndarray:
     """NHWC L3-fused transformed convolution, any transform family.
+
+    Dispatches to the parametric tile engine (`repro.kernels.fused_tile`)
+    whenever the family lowers to a `TileKernelSpec`: the same gather ->
+    forward GEMM -> batched mix -> inverse GEMM -> scatter program either
+    as a Pallas kernel (TPU / interpret) or as the XLA matrix path (CPU).
+    Families without a spec -- and f64 inputs, whose basis matrices would
+    lose precision in f32 -- run the interpreting `scan_tile_conv` below.
+
+    `blocks` (a `kernels.fused_tile.BlockConfig`) carries the autotuned
+    block shape; `r_tiles` alone seeds an unchunked default.  `backend`
+    overrides the engine backend (see `fused_tile.resolve_backend`).
+    """
+    from repro.kernels import fused_tile as _ft  # deferred: jax warm-up
+
+    b = _ft.resolve_backend(backend)
+    if b != "scan" and _ft.engine_supported(transform, x.dtype):
+        try:
+            return _ft.conv2d_fused_tile(
+                x, w, transform,
+                pad=pad,
+                blocks=blocks or _ft.BlockConfig(r=int(r_tiles)),
+                wt=wt, groups=groups, epilogue=epilogue, backend=b,
+            )
+        except _ft.UnsupportedSpec:
+            pass
+    return scan_tile_conv(
+        x, w, transform,
+        pad=pad, r_tiles=r_tiles, wt=wt, groups=groups, epilogue=epilogue,
+    )
+
+
+def scan_tile_conv(
+    x: jnp.ndarray,
+    w: Optional[jnp.ndarray],
+    transform: transforms.Transform,
+    *,
+    pad: int = 0,
+    r_tiles: int = 24,
+    wt: Optional[jnp.ndarray] = None,
+    groups: int = 1,
+    epilogue=None,
+) -> jnp.ndarray:
+    """The interpreting task-scan engine (the oracle the parametric
+    kernel is tested against, and the fallback for families/dtypes it
+    cannot lower).
 
     Tiles are processed in N_task = ceil(N_tile / R) independent tasks;
     each task's intermediates stay in fast private memory while the
@@ -301,9 +348,20 @@ class TransformedAlgorithm(registry.Algorithm):
             hw, r, spec.c_in, spec.c_out, ta.t, ta.t_out, ta.alpha,
             spec.groups,
         )
-        cost = registry.fused_auto_cost(spec, hw, ta, self.r_floor(hw))
+        params = {**params, "r_tiles": int(r)}
+        from repro.core import tune  # deferred: tune times this module
+
+        blocks = tune.lookup_blocks(
+            spec.h, spec.w, spec.c_in, spec.c_out,
+            transform=tr, wisdom_path=wisdom_path,
+        )
+        if blocks is not None:
+            params["blocks"] = blocks.to_wisdom()
+        cost = registry.fused_auto_cost(
+            spec, hw, ta, self.r_floor(hw), blocks=blocks
+        )
         return registry.AlgoPlan(
-            self.name, spec, {**params, "r_tiles": int(r)},
+            self.name, spec, params,
             predicted_util=util, cost=cost, tuned=tuned,
         )
 
@@ -319,6 +377,11 @@ class TransformedAlgorithm(registry.Algorithm):
 
     def _run(self, x, w, wt, plan, epilogue):
         tr = self.make_transform(plan.spec, plan.params)
+        blocks = None
+        if "blocks" in plan.params:
+            from repro.kernels.fused_tile import BlockConfig
+
+            blocks = BlockConfig.from_wisdom(plan.params["blocks"])
         return fused_tile_conv(
             x, w, tr,
             pad=plan.spec.pad,
@@ -326,6 +389,7 @@ class TransformedAlgorithm(registry.Algorithm):
             wt=wt,
             groups=plan.spec.groups,
             epilogue=epilogue,
+            blocks=blocks,
         )
 
     def execute(self, x, w, wt, plan):

@@ -156,17 +156,30 @@ def fused_auto_cost(
     hw: analysis.HardwareModel,
     ta,  # transforms.TileAlgebra
     r_floor: int,
+    blocks=None,  # kernels.fused_tile.BlockConfig from wisdom, or None
 ) -> float:
     """Auto-ranking cost of one fused transform family on `spec`: inf when
     the padded input cannot cover a single T-tile or the roofline deems
-    the family infeasible (`analysis.fused_cost_ta`), else the modeled
-    time per output pixel with the stride^2 decimation waste charged.
+    the family infeasible, else the modeled time per output pixel.
+
+    With a wisdom-resolved block shape (`blocks`), the charge is the tile
+    engine's actual MAC count at the tuned R (`analysis.engine_cost_ta`)
+    -- decimation waste included via the per-final-pixel normalization,
+    so no separate stride^2 penalty is added.  Without wisdom, the old
+    analytic charge (`fused_cost_ta` x stride^2) stands as the fallback.
     Shared by every fused algorithm -- through each family's own
     `TileAlgebra` working-set terms -- so the feasibility gate cannot
     diverge and the planner's auto ranking picks the *transform* per
     layer, not just the algorithm."""
     if spec.padded_min < ta.t:
         return math.inf
+    if blocks is not None:
+        ec = analysis.engine_cost_ta(
+            hw, spec.c_in, spec.c_out, ta, int(blocks.r),
+            spec.groups, spec.stride,
+        )
+        if ec is not None:
+            return ec
     fc = analysis.fused_cost_ta(
         hw, spec.c_in, spec.c_out, ta, r_floor, spec.groups
     )
@@ -186,6 +199,42 @@ def decimate(y: jnp.ndarray, stride: int) -> jnp.ndarray:
 
 
 # -------------------------------------------------------------- Algorithm
+
+
+class ElementwiseOps:
+    """Structured elementwise epilogue: a static op list plus its bias
+    tensors, so fused kernels can fold the glue into their scatter phase
+    instead of closing over arrays.
+
+    `ops` is a tuple of ``("bias", jnp.ndarray(C',))`` and ``("relu",)``
+    entries, applied in order.  Instances are callables ``y -> y`` --
+    drop-in for the plain closures `ChainLink.elementwise` used to carry
+    -- and `kernel_form()` exposes the (static op tags, stacked bias
+    rows) pair the Pallas kernel consumes: arrays enter the kernel as a
+    stationary input, tags stay Python-static.
+    """
+
+    def __init__(self, ops: Sequence[Tuple]):
+        self.ops = tuple(
+            (op[0], op[1]) if op[0] == "bias" else ("relu",) for op in ops
+        )
+
+    def __call__(self, y):
+        for op in self.ops:
+            y = y + op[1] if op[0] == "bias" else jnp.maximum(y, 0.0)
+        return y
+
+    def kernel_form(self):
+        """(static op tuple, (n_bias, C') rows).  Bias entries become
+        ("bias", row_index); rows is None when no biases appear."""
+        tags, rows = [], []
+        for op in self.ops:
+            if op[0] == "bias":
+                tags.append(("bias", len(rows)))
+                rows.append(jnp.asarray(op[1]).reshape(-1))
+            else:
+                tags.append(("relu",))
+        return tuple(tags), (jnp.stack(rows) if rows else None)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -189,6 +189,8 @@ class TileAlgebra:
       domain_points  stored domain elements per tile plane (T^2 Winograd,
                      T*(T/2+1) rfft frequencies)
       elem_bytes     bytes per stored domain element (4 real, 8 complex)
+      planes         real planes per domain element as the tile kernel
+                     stores them (1 real family, 2 complex re/im split)
     """
 
     family: str
@@ -197,6 +199,7 @@ class TileAlgebra:
     alpha: int
     domain_points: int
     elem_bytes: int = 4
+    planes: int = 1
 
     def kernel_matrix_bytes(self, c_in: int, c_out: int, groups: int = 1) -> int:
         """Right-hand (transformed-kernel) matrices' resident footprint."""
@@ -210,6 +213,163 @@ class TileAlgebra:
         """Channel-mix FLOPs per output pixel, in units of C*C'."""
         return self.alpha * 2.0 * self.t * self.t / float(self.t_out**2)
 
+    # ---- block-aware engine pricing -----------------------------------
+    # The parametric tile kernel (kernels.fused_tile) runs every stage as
+    # GEMMs: forward = (planes*S, T^2) basis matrix, mix = S batched
+    # (P*C, P*C') products, inverse = (T'^2, planes*S).  These methods
+    # count the MACs that kernel actually executes -- the terms the
+    # calibrated roofline prices, replacing the mix-only idealization.
+
+    def engine_macs_per_tile(
+        self, c_in: int, c_out: int, groups: int = 1
+    ) -> int:
+        """Real MACs one input tile costs in the parametric tile kernel
+        (forward basis GEMM + channel mix + inverse basis GEMM)."""
+        p, s = self.planes, self.domain_points
+        fwd = p * s * self.t * self.t * c_in
+        mix = s * (p * c_in) * (p * c_out) // groups
+        inv = self.t_out * self.t_out * p * s * c_out
+        return fwd + mix + inv
+
+    def engine_flops(
+        self, out_h: int, out_w: int, c_in: int, c_out: int,
+        groups: int = 1, batch: int = 1,
+    ) -> int:
+        """Total engine FLOPs covering an out_h x out_w output (the
+        stride-1 tile grid -- strided convs decimate afterwards, so the
+        full grid is the honest charge)."""
+        n_tiles = -(-out_h // self.t_out) * (-(-out_w // self.t_out))
+        return (
+            2 * batch * n_tiles
+            * self.engine_macs_per_tile(c_in, c_out, groups)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TileKernelSpec:
+    """One transform family compiled to the parametric tile kernel's
+    matrix form (kernels.fused_tile).
+
+    Every family's forward/inverse basis change is expressed as ONE real
+    matrix acting on flattened (T*T) tiles -- the Kronecker (row (x)
+    column) form -- with complex domains split into stacked re/im row
+    planes.  The kernel then runs the identical gather -> fwd GEMM ->
+    batched mix -> inv GEMM -> scatter program for Winograd and FFT:
+
+      fwd  (planes*s_mix, T*T)      U_plane-major = fwd @ d_flat
+      inv  (t_out*t_out, planes*s_mix)
+      mix  s_mix batched (planes*C, planes*C') real GEMMs against
+           `pack_rhs(wt)` -- the complex product spelled as the
+           [[Wr, Wi], [-Wi, Wr]] real block form when planes == 2.
+
+    Rows of `fwd` (and columns of `inv`) are PLANE-MAJOR: all s_mix
+    re-rows, then all s_mix im-rows.  `pack_rhs` packs the cached
+    family-native transformed kernels into the matching layout.
+    """
+
+    family: str
+    t: int
+    t_out: int
+    k: int
+    planes: int
+    s_mix: int
+    fwd: np.ndarray
+    inv: np.ndarray
+
+    def __post_init__(self):
+        assert self.fwd.shape == (self.planes * self.s_mix, self.t * self.t)
+        assert self.inv.shape == (
+            self.t_out * self.t_out, self.planes * self.s_mix,
+        )
+
+    def pack_rhs(self, wt: jnp.ndarray, groups: int = 1) -> jnp.ndarray:
+        """Family-native transformed kernels -> (s_mix, groups,
+        planes*C/g, planes*C'/g) real mix matrices, group-blocked.
+
+        Winograd wt: (S, C/g, C') real.  FFT wt: (T, F, C/g, C') complex
+        (conjugated in `kernel_transform`); the complex channel mix
+        U @ W becomes the real block form with plane-major channels.
+        """
+        s, g = self.s_mix, groups
+        if self.planes == 1:
+            w3 = wt.reshape(s, wt.shape[-2], wt.shape[-1])
+            cg, c_out = w3.shape[1], w3.shape[2]
+            return (
+                w3.reshape(s, cg, g, c_out // g)
+                .transpose(0, 2, 1, 3)
+                .astype(jnp.float32)
+            )
+        w3 = wt.reshape(s, wt.shape[-2], wt.shape[-1])
+        wr = jnp.real(w3).astype(jnp.float32)
+        wi = jnp.imag(w3).astype(jnp.float32)
+        blk = jnp.concatenate(
+            [
+                jnp.concatenate([wr, wi], axis=-1),
+                jnp.concatenate([-wi, wr], axis=-1),
+            ],
+            axis=-2,
+        )  # (s, 2*C/g, 2*C') plane-major both sides
+        # group-block the columns *within* each plane: blk columns run
+        # (plane, group, cgo) but each group's mix output must be
+        # (plane, cgo) plane-major, matching the left-hand layout
+        cg2, cgo = blk.shape[1], w3.shape[2] // g
+        return (
+            blk.reshape(s, cg2, 2, g, cgo)
+            .transpose(0, 3, 1, 2, 4)
+            .reshape(s, g, cg2, 2 * cgo)
+        )
+
+    def macs_per_tile(self, c_in: int, c_out: int, groups: int = 1) -> int:
+        p, s = self.planes, self.s_mix
+        return (
+            p * s * self.t * self.t * c_in
+            + s * (p * c_in) * (p * c_out) // groups
+            + self.t_out * self.t_out * p * s * c_out
+        )
+
+
+@functools.lru_cache(maxsize=None)
+def _winograd_kernel_spec(m: int, k: int) -> TileKernelSpec:
+    at, _, bt = winograd_matrices(m, k)
+    t = m + k - 1
+    return TileKernelSpec(
+        family="winograd", t=t, t_out=m, k=k, planes=1, s_mix=t * t,
+        fwd=np.kron(bt, bt).astype(np.float32),
+        inv=np.kron(at, at).astype(np.float32),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _fft_kernel_spec(t: int, k: int) -> TileKernelSpec:
+    """rfft2 as explicit DFT GEMMs (the kernel's MXU-friendly spelling).
+
+    Forward: U[x, f] = sum_{i,j} F[x,i] F[f,j] d[i,j] over the rfft
+    half-spectrum f < F = T//2+1.  Inverse (irfft2 + crop, real part
+    only): y[a,b] = Re( sum_{x,f} Grow[a,x] c_f Gcol[b,f] M[x,f] ) with
+    c_f the hermitian doubling weights (1 at DC/Nyquist, 2 elsewhere).
+    The kernel_transform wt already carries the correlation conjugate.
+    """
+    f = fft_num_freqs(t)
+    t_out = t - k + 1
+    ii = np.arange(t)
+    dft = np.exp(-2j * np.pi * np.outer(ii, ii) / t)  # (T, T)
+    kc = np.einsum("xi,fj->xfij", dft, dft[:f]).reshape(t * f, t * t)
+    fwd = np.concatenate([kc.real, kc.imag], axis=0)
+    grow = np.exp(2j * np.pi * np.outer(ii, ii) / t) / t
+    cf = np.full(f, 2.0)
+    cf[0] = 1.0
+    if t % 2 == 0:
+        cf[-1] = 1.0
+    gcol = (np.exp(2j * np.pi * np.outer(ii, ii[:f]) / t) / t) * cf[None, :]
+    kic = np.einsum(
+        "ax,bf->abxf", grow[:t_out], gcol[:t_out]
+    ).reshape(t_out * t_out, t * f)
+    inv = np.concatenate([kic.real, -kic.imag], axis=1)
+    return TileKernelSpec(
+        family="fft", t=t, t_out=t_out, k=k, planes=2, s_mix=t * f,
+        fwd=fwd.astype(np.float32), inv=inv.astype(np.float32),
+    )
+
 
 class Transform:
     """One transform family's basis change, as the tile engine drives it.
@@ -220,12 +380,19 @@ class Transform:
     forward and inverse; inputs outside the family's compute domain (bf16
     for FFT) are lifted in `forward` and restored by the engine after
     assembly.  `algebra` feeds the cost model.
+
+    `kernel_spec` lowers the family to the parametric tile kernel's
+    matrix form (`TileKernelSpec`); families without one (None) fall
+    back to the interpreting scan engine.
     """
 
     family: ClassVar[str] = ""
 
     t: int
     k: int
+
+    def kernel_spec(self) -> "TileKernelSpec | None":
+        return None
 
     @property
     def t_out(self) -> int:
@@ -286,8 +453,11 @@ class WinogradTransform(Transform):
     def algebra(self) -> TileAlgebra:
         return TileAlgebra(
             family=self.family, t=self.t, t_out=self.m, alpha=1,
-            domain_points=self.t * self.t, elem_bytes=4,
+            domain_points=self.t * self.t, elem_bytes=4, planes=1,
         )
+
+    def kernel_spec(self) -> TileKernelSpec:
+        return _winograd_kernel_spec(self.m, self.k)
 
     def _mats(self, dtype):
         at, _, bt = winograd_matrices(self.m, self.k)
@@ -341,7 +511,11 @@ class FFTTransform(Transform):
         return TileAlgebra(
             family=self.family, t=self.t, t_out=self.t_out, alpha=2,
             domain_points=self.t * fft_num_freqs(self.t), elem_bytes=8,
+            planes=2,
         )
+
+    def kernel_spec(self) -> TileKernelSpec:
+        return _fft_kernel_spec(self.t, self.k)
 
     @staticmethod
     def _lift(x):

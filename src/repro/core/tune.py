@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import functools
 import json
+import os
 import pathlib
 import time
 from typing import Optional, Sequence
@@ -34,9 +35,19 @@ import numpy as np
 from repro.core import analysis, transforms
 from repro.core.ioutil import atomic_write_text
 from repro.core.pipeline import fused_tile_conv
+from repro.kernels.fused_tile.blocks import BlockConfig
 
 _DEFAULT_WISDOM = pathlib.Path.home() / ".cache" / "repro_wisdom.json"
 _CANDIDATES = (4, 8, 16, 24, 32, 48)
+_WISDOM_ENV = "REPRO_WISDOM"
+
+
+def _wisdom_path(wisdom_path=None) -> pathlib.Path:
+    """Explicit path > $REPRO_WISDOM (the CI artifact seam) > default."""
+    if wisdom_path is not None:
+        return pathlib.Path(wisdom_path)
+    env = os.environ.get(_WISDOM_ENV)
+    return pathlib.Path(env) if env else _DEFAULT_WISDOM
 
 
 def _resolve_transform(
@@ -71,8 +82,12 @@ def _load(path: pathlib.Path) -> dict:
 # other's entries by age or generation instead of silently shadowing.
 
 
-def _entry_r(value) -> int:
-    return int(value["r"]) if isinstance(value, dict) else int(value)
+def _entry_r(value) -> Optional[int]:
+    """R from a wisdom value; None when the entry carries only other
+    dimensions (e.g. a block shape tuned before any R pass)."""
+    if isinstance(value, dict):
+        return int(value["r"]) if "r" in value else None
+    return int(value)
 
 
 def _entry_gen(value) -> int:
@@ -86,7 +101,7 @@ def _entry_ts(value) -> float:
 def wisdom_generation(wisdom_path: Optional[pathlib.Path] = None) -> int:
     """Highest generation stamped in the wisdom file (0 when empty or
     fully legacy).  Writers stamp `wisdom_generation() + 1`."""
-    path = pathlib.Path(wisdom_path or _DEFAULT_WISDOM)
+    path = _wisdom_path(wisdom_path)
     wisdom = _load_cached(path)
     return max((_entry_gen(v) for v in wisdom.values()), default=0)
 
@@ -99,7 +114,7 @@ def entry_info(
     """Full stamped view of one wisdom entry: {"r", "gen", "ts"}, with
     legacy bare-int entries normalized to gen 0 / ts 0.0.  None when the
     key has never been tuned."""
-    path = pathlib.Path(wisdom_path or _DEFAULT_WISDOM)
+    path = _wisdom_path(wisdom_path)
     wisdom = _load_cached(path)
     key = _key(_resolve_transform(transform, k, m), h, w, c_in, c_out)
     if key not in wisdom:
@@ -191,7 +206,7 @@ def lookup_r(
     older than ``now - max_age_s`` read as absent (legacy unstamped
     entries have ts 0.0 and therefore always expire); with `min_gen`
     set, entries stamped with an older generation read as absent."""
-    path = pathlib.Path(wisdom_path or _DEFAULT_WISDOM)
+    path = _wisdom_path(wisdom_path)
     wisdom = _load_cached(path)
     key = _key(_resolve_transform(transform, k, m), h, w, c_in, c_out)
     if key not in wisdom:
@@ -250,14 +265,220 @@ def tuned_r(
     """Cached best R for this transform family + layer geometry (measures
     on first use)."""
     tr = _resolve_transform(transform, k, m)
-    path = pathlib.Path(wisdom_path or _DEFAULT_WISDOM)
+    path = _wisdom_path(wisdom_path)
     wisdom = _load(path)
     key = _key(tr, h, w, c_in, c_out)
     if key in wisdom:
-        return _entry_r(wisdom[key])
+        hit = _entry_r(wisdom[key])
+        if hit is not None:  # blocks-only entries still need an R pass
+            return hit
     r = measure_r(h, w, c_in, c_out, transform=tr)
     wisdom = _load(path)  # re-read: another tuner may have written meanwhile
     gen = max((_entry_gen(v) for v in wisdom.values()), default=0) + 1
-    wisdom[key] = {"r": int(r), "gen": gen, "ts": time.time()}
+    entry = {"r": int(r), "gen": gen, "ts": time.time()}
+    prev_blocks = _entry_blocks(wisdom.get(key))
+    if prev_blocks is not None:  # merge, don't clobber, the other dimension
+        entry["blocks"] = prev_blocks.to_wisdom()
+    wisdom[key] = entry
     atomic_write_text(path, json.dumps(wisdom, indent=1, sort_keys=True))
     return r
+
+
+# ---------------------------------------------------------------------------
+# Block-shape wisdom for the parametric tile engine (kernels.fused_tile).
+#
+# A tuned entry's "blocks" field serializes a BlockConfig -- tile rows R,
+# tasks-per-program (0 = the matrix path's unchunked sweep) and the mix
+# unroll -- alongside the scan engine's "r".  Both ride the same
+# backend:family:geometry key and the same stamped {gen, ts} envelope, so
+# atomic rewrites and staleness logic treat them as one entry.
+# ---------------------------------------------------------------------------
+
+
+def block_candidates(
+    c_in: int, c_out: int,
+    transform: transforms.Transform,
+    hw: Optional[analysis.HardwareModel] = None,
+) -> list:
+    """Candidate block shapes: feasible R values crossed with the
+    unchunked sweep (tpp=0, the CPU default) and a chunked variant that
+    bounds the transform-domain working set (what wins once the tile
+    population outgrows the shared level)."""
+    cands = []
+    for r in feasible_candidates(
+        c_in, c_out, transform=transform, hw=hw, candidates=(8, 16, 24, 32)
+    ):
+        cands.append(BlockConfig(r=r, tasks_per_program=0))
+        cands.append(BlockConfig(r=r, tasks_per_program=8))
+    return cands
+
+
+def _entry_blocks(value) -> Optional[BlockConfig]:
+    if isinstance(value, dict) and "blocks" in value:
+        return BlockConfig.from_wisdom(value["blocks"])
+    return None
+
+
+def lookup_blocks(
+    h: int, w: int, c_in: int, c_out: int, *, k: int = 3, m: int = 5,
+    transform: Optional[transforms.Transform] = None,
+    wisdom_path: Optional[pathlib.Path] = None,
+) -> Optional[BlockConfig]:
+    """Non-measuring read of the tuned block shape, None when untuned.
+    Like `lookup_r`, this is the dispatch-time path: planning consults it
+    on every auto plan and must never pay a measurement."""
+    path = _wisdom_path(wisdom_path)
+    wisdom = _load_cached(path)
+    key = _key(_resolve_transform(transform, k, m), h, w, c_in, c_out)
+    return _entry_blocks(wisdom.get(key))
+
+
+def measure_blocks(
+    h: int, w: int, c_in: int, c_out: int, *, k: int = 3, m: int = 5,
+    transform: Optional[transforms.Transform] = None,
+    batch: int = 1,
+    candidates: Optional[Sequence[BlockConfig]] = None,
+    reps: int = 3,
+    backend: Optional[str] = None,
+) -> BlockConfig:
+    """Time the parametric tile engine at each candidate block shape on
+    the real geometry; return the fastest.  `backend` overrides the
+    engine backend (e.g. "pallas_interpret" so CPU CI tunes the exact
+    kernel the accelerator runs)."""
+    from repro.kernels import fused_tile as _ft
+
+    tr = _resolve_transform(transform, k, m)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((batch, h, w, c_in)) * 0.1, jnp.float32)
+    wk = jnp.asarray(
+        rng.standard_normal((tr.k, tr.k, c_in, c_out)) * 0.1, jnp.float32
+    )
+    cands = list(candidates or block_candidates(c_in, c_out, tr))
+    best, best_t = cands[0], float("inf")
+    for blocks in cands:
+        fn = jax.jit(
+            functools.partial(
+                _ft.conv2d_fused_tile, transform=tr, pad=1,
+                blocks=blocks, backend=backend,
+            )
+        )
+        try:
+            jax.block_until_ready(fn(x, wk))  # compile
+        except _ft.UnsupportedSpec:
+            continue
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x, wk))
+            ts.append(time.perf_counter() - t0)
+        t = sorted(ts)[len(ts) // 2]
+        if t < best_t:
+            best, best_t = blocks, t
+    return best
+
+
+def tuned_blocks(
+    h: int, w: int, c_in: int, c_out: int, *, k: int = 3, m: int = 5,
+    transform: Optional[transforms.Transform] = None,
+    wisdom_path: Optional[pathlib.Path] = None,
+    backend: Optional[str] = None,
+) -> BlockConfig:
+    """Cached best block shape for this family + geometry (measures on
+    first use).  Merges into the existing stamped entry -- a prior tuned
+    R survives, and a concurrent tuner's writes are re-read before the
+    atomic replace, mirroring `tuned_r`."""
+    tr = _resolve_transform(transform, k, m)
+    path = _wisdom_path(wisdom_path)
+    key = _key(tr, h, w, c_in, c_out)
+    hit = _entry_blocks(_load(path).get(key))
+    if hit is not None:
+        return hit
+    blocks = measure_blocks(
+        h, w, c_in, c_out, transform=tr, backend=backend
+    )
+    wisdom = _load(path)  # re-read: another tuner may have written meanwhile
+    gen = max((_entry_gen(v) for v in wisdom.values()), default=0) + 1
+    prev = wisdom.get(key)
+    prev_r = _entry_r(prev) if prev is not None else None
+    wisdom[key] = {
+        "r": prev_r if prev_r is not None else int(blocks.r),
+        "blocks": blocks.to_wisdom(),
+        "gen": gen,
+        "ts": time.time(),
+    }
+    atomic_write_text(path, json.dumps(wisdom, indent=1, sort_keys=True))
+    return blocks
+
+
+# ---------------------------------------------------------------------------
+# Roofline calibration (one-shot GEMM / stream microbenchmark).
+#
+# The hardcoded paper machines (SKYLAKE_X et al.) describe 18-core AVX512
+# boxes; on the actual host they can be orders of magnitude off, which
+# turns `measured_over_predicted` into noise and poisons fusion-group
+# decisions.  One measured {peak_flops, dram_bw} pair per backend, cached
+# in the wisdom file under "calib:{backend}", anchors every roofline
+# number to the machine the benchmarks actually run on.
+# ---------------------------------------------------------------------------
+
+_CALIB_PREFIX = "calib"
+_CALIB_GEMM_N = 768
+_CALIB_STREAM_MB = 32
+
+
+def _calib_key() -> str:
+    return f"{_CALIB_PREFIX}:{jax.default_backend()}"
+
+
+def _time_best(fn, *args, reps: int = 5) -> float:
+    jax.block_until_ready(fn(*args))  # compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_calibration() -> dict:
+    """Measure achievable {peak_flops, dram_bw} on this host: a dense
+    f32 GEMM for the compute roof, a big-array copy (read + write) for
+    the memory roof.  Seconds to run, cached by `measure_calibration`."""
+    n = _CALIB_GEMM_N
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((n, n)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n, n)) * 0.1, jnp.float32)
+    t_gemm = _time_best(jax.jit(jnp.matmul), a, b)
+    peak = 2.0 * n**3 / t_gemm
+    m = _CALIB_STREAM_MB * 2**20 // 4
+    x = jnp.ones((m,), jnp.float32)
+    t_stream = _time_best(jax.jit(lambda v: v * 1.0001 + 0.5), x)
+    bw = 2.0 * 4 * m / t_stream  # one read + one write per element
+    return {"peak_flops": float(peak), "dram_bw": float(bw)}
+
+
+def lookup_calibration(
+    wisdom_path: Optional[pathlib.Path] = None,
+) -> Optional[dict]:
+    """Cached calibration for the current backend, None when never run."""
+    entry = _load_cached(_wisdom_path(wisdom_path)).get(_calib_key())
+    return dict(entry) if isinstance(entry, dict) else None
+
+
+def measure_calibration(
+    wisdom_path: Optional[pathlib.Path] = None, *, refresh: bool = False,
+) -> dict:
+    """Calibration with wisdom caching: measures once per backend per
+    wisdom file, then serves the stamped cache (refresh=True re-runs)."""
+    path = _wisdom_path(wisdom_path)
+    if not refresh:
+        hit = lookup_calibration(path)
+        if hit is not None:
+            return hit
+    entry = run_calibration()
+    wisdom = _load(path)
+    gen = max((_entry_gen(v) for v in wisdom.values()), default=0) + 1
+    entry = {**entry, "gen": gen, "ts": time.time()}
+    wisdom[_calib_key()] = entry
+    atomic_write_text(path, json.dumps(wisdom, indent=1, sort_keys=True))
+    return entry

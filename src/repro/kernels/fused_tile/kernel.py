@@ -1,0 +1,227 @@
+"""The parametric Pallas tile kernel: one body for every transform family.
+
+Generalizes the retired bespoke Winograd kernel to any `TileKernelSpec`
+(core.transforms): the forward and inverse basis changes enter as *data*
+-- the (planes*S, T^2) and (T'^2, planes*S) Kronecker-form matrices --
+so Winograd, FFT (re/im split planes) and any future family compile to
+the same gather -> fwd GEMM -> batched mix -> inv GEMM -> scatter task
+loop.  The paper-S4.2 shared-buffer aliasing is preserved exactly:
+per-task intermediates live in one VMEM scratch of (S + 1) R-row blocks,
+left-hand matrix s at block s+1, the s-th mix product overwriting block
+s (only left-hand rows already consumed).
+
+Structure per grid step (one program):
+
+  * the input strip is read with `pl.Element` block dims (offset stride
+    T' < extent T -- the overlap-add overlap, never materialized in HBM)
+  * `tasks_per_program` tasks of R tiles run as a static loop, so block
+    autotuning can trade grid size against per-program working set
+  * the S channel-mix GEMMs run under `fori_loop` with `unroll=mix_block`
+  * the epilogue (bias/relu from `ElementwiseOps`) is applied to the
+    task's output tiles before the strip store -- fused stages never
+    round-trip intermediates through HBM for elementwise glue
+
+Right-hand matrices, basis matrices and bias vectors all use constant
+BlockSpec index maps: DMA'd once, VMEM-stationary across the whole grid
+(the paper's "kernel matrices stay hot in shared memory" with residency
+guaranteed rather than hoped for).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import transforms
+
+
+def _apply_ep(y, ep_ops, biases_ref):
+    """Static epilogue op list on (..., C') tiles; biases are rows of the
+    stationary biases input."""
+    for op in ep_ops:
+        if op[0] == "bias":
+            y = y + biases_ref[op[1]]
+        else:  # relu
+            y = jnp.maximum(y, 0.0)
+    return y
+
+
+def _kernel_body(
+    x_ref, rhs_ref, kf_ref, ki_ref, biases_ref, o_ref, sb_ref,
+    *,
+    spec: transforms.TileKernelSpec,
+    c_in: int,
+    c_out: int,
+    groups: int,
+    r: int,
+    tasks_per_program: int,
+    mix_block: int,
+    ep_ops: tuple,
+):
+    t, t_out, p, s = spec.t, spec.t_out, spec.planes, spec.s_mix
+    cgi, cgo = c_in // groups, c_out // groups
+    kf = kf_ref[...]  # (P*S, T*T) forward basis
+    ki = ki_ref[...]  # (T'^2, P*S) inverse basis
+
+    strip = x_ref[0].astype(jnp.float32)  # (T, tpp*R*T' + K - 1, C)
+
+    for task in range(tasks_per_program):
+        base = task * r * t_out
+
+        # -- step 1: forward-transform R tiles in ONE basis GEMM; scatter
+        # rows into the shared buffer as left-hand matrices (blocks
+        # 1 .. S).  Tiles are static slices of the strip (stride T',
+        # extent T); the flattened (T^2, R*C) stack feeds the MXU.
+        cols = [
+            strip[:, base + i * t_out : base + i * t_out + t, :].reshape(
+                t * t, c_in
+            )
+            for i in range(r)
+        ]
+        d = jnp.concatenate(cols, axis=1)  # (T^2, R*C)
+        u = jax.lax.dot_general(
+            kf, d, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (P*S, R*C)
+        # plane-major rows -> per-point left-hand matrices (R, g, P*Cg)
+        lhs = (
+            u.reshape(p, s, r, groups, cgi)
+            .transpose(1, 2, 3, 0, 4)
+            .reshape(s, r, groups * p * cgi)
+        )
+        sb_ref[1:, :, : p * c_in] = lhs
+
+        # -- step 2: S channel-mix GEMMs against the stationary
+        # right-hand matrices; result s lands on block s (the rows of
+        # left-hand matrix s-1, already consumed -- shared-buffer
+        # aliasing, paper S4.2).
+        def mm(s_idx, _):
+            lh = sb_ref[s_idx + 1, :, : p * c_in].reshape(
+                r, groups, p * cgi
+            )
+            outs = [
+                jax.lax.dot_general(
+                    lh[:, gi],
+                    rhs_ref[s_idx, gi],
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
+                for gi in range(groups)
+            ]
+            res = (
+                outs[0]
+                if groups == 1
+                else jnp.stack(outs, axis=1).reshape(r, groups * p * cgo)
+            )
+            sb_ref[s_idx, :, : p * c_out] = res
+            return 0
+
+        jax.lax.fori_loop(0, s, mm, 0, unroll=max(1, mix_block))
+
+        # -- step 3: inverse-transform all R results in ONE basis GEMM;
+        # epilogue on task-resident tiles; write the output strip slice.
+        z = (
+            sb_ref[:s, :, : p * c_out]
+            .reshape(s, r, groups, p, cgo)
+            .transpose(3, 0, 1, 2, 4)
+            .reshape(p * s, r * c_out)
+        )
+        y = jax.lax.dot_general(
+            ki, z, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (T'^2, R*C')
+        yt = y.reshape(t_out, t_out, r, c_out)
+        yt = _apply_ep(yt, ep_ops, biases_ref)
+        # (T', T', R, C') -> (T', R*T', C')
+        o_ref[0, :, base : base + r * t_out, :] = (
+            yt.transpose(0, 2, 1, 3)
+            .reshape(t_out, r * t_out, c_out)
+            .astype(o_ref.dtype)
+        )
+
+
+def fused_tile_call(
+    xp: jnp.ndarray,
+    rhs: jnp.ndarray,
+    biases: jnp.ndarray,
+    *,
+    spec: transforms.TileKernelSpec,
+    n_tiles_h: int,
+    n_tiles_w: int,
+    r: int,
+    tasks_per_program: int = 1,
+    mix_block: int = 8,
+    groups: int = 1,
+    ep_ops: tuple = (),
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Invoke the parametric fused kernel.
+
+    xp:  (B, H_pad, W_pad, C) pre-padded input, H_pad = nH*T' + K - 1,
+         W_pad = nW*T' + K - 1, nW divisible by r*tasks_per_program.
+    rhs: (S, g, P*C/g, P*C'/g) packed right-hand matrices
+         (`TileKernelSpec.pack_rhs`).
+    biases: (n_bias, C') rows referenced by ("bias", idx) epilogue ops
+         (pass shape (1, C') zeros when unused).
+    returns: (B, nH*T', nW*T', C') assembled output tiles.
+    """
+    b, h_pad, w_pad, c_in = xp.shape
+    t, t_out, p, s = spec.t, spec.t_out, spec.planes, spec.s_mix
+    c_out = rhs.shape[1] * rhs.shape[3] // p
+    tpp = max(1, tasks_per_program)
+    assert n_tiles_w % (r * tpp) == 0, (n_tiles_w, r, tpp)
+    assert h_pad == n_tiles_h * t_out + spec.k - 1, (h_pad, n_tiles_h)
+    assert w_pad == n_tiles_w * t_out + spec.k - 1, (w_pad, n_tiles_w)
+    n_col_blocks = n_tiles_w // (r * tpp)
+
+    kf = jnp.asarray(spec.fwd)
+    ki = jnp.asarray(spec.inv)
+
+    body = functools.partial(
+        _kernel_body,
+        spec=spec, c_in=c_in, c_out=c_out, groups=groups, r=r,
+        tasks_per_program=tpp, mix_block=mix_block, ep_ops=tuple(ep_ops),
+    )
+    strip_w = tpp * r * t_out + spec.k - 1
+    # element-indexed strip: offset stride T' < extent T (the OLA
+    # overlap); see kernels.fused_winograd history for the fallback
+    if hasattr(pl, "Element"):
+        strip_spec = pl.BlockSpec(
+            (1, pl.Element(t), pl.Element(strip_w), c_in),
+            lambda bi, i, j: (bi, i * t_out, j * (tpp * r * t_out), 0),
+        )
+    else:
+        strip_spec = pl.BlockSpec(
+            (1, t, strip_w, c_in),
+            lambda bi, i, j: (bi, i * t_out, j * (tpp * r * t_out), 0),
+            indexing_mode=pl.unblocked,
+        )
+    const = lambda *shape: pl.BlockSpec(  # noqa: E731
+        shape, lambda bi, i, j: (0,) * len(shape)
+    )
+    return pl.pallas_call(
+        body,
+        grid=(b, n_tiles_h, n_col_blocks),
+        in_specs=[
+            strip_spec,
+            const(*rhs.shape),  # stationary right-hand matrices
+            const(p * s, t * t),  # forward basis
+            const(t_out * t_out, p * s),  # inverse basis
+            const(*biases.shape),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, t_out, tpp * r * t_out, c_out),
+            lambda bi, i, j: (bi, i, j, 0),
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (b, n_tiles_h * t_out, n_tiles_w * t_out, c_out), xp.dtype
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((s + 1, r, p * max(c_in, c_out)), jnp.float32)
+        ],
+        interpret=interpret,
+    )(xp, rhs, kf, ki, biases)

@@ -1,25 +1,25 @@
-"""Jitted public wrapper around the fused Winograd Pallas kernel."""
+"""The fused Winograd Pallas kernel, as a thin instantiation.
+
+The bespoke kernel this package used to carry is retired: the parametric
+tile engine (`repro.kernels.fused_tile`) runs the identical gather ->
+forward GEMM -> batched mix -> inverse GEMM -> scatter program for every
+transform family, so the Winograd Pallas path is now `conv2d_fused_tile`
+driven by a `WinogradTransform` with the Kronecker-form basis matrices.
+`conv2d_fused_pallas` keeps its historical signature for direct users;
+see the README migration note.
+"""
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import registry, tiling, transforms
+from repro.core import registry, transforms
 from repro.core.fused import L3FusedAlgorithm
-from repro.kernels.fused_winograd.kernel import fused_winograd_call
-
-
-def _extended_plan(plan: tiling.TilePlan, r: int) -> tiling.TilePlan:
-    """Extend the tile grid so n_tiles_w is a multiple of R (task width)."""
-    n_tw = -(-plan.n_tiles_w // r) * r
-    return dataclasses.replace(
-        plan, n_tiles_w=n_tw, w_pad=n_tw * plan.t_out + plan.k - 1
-    )
+from repro.kernels.fused_tile import BlockConfig, conv2d_fused_tile
 
 
 @functools.partial(
@@ -35,52 +35,29 @@ def conv2d_fused_pallas(
     groups: int = 1,
     interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """NHWC (B,H,W,C) x HWIO (K,K,C/g,C') -> NHWC, via the Pallas fused kernel.
+    """NHWC (B,H,W,C) x HWIO (K,K,C/g,C') -> NHWC, via the parametric
+    fused tile kernel instantiated with the Winograd transform.
 
-    interpret=None auto-selects: real lowering on TPU, interpreter elsewhere.
-    Grouped convolutions run the kernel once per group over the group's
-    channel slices (the kernel itself computes a dense channel mix).
+    interpret=None auto-selects: real lowering on TPU, interpreter
+    elsewhere.  Grouped convolutions run block-diagonal inside the one
+    kernel (no per-group dispatch).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    if groups > 1:
-        cg_in = x.shape[3] // groups
-        cg_out = w.shape[3] // groups
-        run = functools.partial(
-            conv2d_fused_pallas,
-            pad=pad, m=m, r_tiles=r_tiles, groups=1, interpret=interpret,
-        )
-        return jnp.concatenate(
-            [
-                run(
-                    x[..., g * cg_in : (g + 1) * cg_in],
-                    w[..., g * cg_out : (g + 1) * cg_out],
-                )
-                for g in range(groups)
-            ],
-            axis=-1,
-        )
-    tr = transforms.WinogradTransform(m=m if m is not None else 5, k=w.shape[0])
-    plan = tiling.TilePlan.build(x.shape[1], x.shape[2], tr.k, pad, tr.t)
-    r = min(r_tiles, plan.n_tiles_w)
-    plan = _extended_plan(plan, r)
-    xp = tiling.pad_input(x, plan)
-    wt = tr.kernel_transform(w)
-    y = fused_winograd_call(
-        xp,
-        wt,
-        m=tr.m,
-        k=tr.k,
-        n_tiles_h=plan.n_tiles_h,
-        n_tiles_w=plan.n_tiles_w,
-        r=r,
-        interpret=interpret,
+    tr = transforms.WinogradTransform(
+        m=m if m is not None else 5, k=w.shape[0]
     )
-    return y[:, : plan.h_out, : plan.w_out, :]
+    return conv2d_fused_tile(
+        x, w, tr,
+        pad=pad,
+        blocks=BlockConfig(r=int(r_tiles), tasks_per_program=1),
+        groups=groups,
+        backend="pallas_interpret" if interpret else "pallas",
+    )
 
 
 class L3FusedPallasAlgorithm(L3FusedAlgorithm):
-    """The hand-written Pallas TPU kernel as a registry algorithm.
+    """The Pallas instantiation of the tile engine as a registry algorithm.
 
     Shares the Winograd family's plan step (same transform, same
     family-keyed wisdom R: a tuned R for l3_fused is the best available
@@ -113,8 +90,29 @@ class L3FusedPallasAlgorithm(L3FusedAlgorithm):
         return registry.decimate(y, plan.spec.stride)
 
     def fuse_epilogue(self, plan, epilogue):
-        # the kernel's task loop is hand-written: elementwise glue runs on
-        # the assembled output rather than in-scan (base Algorithm path)
+        # structured glue folds into the kernel's scatter phase through
+        # the engine; opaque callables post-pass (base Algorithm path)
+        if isinstance(epilogue, registry.ElementwiseOps):
+            tr = transforms.WinogradTransform(
+                m=int(plan.params.get("m") or 5), k=plan.spec.k
+            )
+            interpret = jax.default_backend() != "tpu"
+
+            def run(x, w, wt):
+                y = conv2d_fused_tile(
+                    x, w, tr,
+                    pad=plan.spec.pad,
+                    blocks=BlockConfig(
+                        r=int(plan.params.get("r_tiles", 16)),
+                        tasks_per_program=1,
+                    ),
+                    groups=plan.spec.groups,
+                    epilogue=epilogue,
+                    backend="pallas_interpret" if interpret else "pallas",
+                )
+                return registry.decimate(y, plan.spec.stride)
+
+            return run
         return registry.Algorithm.fuse_epilogue(self, plan, epilogue)
 
 

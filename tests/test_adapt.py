@@ -63,7 +63,7 @@ def _runtime(cfg=None, *, clock=None, n=1):
 
 
 def _probe(engine, fused_factor=10.0, single_factor=1.0,
-           direct_factor=100.0):
+           direct_factor=1000.0):
     """Fake stage-timing probe: each stage 'measures' at its roofline
     prediction scaled by a per-kind factor -- a fused_factor of 10 seeds
     the store with a grossly mispredicting fused plan without depending

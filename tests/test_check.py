@@ -610,6 +610,33 @@ def test_rules_wt_to_non_consuming_algo(tmp_path):
     assert "direct" in cvk311[0].message
 
 
+def test_rules_ban_pallas_call_outside_kernels(tmp_path):
+    _write(tmp_path, "core/rogue.py", """\
+        import jax.experimental.pallas as pl
+
+        def launch(kern, x):
+            return pl.pallas_call(kern, out_shape=x)(x)
+        """)
+    _write(tmp_path, "convserve/sneaky.py", """\
+        from jax.experimental.pallas import pallas_call as pc
+
+        def launch(kern, x):
+            return pc(kern, out_shape=x)(x)
+        """)
+    # the kernel package is where launches belong
+    _write(tmp_path, "kernels/fused_tile/kernel.py", """\
+        import jax.experimental.pallas as pl
+
+        def launch(kern, x):
+            return pl.pallas_call(kern, out_shape=x)(x)
+        """)
+    rep = analyze_rules([tmp_path])
+    cvk320 = [d for d in rep.errors if d.code == "CVK320"]
+    assert len(cvk320) == 2
+    assert all("kernels" not in d.loc for d in cvk320)
+    assert all("tile engine" in d.message for d in cvk320)
+
+
 def test_rules_warn_on_unparseable(tmp_path):
     f = _write(tmp_path, "broken.py", "class (:\n")
     rep = analyze_rules([f])
