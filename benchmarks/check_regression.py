@@ -39,6 +39,7 @@ BASELINE_DIR = pathlib.Path(__file__).resolve().parent / "baselines"
 DEFAULT_THROUGHPUT_TOL = 0.6  # fail below 40% of baseline throughput
 DEFAULT_P95_TOL = 2.0  # fail above 3x baseline p95
 DEFAULT_STAGE_TOL = 2.0  # fail above 3x baseline per-stage us
+DEFAULT_TRACE_TOL = 0.5  # traced run must keep >= 50% of untraced rps
 
 
 def baseline_path(smoke: bool) -> pathlib.Path:
@@ -90,6 +91,34 @@ def compare_stages(current: dict, baseline: dict, *, tol: float) -> list:
                     f"{net}/{label}: stage {cur_us:.0f} us > ceiling "
                     f"{ceil_us:.0f} (baseline {base_us:.0f}, tol {tol:.0%})"
                 )
+    return findings
+
+
+def compare_overhead(bench: dict, *, tol: float) -> list:
+    """Tracing-overhead findings (empty = pass).  Self-contained within
+    one artifact: the serve bench replays the same seeded trace with the
+    recorder on (``traced`` entry) and off (``fused``), so the gate
+    needs no committed baseline -- the recorder-on run must keep at
+    least ``(1 - tol) x`` the recorder-off throughput."""
+    findings = []
+    for net, entry in bench.get("nets", {}).items():
+        traced = entry.get("traced") if isinstance(entry, dict) else None
+        overhead = (traced or {}).get("tracing_overhead")
+        if not overhead or overhead.get("ratio") is None:
+            continue
+        floor = 1.0 - tol
+        print(
+            f"check_regression: {net}: traced throughput "
+            f"{overhead['traced_rps']:.1f} rps vs untraced "
+            f"{overhead['untraced_rps']:.1f} "
+            f"(ratio {overhead['ratio']:.2f}, floor {floor:.2f})"
+        )
+        if overhead["ratio"] < floor:
+            findings.append(
+                f"{net}: tracing overhead: traced run kept only "
+                f"{overhead['ratio']:.0%} of untraced throughput "
+                f"(floor {floor:.0%})"
+            )
     return findings
 
 
@@ -148,6 +177,7 @@ def main(argv=None) -> int:
                     default=DEFAULT_THROUGHPUT_TOL)
     ap.add_argument("--tol-p95", type=float, default=DEFAULT_P95_TOL)
     ap.add_argument("--tol-stage", type=float, default=DEFAULT_STAGE_TOL)
+    ap.add_argument("--tol-trace", type=float, default=DEFAULT_TRACE_TOL)
     ap.add_argument("--convserve-bench", default=None, metavar="PATH",
                     help="convserve bench artifact for the per-stage gate "
                          "(default BENCH_convserve.json; skipped if absent)")
@@ -178,6 +208,10 @@ def main(argv=None) -> int:
             cs_bench = None  # artifact from the other mode: not comparable
     cur_stages = extract_stages(cs_bench) if cs_bench else {}
 
+    # baseline-free gate: traced vs untraced throughput within this
+    # very artifact (the recorder-on A/B the serve bench replays)
+    overhead_findings = compare_overhead(bench, tol=args.tol_trace)
+
     path = baseline_path(args.smoke)
     st_path = stage_baseline_path(args.smoke)
     if args.update:
@@ -198,11 +232,15 @@ def main(argv=None) -> int:
         return 0
     if not path.exists():
         print(f"check_regression: no committed baseline at {path} -- "
-              f"nothing to check")
+              f"only the self-contained tracing-overhead gate applies")
+        if overhead_findings:
+            for f in overhead_findings:
+                print(f"REGRESSION: {f}")
+            return 1
         return 0
     baseline = json.loads(path.read_text())
 
-    findings = compare(
+    findings = overhead_findings + compare(
         current, baseline["nets"],
         tput_tol=args.tol_throughput, p95_tol=args.tol_p95,
     )

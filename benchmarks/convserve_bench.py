@@ -41,6 +41,7 @@ from repro.configs.convnets import (
     vgg_mixed_channel,
 )
 from repro.convserve import Engine, init_weights, run_direct
+from repro.convserve.obs import roofline as roofline_mod
 from repro.convserve.planner import predict_stage_times
 from repro.core import analysis, transforms, tune
 
@@ -70,8 +71,9 @@ def profile_stage_rows(net, x, hw) -> list:
     like with like."""
     batch = int(x.shape[0])
     predicted = dict(predict_stage_times(net.program, hw))
+    profile = list(net.profile_stages(x))
     rows = []
-    for label, secs in net.profile_stages(x):
+    for label, secs in profile:
         pred = predicted[label] * batch
         rows.append(
             {
@@ -83,7 +85,7 @@ def profile_stage_rows(net, x, hw) -> list:
                 ),
             }
         )
-    return rows
+    return rows, profile
 
 
 def bench_net(spec, batch: int, side: int, c_in: int, record: dict) -> None:
@@ -133,7 +135,7 @@ def bench_net(spec, batch: int, side: int, c_in: int, record: dict) -> None:
         )
     )
 
-    stages = profile_stage_rows(net, x, engine.hw)
+    stages, profile = profile_stage_rows(net, x, engine.hw)
     for st in stages:
         print(
             row(
@@ -153,6 +155,9 @@ def bench_net(spec, batch: int, side: int, c_in: int, record: dict) -> None:
         "unfused_warm_us": t_unfused * 1e6,
         "direct_us": t_dir * 1e6,
         "stages": stages,
+        "roofline": roofline_mod.roofline_section(
+            net.program, profile, engine.hw, batch=batch
+        ),
         "cache": net.cache.stats(),
     }
 
@@ -220,7 +225,7 @@ def bench_fft_net(
     print(row(f"convserve/{spec.name}/direct", t_dir * 1e6))
     print(row(f"convserve/{spec.name}/fused_vs_direct", 0.0,
               f"rel{rel_fused:.2e}"))
-    stages = profile_stage_rows(fused, x, engine.hw)
+    stages, profile = profile_stage_rows(fused, x, engine.hw)
     for st in stages:
         print(
             row(
@@ -238,6 +243,9 @@ def bench_fft_net(
         "fused_vs_direct_rel": rel_fused,
         "fused_vs_unfused_rel": rel_pair,
         "stages": stages,
+        "roofline": roofline_mod.roofline_section(
+            fused.program, profile, engine.hw, batch=batch
+        ),
         "cache": fused.cache.stats(),
     }
 
@@ -299,6 +307,7 @@ def main(batch: int = 2, side: int = 64, smoke: bool = False) -> None:
             json.dumps(
                 {
                     "bench": "convserve",
+                    "schema_version": roofline_mod.SCHEMA_VERSION,
                     "smoke": smoke,
                     "calibration": {
                         "hw": hw.name,

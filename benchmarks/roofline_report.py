@@ -1,43 +1,158 @@
-"""Render the roofline table from results/dryrun/*.json (deliverable g)."""
+"""Live roofline-attribution report: measured stages vs their ceilings.
+
+Renders the per-stage hierarchical-roofline table (achieved GFLOP/s,
+binding level, fraction of roof, verdict, per-phase split for fused
+stages) from any of the three artifact forms the stack emits:
+
+  * a BENCH JSON carrying ``roofline`` sections (``BENCH_convserve.json``
+    per net, ``BENCH_serve_runtime.json`` per net/variant),
+  * a Chrome-trace ``.trace.json`` carrying ``roofline.stage`` instants
+    (written by the serving runtime / FlightRecorder),
+  * the legacy ``results/dryrun/*.json`` cells (``--dryrun``).
+
+    PYTHONPATH=src python -m benchmarks.roofline_report
+    PYTHONPATH=src python -m benchmarks.roofline_report --trace x.trace.json
+"""
 
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
 
+from repro.convserve.obs.export import roofline_table
 
-def load(dirpath="results/dryrun"):
-    recs = []
-    for p in sorted(pathlib.Path(dirpath).glob("*.json")):
-        recs.append(json.loads(p.read_text()))
-    return recs
+DEFAULT_BENCHES = ("BENCH_convserve.json", "BENCH_serve_runtime.json")
 
 
-def main(dirpath="results/dryrun"):
-    recs = load(dirpath)
+def sections_from_bench(doc: dict, label: str) -> list:
+    """Every ``roofline`` section in a bench artifact, with its scope
+    name: ``[(scope, hw_name, rows), ...]``."""
+    out = []
+
+    def visit(node, scope):
+        if not isinstance(node, dict):
+            return
+        rf = node.get("roofline")
+        if isinstance(rf, dict) and "stages" in rf:
+            out.append((scope, rf.get("hw", {}).get("name", ""), rf["stages"]))
+        for key, child in node.items():
+            if key != "roofline" and isinstance(child, dict):
+                visit(child, f"{scope}/{key}")
+
+    visit(doc, label)
+    return out
+
+
+def sections_from_trace(events, label: str) -> list:
+    """The ``roofline.stage`` instants of an exported Chrome trace,
+    regrouped into one table (per-phase splits live only in the bench
+    form -- instants carry the flat row)."""
+    rows = [
+        e.get("args", {})
+        for e in events
+        if isinstance(e, dict)
+        and e.get("ph") == "i"
+        and e.get("name") == "roofline.stage"
+    ]
+    rows = [r for r in rows if "stage" in r]
+    return [(label, "", rows)] if rows else []
+
+
+def render(sections) -> str:
+    parts = []
+    for scope, hw_name, rows in sections:
+        parts.append(f"== {scope} ==")
+        parts.append(roofline_table(rows, hw_name=hw_name))
+        parts.append("")
+    return "\n".join(parts)
+
+
+def legacy_dryrun_table(dirpath: str) -> str:
+    """The pre-observability dry-run cell table (results/dryrun)."""
+    recs = [
+        json.loads(p.read_text())
+        for p in sorted(pathlib.Path(dirpath).glob("*.json"))
+    ]
     ok = [r for r in recs if r.get("status") == "ok"]
     skipped = [r for r in recs if r.get("status") == "skipped"]
     failed = [r for r in recs if r.get("status") == "error"]
-    print(f"# dry-run cells: {len(ok)} ok, {len(skipped)} skipped, "
-          f"{len(failed)} failed")
-    hdr = (
+    lines = [
+        f"# dry-run cells: {len(ok)} ok, {len(skipped)} skipped, "
+        f"{len(failed)} failed",
         "cell,compile_s,t_compute_s,t_memory_s,t_collective_s,"
-        "bottleneck,useful_ratio,roofline_frac"
-    )
-    print(hdr)
+        "bottleneck,useful_ratio,roofline_frac",
+    ]
     for r in ok:
         rf = r["roofline"]
         cell = f"{r['arch']}|{r['shape']}|{r['mesh']}"
-        print(
+        lines.append(
             f"{cell},{r['compile_s']},{rf['t_compute_s']:.4g},"
             f"{rf['t_memory_s']:.4g},{rf['t_collective_s']:.4g},"
             f"{rf['bottleneck']},{rf['useful_flops_ratio']:.3f},"
             f"{rf['roofline_fraction']:.4f}"
         )
     for r in failed:
-        print(f"{r['arch']}|{r['shape']}|{r['mesh']},FAILED,,,,,,")
+        lines.append(f"{r['arch']}|{r['shape']}|{r['mesh']},FAILED,,,,,,")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--bench", action="append", default=None, metavar="PATH",
+        help="BENCH JSON with roofline sections (repeatable; default: "
+        f"whichever of {', '.join(DEFAULT_BENCHES)} exist)",
+    )
+    ap.add_argument(
+        "--trace", action="append", default=None, metavar="PATH",
+        help="exported .trace.json with roofline.stage instants",
+    )
+    ap.add_argument(
+        "--dryrun", default=None, metavar="DIR",
+        help="legacy results/dryrun cell table instead of live attribution",
+    )
+    ap.add_argument(
+        "--out", default=None, metavar="PATH",
+        help="also write the report here (e.g. ROOFLINE_report.txt)",
+    )
+    args = ap.parse_args(argv)
+
+    if args.dryrun is not None:
+        report = legacy_dryrun_table(args.dryrun)
+        print(report)
+        if args.out:
+            pathlib.Path(args.out).write_text(report + "\n")
+        return 0
+
+    sections = []
+    benches = args.bench
+    if benches is None and args.trace is None:
+        benches = [p for p in DEFAULT_BENCHES if pathlib.Path(p).exists()]
+        # the legacy default: render dry-run cells when they are the
+        # only artifact around (benchmarks.run --only roofline)
+        if not benches and pathlib.Path("results/dryrun").is_dir():
+            print(legacy_dryrun_table("results/dryrun"))
+            return 0
+    for p in benches or ():
+        doc = json.loads(pathlib.Path(p).read_text())
+        sections += sections_from_bench(doc, pathlib.Path(p).stem)
+    for p in args.trace or ():
+        events = json.loads(pathlib.Path(p).read_text())
+        sections += sections_from_trace(events, pathlib.Path(p).name)
+
+    if not sections:
+        print("roofline_report: no roofline sections found (run "
+              "benchmarks.convserve_bench / serve_runtime_bench first, "
+              "or pass --bench/--trace)")
+        return 1
+    report = render(sections)
+    print(report)
+    if args.out:
+        pathlib.Path(args.out).write_text(report + "\n")
+        print(f"# wrote {args.out}")
     return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

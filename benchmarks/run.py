@@ -64,7 +64,9 @@ def main() -> None:
     if want("roofline"):
         from benchmarks import roofline_report
 
-        sections.append(("roofline table (dry-run)", roofline_report.main, ()))
+        sections.append(
+            ("roofline table", roofline_report.main, ([],))
+        )
     if want("convserve"):
         import pathlib
 

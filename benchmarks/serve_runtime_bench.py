@@ -32,6 +32,14 @@ import jax.numpy as jnp
 from benchmarks.common import row
 from repro.configs.convnets import tiny_testnet, vgg_mixed_channel
 from repro.convserve import Engine, init_weights, run_direct
+from repro.convserve.obs import (
+    FlightRecorder,
+    Tracer,
+    roofline_table,
+    validate_chrome_trace,
+    write_trace,
+)
+from repro.convserve.obs.roofline import SCHEMA_VERSION
 from repro.convserve.runtime import (
     ReplicaPool,
     RuntimeConfig,
@@ -43,6 +51,8 @@ from repro.convserve.runtime import (
 from repro.core import analysis
 
 BENCH_PATH = pathlib.Path("BENCH_serve_runtime.json")
+TRACE_PATH = pathlib.Path("serve_smoke.trace.json")
+REPORT_PATH = pathlib.Path("ROOFLINE_report.txt")
 
 
 def _summarize(doc: dict, served: int, makespan_s: float) -> dict:
@@ -71,6 +81,8 @@ def _summarize(doc: dict, served: int, makespan_s: float) -> dict:
         },
         "cache": doc["cache"],
         "stages": doc.get("stages"),
+        "roofline": doc.get("roofline"),
+        "trace": doc.get("trace"),
     }
 
 
@@ -85,6 +97,8 @@ def _run_variant(
     replicas: int,
     input_hw,
     profile_bucket=None,
+    tracer=None,
+    recorder=None,
 ) -> dict:
     """One seeded trace against one compile (fused or unfused) of the
     net: warm the per-bucket programs + kernel cache, replay the trace
@@ -93,7 +107,7 @@ def _run_variant(
     pool = ReplicaPool.build(
         engine, spec, ws, n=replicas, input_hw=input_hw, fuse=fuse
     )
-    rt = ServeRuntime(pool, cfg)
+    rt = ServeRuntime(pool, cfg, tracer=tracer, recorder=recorder)
     try:
         # compile the steady-state programs on every replica and prepare
         # the shared transforms, so the trace measures serving, not jit
@@ -141,6 +155,8 @@ def bench_net(
     record: dict,
     check_outputs: bool = False,
     require_hits: bool = False,
+    trace_path=None,
+    report_path=None,
 ) -> None:
     ws = init_weights(spec, seed=0)
     c0 = spec.conv_layers()[0][1].c_in
@@ -184,7 +200,58 @@ def bench_net(
                 f"hits{r['cache']['hits']};misses{r['cache']['misses']}",
             )
         )
+    if trace_path is not None:
+        _traced_rerun(
+            spec, ws, cfg, trace, images, entry,
+            replicas=replicas, input_hw=input_hw,
+            trace_path=trace_path, report_path=report_path,
+        )
     record[spec.name] = entry
+
+
+def _traced_rerun(
+    spec, ws, cfg, trace, images, entry, *,
+    replicas, input_hw, trace_path, report_path,
+) -> None:
+    """The recorder-on A/B (observability overhead gate): replay the
+    same seeded trace against the fused compile with a full-rate Tracer
+    + FlightRecorder attached, export + validate the Chrome trace, and
+    record traced-vs-untraced throughput so check_regression can gate
+    the tracing overhead inside one artifact."""
+    tracer = Tracer()
+    recorder = FlightRecorder(tracer, path_prefix=None)
+    r = _run_variant(
+        spec, ws, cfg, trace, images,
+        fuse=True, replicas=replicas, input_hw=input_hw,
+        profile_bucket=max(cfg.buckets),
+        tracer=tracer, recorder=recorder,
+    )
+    del r["results"]
+    base_rps = entry["fused"]["throughput_rps"]
+    r["tracing_overhead"] = {
+        "untraced_rps": base_rps,
+        "traced_rps": r["throughput_rps"],
+        "ratio": r["throughput_rps"] / base_rps if base_rps > 0 else None,
+    }
+    r["recorder"] = recorder.stats()
+    entry["traced"] = r
+
+    n = write_trace(tracer, trace_path)
+    problems = validate_chrome_trace(
+        json.loads(pathlib.Path(trace_path).read_text())
+    )
+    assert not problems, f"invalid exported trace: {problems[:5]}"
+    print(row(
+        f"serve_runtime/{spec.name}/traced/throughput", 0.0,
+        f"{r['throughput_rps']:.1f}rps;{n}events;"
+        f"x{r['tracing_overhead']['ratio']:.2f}",
+    ))
+    print(f"# wrote {trace_path} ({n} events, valid)")
+    rf = r.get("roofline")
+    if report_path is not None and rf:
+        report = roofline_table(rf["stages"], hw_name=rf["hw"]["name"])
+        pathlib.Path(report_path).write_text(report + "\n")
+        print(f"# wrote {report_path}")
 
 
 def main(
@@ -209,6 +276,7 @@ def main(
                 spec, cfg=cfg, trace=trace, replicas=replicas,
                 input_hw=(16, 16), record=record,
                 check_outputs=True, require_hits=True,
+                trace_path=TRACE_PATH, report_path=REPORT_PATH,
             )
         else:
             spec = vgg_mixed_channel(3)
@@ -222,6 +290,7 @@ def main(
             bench_net(
                 spec, cfg=cfg, trace=trace, replicas=replicas,
                 input_hw=(64, 64), record=record, require_hits=True,
+                trace_path=TRACE_PATH, report_path=REPORT_PATH,
             )
             # flash-crowd arrivals against a shallow queue: admission
             # control must shed load with reason-coded rejects instead
@@ -247,8 +316,8 @@ def main(
         # when an assert fires mid-run
         BENCH_PATH.write_text(
             json.dumps(
-                {"bench": "serve_runtime", "smoke": smoke, "seed": seed,
-                 "nets": record},
+                {"bench": "serve_runtime", "schema_version": SCHEMA_VERSION,
+                 "smoke": smoke, "seed": seed, "nets": record},
                 indent=1,
                 sort_keys=True,
             )

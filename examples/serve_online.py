@@ -6,6 +6,11 @@ with a 50 ms SLO through the deadline-aware wave scheduler, and prints
 the telemetry document -- throughput, queue/compute/e2e percentiles,
 wave + admission counters, cache reuse.
 
+The flight recorder rides along: every admit/wave/stage lands in a span
+ring, incidents (SLO breach, verification error) dump it immediately,
+and the whole run is written to ``serve_online.trace.json`` on exit --
+open it in Perfetto (https://ui.perfetto.dev) or chrome://tracing.
+
     PYTHONPATH=src python examples/serve_online.py
 """
 
@@ -16,6 +21,12 @@ sys.path.insert(0, "src")
 
 from repro.configs.convnets import tiny_testnet  # noqa: E402
 from repro.convserve import Engine, init_weights  # noqa: E402
+from repro.convserve.obs import (  # noqa: E402
+    FlightRecorder,
+    Tracer,
+    roofline_table,
+    write_trace,
+)
 from repro.convserve.runtime import (  # noqa: E402
     INTERACTIVE,
     STANDARD,
@@ -25,6 +36,8 @@ from repro.convserve.runtime import (  # noqa: E402
     make_images,
     poisson_trace,
 )
+
+TRACE_PATH = "serve_online.trace.json"
 
 
 def main() -> None:
@@ -42,7 +55,9 @@ def main() -> None:
         slo_s={INTERACTIVE: 0.06, STANDARD: 0.20},
         service_est_s=0.005,
     )
-    rt = ServeRuntime(pool, cfg)
+    tracer = Tracer()
+    recorder = FlightRecorder(tracer, path_prefix="serve_online")
+    rt = ServeRuntime(pool, cfg, tracer=tracer, recorder=recorder)
 
     # compile the max_batch program for every (bucket, replica) and
     # prepare the shared kernel transforms, so the trace measures
@@ -67,7 +82,14 @@ def main() -> None:
         {k: doc[k] for k in ("counters", "scheduler", "cache")},
         indent=1, sort_keys=True,
     ))
+    rf = doc.get("roofline")
+    if rf:
+        print(roofline_table(rf["stages"], hw_name=rf["hw"]["name"]))
     rt.shutdown()
+
+    n = write_trace(tracer, TRACE_PATH)
+    print(f"wrote {TRACE_PATH} ({n} events) -- open in Perfetto; "
+          f"recorder trips: {recorder.stats()['trips'] or 'none'}")
 
 
 if __name__ == "__main__":

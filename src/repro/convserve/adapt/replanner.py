@@ -52,6 +52,7 @@ from repro.convserve import planner
 from repro.convserve.adapt.costs import MeasuredCostStore, stage_key
 from repro.convserve.adapt.shadow import ShadowVerifier
 from repro.convserve.adapt.swap import hot_swap
+from repro.convserve.obs.trace import CAT_ADAPT
 from repro.convserve.check.ir import verify_program
 
 IDLE = "idle"
@@ -75,6 +76,13 @@ class AdaptConfig:
     probe_reps: int = 1
     consider_fft: bool = True
     swap_timeout_s: float = 5.0
+    # stale-telemetry guard: a replan trigger whose telemetry stamp has
+    # not advanced since the previous trigger (or whose last mutation is
+    # older than `stale_after_s`) is counted + audited; with
+    # `require_fresh_telemetry` it is also suppressed until fresh
+    # evidence arrives.
+    require_fresh_telemetry: bool = False
+    stale_after_s: Optional[float] = None
 
 
 class AdaptController:
@@ -119,6 +127,8 @@ class AdaptController:
         self.promotions = 0
         self.rollbacks = 0
         self.audit: List[dict] = []
+        self.stale_checks = 0
+        self._last_check_seq = -1
         self._waves_seen = 0
         self._cooldown_until = -float("inf")
         runtime.add_wave_observer(self.on_wave)
@@ -137,6 +147,14 @@ class AdaptController:
         self.audit.append(
             {"t": self._now(), "event": event, "reason": reason, **detail}
         )
+        tracer = getattr(self.runtime, "tracer", None)
+        if tracer is not None:
+            # mirror the audit trail into the trace, so a dumped ring
+            # explains replans/verdicts/swaps on the same timeline as
+            # the waves they affected
+            tracer.instant(
+                f"adapt.{event}", CAT_ADAPT, reason=reason, **detail
+            )
 
     def _inc(self, name: str) -> None:
         self.runtime.telemetry.inc(f"adapt.{name}")
@@ -323,12 +341,48 @@ class AdaptController:
                 f"stage {worst['stage']} measured "
                 f"{worst['divergence']:.2f}x over prediction scale"
             )
+        if self._stale_guard():
+            return None
         self.replans_triggered += 1
         self._inc("replans_triggered")
         self._audit("replan", reason, divergence=worst["divergence"])
         if self._open_shadow() is None:
             return None
         return reason
+
+    def _stale_guard(self) -> bool:
+        """True when a would-be replan must be suppressed because the
+        runtime's telemetry snapshot is stale (seq unchanged since the
+        last trigger, or data older than `stale_after_s`).  Stale
+        triggers are always counted + audited; only
+        `require_fresh_telemetry` turns that into suppression."""
+        telemetry = getattr(self.runtime, "telemetry", None)
+        if telemetry is None:
+            return False
+        stamp = telemetry.stamp()
+        seq_stale = stamp["seq"] == self._last_check_seq
+        age = (
+            self._now() - stamp["t"]
+            if stamp["t"] is not None and self.cfg.stale_after_s is not None
+            else None
+        )
+        age_stale = age is not None and age > self.cfg.stale_after_s
+        if not seq_stale and not age_stale:
+            self._last_check_seq = stamp["seq"]
+            return False
+        self.stale_checks += 1
+        self._inc("stale_snapshot")
+        self._audit(
+            "stale_telemetry",
+            (
+                f"telemetry seq {stamp['seq']} unchanged since last trigger"
+                if seq_stale
+                else f"telemetry age {age:.3f}s > {self.cfg.stale_after_s}s"
+            ),
+            seq=stamp["seq"],
+            blocked=self.cfg.require_fresh_telemetry,
+        )
+        return self.cfg.require_fresh_telemetry
 
     # ------------------------------------------------------- replan
 
@@ -438,6 +492,14 @@ class AdaptController:
 
     def _promote(self) -> None:
         v = self.verifier
+        tracer = getattr(self.runtime, "tracer", None)
+        if tracer is not None and tracer.active:
+            # the candidates were compiled untraced; the promoted
+            # program must keep recording stage/profile spans
+            from repro.convserve.obs.trace import attach
+
+            for net in self.candidate:
+                attach(net, tracer)
         hot_swap(
             self.runtime.pool, self.candidate,
             scheduler=self.runtime.scheduler,
@@ -488,6 +550,7 @@ class AdaptController:
             "shadows_run": self.shadows_run,
             "promotions": self.promotions,
             "rollbacks": self.rollbacks,
+            "stale_checks": self.stale_checks,
             "store_entries": len(self.store),
             "store_scale": self.store.ratio_scale(),
             "divergence": self.divergence(),

@@ -56,6 +56,7 @@ def run_locks(src: Path) -> CheckReport:
         convserve / "runtime",
         convserve / "adapt",
         convserve / "fleet",
+        convserve / "obs",
         convserve / "cache.py",
         # the fleet's fault schedule lives outside convserve but is
         # consulted from replica completion paths: same discipline

@@ -63,6 +63,9 @@ HINTS = {
     "CVK311": "this algorithm does not consume wt=: drop the argument",
     "CVK320": "move the pallas_call into a kernels/ package (or call "
               "the tile engine, repro.kernels.fused_tile)",
+    "CVK330": "mutate metrics through the Telemetry/Tracer API "
+              "(inc/set_gauge/observe, begin/end/instant) -- direct "
+              "store pokes skip the lock and the freshness stamp",
 }
 
 

@@ -34,6 +34,12 @@ The built-in rules encode two conventions the runtime depends on:
   algorithm that does not consume pre-transformed weights (CVK311: the
   argument would be silently meaningless — the registry raises at
   runtime, the rule catches it statically when ``algo=`` is a literal).
+
+  *telemetry discipline* — counters, gauges and spans mutate only
+  through the `Telemetry`/`Tracer` API (CVK330).  A direct dict poke at
+  the stores outside `runtime/telemetry.py` and `obs/` skips the lock
+  AND the freshness stamp that the autoscaler's and adapt controller's
+  stale-snapshot guards depend on.
 """
 
 from __future__ import annotations
@@ -316,11 +322,109 @@ class WtToNonConsumerRule(Rule):
                 )
 
 
+class TelemetryDisciplineRule(Rule):
+    """CVK330: counters, gauges and spans mutate only through the
+    `Telemetry`/`Tracer` API.  An ad-hoc poke at the metric stores
+    (``telemetry._counters[...] = ...``, ``tracer._events.append(...)``,
+    a ``telemetry.counters`` dict write) outside ``runtime/telemetry.py``
+    and ``obs/`` bypasses both the lock and the freshness stamp -- the
+    mutation is invisible to the stale-snapshot guards downstream, so
+    the autoscaler/adapt controller would act on data that looks stale
+    (or, worse, looks fresh) for the wrong reason."""
+
+    code = "CVK330"
+    name = "telemetry-discipline"
+
+    # attrs that ARE the stores (Telemetry internals)
+    STORES = ("_counters", "_gauges", "_hists")
+    # attrs that are only suspicious when the owner expression names the
+    # registry ("telemetry"/"tracer"): `pool._events` is a legit event
+    # heap, `tracer._events` is the span ring buffer
+    LOOSE = ("counters", "gauges", "_events")
+    MUTATORS = ("setdefault", "update", "pop", "popitem", "clear",
+                "append", "appendleft", "extend")
+
+    # files that own the stores: mutation is the point there
+    ALLOW_SUFFIXES = ("runtime/telemetry.py",)
+    ALLOW_PARTS = ("/obs/",)
+
+    def _allowlisted(self, path: str) -> bool:
+        posix = Path(path).as_posix()
+        return (
+            any(posix.endswith(s) for s in self.ALLOW_SUFFIXES)
+            or any(p in posix for p in self.ALLOW_PARTS)
+        )
+
+    def _store_attr(self, node) -> Optional[str]:
+        """The store name if `node` is an Attribute reading one."""
+        if not isinstance(node, ast.Attribute):
+            return None
+        if node.attr in self.STORES:
+            return node.attr
+        if node.attr in self.LOOSE:
+            try:
+                owner = ast.unparse(node.value).lower()
+            except Exception:  # pragma: no cover - unparse is total on ast
+                return None
+            if "telemetry" in owner or "tracer" in owner:
+                return node.attr
+        return None
+
+    def _flag(self, report: CheckReport, ctx: FileContext, lineno: int,
+              store: str, what: str) -> None:
+        report.add(
+            Diagnostic(
+                code=self.code,
+                message=f"{what} of telemetry store {store!r}: mutate "
+                "through the Telemetry/Tracer API (inc/set_gauge/"
+                "observe, begin/end/instant) so the lock and the "
+                "freshness stamp see it",
+                loc=f"{ctx.path}:{lineno}",
+            )
+        )
+
+    def check(self, ctx: FileContext, report: CheckReport) -> None:
+        if self._allowlisted(ctx.path):
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = (
+                    node.targets if isinstance(node, ast.Assign)
+                    else [node.target]
+                )
+                for t in targets:
+                    if isinstance(t, ast.Subscript):
+                        store = self._store_attr(t.value)
+                        if store:
+                            self._flag(report, ctx, node.lineno,
+                                       store, "item write")
+                    elif isinstance(t, ast.Attribute):
+                        store = self._store_attr(t)
+                        if store:
+                            self._flag(report, ctx, node.lineno,
+                                       store, "rebind")
+            elif isinstance(node, ast.Delete):
+                for t in node.targets:
+                    if (isinstance(t, ast.Subscript)
+                            and self._store_attr(t.value)):
+                        self._flag(report, ctx, node.lineno,
+                                   self._store_attr(t.value), "item delete")
+            elif isinstance(node, ast.Call):
+                func = node.func
+                if (isinstance(func, ast.Attribute)
+                        and func.attr in self.MUTATORS):
+                    store = self._store_attr(func.value)
+                    if store:
+                        self._flag(report, ctx, node.lineno, store,
+                                   f"{func.attr}() call")
+
+
 DEFAULT_RULES: List[Rule] = [
     DirectTimeRule(),
     PallasCallOutsideKernelsRule(),
     SupportsBeforeExecuteRule(),
     WtToNonConsumerRule(),
+    TelemetryDisciplineRule(),
 ]
 
 

@@ -95,11 +95,13 @@ class Engine:
         cache: Optional[KernelCache] = None,
         dtype=jnp.float32,
         clock: Optional[Clock] = None,
+        tracer=None,
     ):
         self.hw = hw or tune_mod.default_hw()
         self.cache = cache if cache is not None else KernelCache()
         self.dtype = jnp.dtype(dtype)
         self.clock = clock  # threaded into every executor (None = real)
+        self.tracer = tracer  # likewise (None = NULL_TRACER)
         self.nets_compiled = 0
 
     def compile(
@@ -163,7 +165,7 @@ class Engine:
                 print(report.format())
         executor = NetExecutor(
             spec, weights, plan, cache=self.cache, dtype=self.dtype,
-            clock=self.clock,
+            clock=self.clock, tracer=self.tracer,
         )
         self.nets_compiled += 1
         return CompiledNet(

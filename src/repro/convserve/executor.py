@@ -37,6 +37,12 @@ import jax.numpy as jnp
 from repro.core import registry
 from repro.convserve.cache import KernelCache, weights_fingerprint
 from repro.convserve.graph import NetSpec
+from repro.convserve.obs.trace import (
+    CAT_PROFILE,
+    CAT_STAGE,
+    NULL_TRACER,
+    capture_tile_phases,
+)
 from repro.convserve.runtime.clock import Clock, RealClock
 from repro.convserve.plan import NetPlan
 from repro.convserve.program import EpilogueOp, ExecProgram, Stage, lower
@@ -112,6 +118,7 @@ class NetExecutor:
         cache: Optional[KernelCache] = None,
         dtype=jnp.float32,
         clock: Optional[Clock] = None,
+        tracer=None,
     ):
         missing = [i for i, _ in spec.param_layers() if i not in weights]
         if missing:
@@ -124,6 +131,7 @@ class NetExecutor:
         self.dtype = jnp.dtype(dtype)
         self.cache = cache if cache is not None else KernelCache()
         self.clock = clock or RealClock()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.weights = {i: jnp.asarray(w, dtype) for i, w in weights.items()}
         # hash once here, not per request: the fingerprint keys the cache
         # to these parameter values (shared caches stay collision-free)
@@ -337,21 +345,35 @@ class NetExecutor:
             x = ext0.mask(x)
         x = jax.block_until_ready(x)
         rows: List[Tuple[str, float]] = []
-        for stage in self.program.stages:
-            run = self._run_fused if stage.fused else self._run_single
+        tr = self.tracer
+        with tr.span(
+            "profile_stages", CAT_PROFILE,
+            net=self.plan.net, bucket=b_h, batch=int(x.shape[0]),
+        ):
+            for stage in self.program.stages:
+                run = self._run_fused if stage.fused else self._run_single
 
-            def step(x, ws, wts, hs, ws_cols, _run=run, _stage=stage):
-                y, ext = _run(_stage, x, ws, wts, _Extent(hs, ws_cols))
-                return y, ext.hs, ext.ws
+                def step(x, ws, wts, hs, ws_cols, _run=run, _stage=stage):
+                    y, ext = _run(_stage, x, ws, wts, _Extent(hs, ws_cols))
+                    return y, ext.hs, ext.ws
 
-            fn = jax.jit(step)
-            args = (x, self.weights, wts, ext0.hs, ext0.ws)
-            jax.block_until_ready(fn(*args))  # compile outside the timing
-            t0 = self.clock.now()
-            y, hs, ws_cols = fn(*args)
-            x = jax.block_until_ready(y)
-            rows.append((stage.label, self.clock.now() - t0))
-            ext0 = _Extent(hs, ws_cols)
+                fn = jax.jit(step)
+                args = (x, self.weights, wts, ext0.hs, ext0.ws)
+                with tr.span(
+                    f"stage:{stage.label}", CAT_STAGE,
+                    stage=stage.label, fused=stage.fused,
+                ):
+                    # the phase hook fires while jit traces the stage --
+                    # the warm-up compile below announces gather/GEMM/mix
+                    # phases as instants nested under this stage span
+                    with capture_tile_phases(tr, stage=stage.label):
+                        jax.block_until_ready(fn(*args))  # compile untimed
+                    t0 = self.clock.now()
+                    y, hs, ws_cols = fn(*args)
+                    x = jax.block_until_ready(y)
+                    dt = self.clock.now() - t0
+                    rows.append((stage.label, dt))
+                ext0 = _Extent(hs, ws_cols)
         want = self.spec.out_shape(b_h, b_w, b_c)
         if tuple(x.shape[1:]) != want:
             raise AssertionError(

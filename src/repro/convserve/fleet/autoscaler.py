@@ -33,6 +33,7 @@ import threading
 from typing import Callable, List, Optional
 
 from repro.convserve.fleet.pool import ElasticPool
+from repro.convserve.obs.trace import CAT_SCALE, NULL_TRACER
 from repro.convserve.runtime.clock import Clock
 
 
@@ -53,6 +54,13 @@ class AutoscalerConfig:
     cooldown_s: float = 30.0
     step: int = 1  # replicas per scale decision
     admission_queue_per_replica: float = 32.0  # cap during scale-up
+    # stale-telemetry guard: a scale decision whose telemetry stamp has
+    # not advanced since the previous decision (or whose last mutation
+    # is older than `stale_after_s`) is counted + audited, and -- with
+    # `require_fresh_telemetry` -- blocked.  Replacement is exempt:
+    # re-adding a crashed replica on stale data beats not re-adding it.
+    require_fresh_telemetry: bool = False
+    stale_after_s: Optional[float] = None
 
     def __post_init__(self):
         if self.min_replicas < 1:
@@ -79,6 +87,8 @@ class Autoscaler:
         queue_depth_fn: Callable[[], int] = lambda: 0,
         on_scale_start: Optional[Callable[[str], None]] = None,
         on_scale_end: Optional[Callable[[], None]] = None,
+        telemetry=None,
+        tracer=None,
     ):
         self.pool = pool
         self.cfg = cfg
@@ -86,6 +96,8 @@ class Autoscaler:
         self.queue_depth_fn = queue_depth_fn
         self.on_scale_start = on_scale_start
         self.on_scale_end = on_scale_end
+        self.telemetry = telemetry  # freshness-stamp source (optional)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         now = self.clock.now()
         self._lock = threading.Lock()
         self.q_ewma = 0.0  # guarded-by: _lock
@@ -98,6 +110,8 @@ class Autoscaler:
         self.scale_ups = 0  # guarded-by: _lock
         self.scale_downs = 0  # guarded-by: _lock
         self.replacements = 0  # guarded-by: _lock
+        self.stale_decisions = 0  # guarded-by: _lock
+        self._last_decision_seq = -1  # guarded-by: _lock
         self.events: List[dict] = []  # guarded-by: _lock (audit trail)
 
     # -------------------------------------------------------- signals
@@ -151,6 +165,7 @@ class Autoscaler:
             slack = self.slack_ewma
             cooled = now - self._last_scale_t >= cfg.cooldown_s
         live = self.pool.live_count()
+        stamp = self.telemetry.stamp() if self.telemetry is not None else None
 
         action = None
         if live < cfg.min_replicas:
@@ -167,7 +182,7 @@ class Autoscaler:
         elif cooled and live < cfg.max_replicas and (
             q_ewma > cfg.queue_high
             or (slack is not None and slack < cfg.slack_min_s)
-        ):
+        ) and not self._stale_guard(now, "up", stamp, q_ewma, slack):
             n = min(cfg.step, cfg.max_replicas - live)
             born = self.pool.grow(n, now=now)
             if born:
@@ -181,12 +196,15 @@ class Autoscaler:
                     self.scale_ups += 1
                     self._last_scale_t = now
                     self._scaling_until = now + self.pool.startup_s
+                    if stamp is not None:
+                        self._last_decision_seq = stamp["seq"]
                 self._record(now, action, len(born), why, q_ewma, slack)
         elif (
             cooled
             and live > cfg.min_replicas
             and q_ewma < cfg.queue_low
             and (slack is None or slack > cfg.slack_comfort_s)
+            and not self._stale_guard(now, "down", stamp, q_ewma, slack)
         ):
             gone = self.pool.retire(cfg.step, now=now)
             if gone:
@@ -194,6 +212,8 @@ class Autoscaler:
                 with self._lock:
                     self.scale_downs += 1
                     self._last_scale_t = now
+                    if stamp is not None:
+                        self._last_decision_seq = stamp["seq"]
                 self._record(
                     now, action, len(gone),
                     f"queue ewma {q_ewma:.1f} < {cfg.queue_low}",
@@ -203,6 +223,43 @@ class Autoscaler:
         self._bracket_scale_window(now, action)
         return action
 
+    def _stale_guard(self, now, action, stamp, q_ewma, slack) -> bool:
+        """True when a would-be `action` must be blocked because the
+        telemetry snapshot is stale.  Stale = the stamp's seq has not
+        advanced since the previous scale decision, or its last mutation
+        is older than `stale_after_s`.  Every stale decision is counted
+        and audited; only `require_fresh_telemetry` turns the audit into
+        a veto (replacement never routes through here)."""
+        if stamp is None:
+            return False
+        cfg = self.cfg
+        with self._lock:
+            seq_stale = stamp["seq"] == self._last_decision_seq
+        age = (
+            now - stamp["t"]
+            if stamp["t"] is not None and cfg.stale_after_s is not None
+            else None
+        )
+        age_stale = age is not None and age > cfg.stale_after_s
+        if not seq_stale and not age_stale:
+            return False
+        why = (
+            f"telemetry seq {stamp['seq']} unchanged since last decision"
+            if seq_stale else f"telemetry age {age:.3f}s > "
+            f"{cfg.stale_after_s}s"
+        )
+        with self._lock:
+            self.stale_decisions += 1
+        if self.telemetry is not None:
+            self.telemetry.inc("autoscaler.stale_snapshot")
+        self.tracer.instant(
+            "scale.stale_snapshot", CAT_SCALE, action=action,
+            seq=stamp["seq"],
+            blocked=cfg.require_fresh_telemetry,
+        )
+        self._record(now, f"stale:{action}", 0, why, q_ewma, slack)
+        return cfg.require_fresh_telemetry
+
     def _record(self, now, action, n, why, q_ewma, slack) -> None:
         with self._lock:
             self.events.append({
@@ -210,6 +267,9 @@ class Autoscaler:
                 "queue_ewma": round(q_ewma, 3),
                 "slack_ewma": None if slack is None else round(slack, 4),
             })
+        self.tracer.instant(
+            f"scale.{action}", CAT_SCALE, n=n, why=why,
+        )
 
     def _bracket_scale_window(self, now: float, action) -> None:
         """Pause/resume hooks around the reshaping window: first action
@@ -243,6 +303,7 @@ class Autoscaler:
                 "scale_ups": self.scale_ups,
                 "scale_downs": self.scale_downs,
                 "replacements": self.replacements,
+                "stale_decisions": self.stale_decisions,
                 "queue_ewma": round(self.q_ewma, 3),
                 "slack_ewma": (
                     None if self.slack_ewma is None

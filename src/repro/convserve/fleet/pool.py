@@ -47,6 +47,11 @@ import jax
 import numpy as np
 
 from repro.convserve.fleet.sharding import ShardedWaveExecutor, probe_image
+from repro.convserve.obs.trace import (
+    CAT_FLEET,
+    NULL_TRACER,
+    attach as attach_tracer,
+)
 from repro.convserve.runtime.clock import Clock, RealClock
 from repro.convserve.runtime.replicas import WaveResult
 from repro.convserve.runtime.scheduler import Wave
@@ -164,6 +169,7 @@ class ElasticPool:
         probe_interval_s: Optional[float] = None,
         slow_quarantine_factor: float = 2.5,
         max_replicas: int = 64,
+        tracer=None,
     ):
         if not replicas:
             raise ValueError("elastic pool needs at least one replica")
@@ -187,6 +193,10 @@ class ElasticPool:
         self.slow_quarantine_factor = slow_quarantine_factor
         self.max_replicas = max_replicas
         self._make_replica = make_replica
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if self.tracer.active:
+            for ex in replicas:
+                attach_tracer(ex, self.tracer)
 
         now = self.clock.now()
         self._lock = threading.RLock()
@@ -262,6 +272,8 @@ class ElasticPool:
                     break
             ex = self._make_replica()  # compile outside the lock
             self._warm_executor(ex)
+            if self.tracer.active:
+                attach_tracer(ex, self.tracer)
             with self._lock:
                 idx = len(self.replicas)
                 ready = t + self.startup_s
@@ -275,6 +287,9 @@ class ElasticPool:
                 self._eseq += 1
                 self.grown += 1
                 born.append(idx)
+            self.tracer.instant(
+                "fleet.grow", CAT_FLEET, pid=idx, replica=idx, ready_at=ready
+            )
         return born
 
     def retire(self, n: int = 1, *, now: Optional[float] = None) -> List[int]:
@@ -311,6 +326,10 @@ class ElasticPool:
                         self._eseq += 1
                 self.retired += 1
                 out.append(r.idx)
+        for idx in out:
+            self.tracer.instant(
+                "fleet.retire", CAT_FLEET, pid=idx, replica=idx
+            )
         return out
 
     def counts(self) -> Dict[str, int]:
@@ -363,6 +382,10 @@ class ElasticPool:
             if r is None:
                 self.losses[LOSS_NO_HEALTHY_REPLICA] = (
                     self.losses.get(LOSS_NO_HEALTHY_REPLICA, 0) + 1
+                )
+                self.tracer.instant(
+                    "fleet.wave_lost", CAT_FLEET,
+                    reason=LOSS_NO_HEALTHY_REPLICA, n=len(wave.requests),
                 )
                 fut.set_exception(WaveLoss(wave, LOSS_NO_HEALTHY_REPLICA))
                 return fut
@@ -464,8 +487,13 @@ class ElasticPool:
     def _on_ready(self, idx: int) -> None:
         with self._lock:
             r = self.replicas[idx]
-            if r.state == STARTING:
+            became_ready = r.state == STARTING
+            if became_ready:
                 r.state = READY
+        if became_ready:
+            self.tracer.instant(
+                "fleet.ready", CAT_FLEET, pid=idx, replica=idx
+            )
 
     def _on_drain(self, idx: int, t: float) -> None:
         with self._lock:
@@ -496,6 +524,10 @@ class ElasticPool:
     # ---------------------------------------------------------- faults
 
     def _apply_fault(self, fault, now: float) -> None:
+        self.tracer.instant(
+            "fleet.fault", CAT_FLEET, pid=getattr(fault, "replica", 0) or 0,
+            kind=fault.kind, replica=getattr(fault, "replica", None),
+        )
         if fault.kind == FAULT_CACHE_CORRUPT:
             self.cache.corrupt_entry()
             return
@@ -534,6 +566,11 @@ class ElasticPool:
             self._lose_locked(rec, LOSS_NO_HEALTHY_REPLICA)
             return
         self.retries += 1
+        self.tracer.instant(
+            "fleet.redispatch", CAT_FLEET, pid=r.idx,
+            replica=r.idx, retries=rec.retries,
+            n=len(rec.wave.requests),
+        )
         service = self.service_model.service_s(
             rec.wave, shards=r.executor.shards, slow_factor=r.slow_factor
         )
@@ -552,6 +589,10 @@ class ElasticPool:
         rec.resolved = True
         self._inflight.pop(rec.seq, None)
         self.losses[reason] = self.losses.get(reason, 0) + 1
+        self.tracer.instant(
+            "fleet.wave_lost", CAT_FLEET, reason=reason,
+            n=len(rec.wave.requests),
+        )
         rec.future.set_exception(WaveLoss(rec.wave, reason))
 
     # ---------------------------------------------------------- health
@@ -648,6 +689,9 @@ class ElasticPool:
             self.cache.invalidate()
             with self._lock:
                 self.cache_repairs += 1
+            self.tracer.instant(
+                "fleet.cache_repair", CAT_FLEET, probed=len(targets)
+            )
             repaired = True
             mismatched = []
         with self._lock:
@@ -656,6 +700,10 @@ class ElasticPool:
                     r.state = QUARANTINED
                     r.retired_at = t
                     self.quarantines += 1
+                    self.tracer.instant(
+                        "fleet.quarantine", CAT_FLEET, pid=r.idx,
+                        replica=r.idx, why="probe_mismatch",
+                    )
             slow = [
                 r for r in targets
                 if r.state == READY
@@ -665,6 +713,10 @@ class ElasticPool:
                 r.state = QUARANTINED
                 r.retired_at = t
                 self.quarantines += 1
+                self.tracer.instant(
+                    "fleet.quarantine", CAT_FLEET, pid=r.idx,
+                    replica=r.idx, why="slow",
+                )
             # quarantined replicas orphan their in-flight waves too
             quarantined = {r.idx for r in slow} | {
                 r.idx for r in mismatched

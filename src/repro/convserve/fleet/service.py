@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.convserve.fleet.autoscaler import Autoscaler, AutoscalerConfig
 from repro.convserve.fleet.pool import ElasticPool, WaveLoss
+from repro.convserve.obs.trace import CAT_WAVE, attach as attach_tracer
 from repro.convserve.runtime.clock import Clock
 from repro.convserve.runtime.queueing import (
     REJECT_SCALING,
@@ -60,9 +61,20 @@ class FleetRuntime(ServeRuntime):
         telemetry: Optional[Telemetry] = None,
         autoscaler: Optional[AutoscalerConfig] = None,
         adapt=None,
+        tracer=None,
+        recorder=None,
     ):
-        super().__init__(pool, cfg, clock=clock, telemetry=telemetry)
+        super().__init__(
+            pool, cfg, clock=clock, telemetry=telemetry,
+            tracer=tracer, recorder=recorder,
+        )
         self.pool: ElasticPool = pool
+        if self.tracer.active and not pool.tracer.active:
+            # the pool emits the lifecycle/fault/loss instants; share the
+            # runtime's ring unless the pool was given its own tracer
+            pool.tracer = self.tracer
+            for ex in pool.executors:
+                attach_tracer(ex, self.tracer)
         self.adapt = adapt  # a replanner exposing pause()/resume()
         self.losses: Dict[int, str] = {}  # rid -> reason; guarded-by: _lock
         self.autoscaler = (
@@ -73,6 +85,8 @@ class FleetRuntime(ServeRuntime):
                 queue_depth_fn=self.scheduler.depth,
                 on_scale_start=self._on_scale_start,
                 on_scale_end=self._on_scale_end,
+                telemetry=self.telemetry,
+                tracer=self.tracer,
             )
             if autoscaler is not None
             else None
@@ -147,11 +161,25 @@ class FleetRuntime(ServeRuntime):
             self.telemetry.inc("lost_waves")
             self.telemetry.inc(f"lost.{exc.reason}")
             self.telemetry.inc("lost_images", len(wave.requests))
+            self._close_wave_span(fut, wave, lost=True, reason=exc.reason)
+            self.tracer.instant(
+                "wave.lost", CAT_WAVE, reason=exc.reason,
+                n=len(wave.requests),
+            )
             with self._done_cv:
                 for r in wave.requests:
                     self.losses[r.rid] = exc.reason
                 self._outstanding -= 1
                 self._done_cv.notify_all()
+            # close the riders' request spans: the loss IS their outcome
+            for r in wave.requests:
+                with self._lock:
+                    rsid = self._req_spans.pop(r.rid, 0)
+                self.tracer.end(rsid, lost=True, reason=exc.reason)
+            if self.recorder is not None:
+                self.recorder.trip(
+                    "wave_loss", loss=exc.reason, n=len(wave.requests)
+                )
             return
         super()._on_done(fut)
         if exc is None and self.autoscaler is not None:

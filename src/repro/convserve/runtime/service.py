@@ -29,6 +29,12 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.convserve.obs.trace import (
+    CAT_REQUEST,
+    CAT_WAVE,
+    NULL_TRACER,
+    attach as attach_tracer,
+)
 from repro.convserve.runtime.clock import Clock, RealClock
 from repro.convserve.runtime.loadgen import Arrival
 from repro.convserve.runtime.queueing import Rejection, Request, STANDARD
@@ -51,11 +57,15 @@ class ServeRuntime:
         *,
         clock: Optional[Clock] = None,
         telemetry: Optional[Telemetry] = None,
+        tracer=None,
+        recorder=None,
     ):
         self.pool = pool
         self.cfg = cfg
         self.clock = clock or RealClock()
-        self.telemetry = telemetry or Telemetry()
+        self.telemetry = telemetry or Telemetry(clock=self.clock)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.recorder = recorder  # obs.FlightRecorder (optional)
         self.scheduler = WaveScheduler(pool.spec, cfg)
         self._lock = threading.Lock()
         self._done_cv = threading.Condition(self._lock)
@@ -66,6 +76,19 @@ class ServeRuntime:
         self.rejections: Dict[int, Rejection] = {}  # guarded-by: _lock
         self.errors: List[BaseException] = []  # guarded-by: _lock
         self._wave_observers: List = []
+        # open request spans, closed when the result lands / is lost
+        self._req_spans: Dict[int, int] = {}  # guarded-by: _lock
+        # latest wave flow id per bucket: links wave -> stage profiling
+        self._wave_flows: Dict[int, str] = {}  # guarded-by: _lock
+        # in-flight wave spans, keyed by the pool future's identity
+        self._wave_ctx: Dict[int, int] = {}  # guarded-by: _lock
+        if self.tracer.active:
+            for ex in getattr(self.pool, "executors", ()):
+                attach_tracer(ex, self.tracer)
+
+    def _first_executor(self):
+        exs = getattr(self.pool, "executors", None)
+        return exs[0] if exs else None
 
     def add_wave_observer(self, fn) -> None:
         """Register ``fn(result: WaveResult)`` to run after each wave's
@@ -106,10 +129,20 @@ class ServeRuntime:
         if rej is not None:
             self.telemetry.inc("rejected")
             self.telemetry.inc(f"rejected.{rej.reason}")
+            self.tracer.instant(
+                "request.rejected", CAT_REQUEST, rid=rid, reason=rej.reason
+            )
             with self._lock:
                 self.rejections[rid] = rej
             return rej
         self.telemetry.inc("admitted")
+        sid = self.tracer.begin(
+            f"request:{rid}", CAT_REQUEST,
+            flow_out=(f"r{rid}",), rid=rid, priority=priority,
+        )
+        if sid:
+            with self._lock:
+                self._req_spans[rid] = sid
         # a serving loop asleep until the next deadline/arrival must
         # reconsider now that this request's own deadline is in play
         self._wake.set()
@@ -158,13 +191,43 @@ class ServeRuntime:
         self.telemetry.inc(f"waves.{wave.reason}")
         if wave.partial:
             self.telemetry.inc("partial_waves")
-        self.pool.submit(wave).add_done_callback(self._on_done)
+        # the wave span opens on the dispatch thread and closes on a
+        # replica completion thread: explicit begin/end, id carried in
+        # _wave_ctx keyed by the pool future (registered BEFORE the
+        # callback so inline/already-done futures still find it)
+        sid = self.tracer.begin(
+            f"wave:b{wave.bucket}", CAT_WAVE,
+            flow_in=tuple(f"r{r.rid}" for r in wave.requests),
+            bucket=wave.bucket, n=len(wave.requests),
+            reason=wave.reason, partial=wave.partial,
+        )
+        fut = self.pool.submit(wave)
+        if sid:
+            with self._lock:
+                self._wave_ctx[id(fut)] = sid
+        fut.add_done_callback(self._on_done)
+
+    def _close_wave_span(self, fut, wave: Optional[Wave], **args) -> None:
+        """Close the wave span opened at dispatch (and the request spans
+        it carried, when the wave's outcome is known here)."""
+        with self._lock:
+            sid = self._wave_ctx.pop(id(fut), 0)
+        if not sid:
+            return
+        flow = f"w{sid}"
+        self.tracer.end(sid, flow_out=(flow,), **args)
+        if wave is not None:
+            with self._lock:
+                self._wave_flows[wave.bucket] = flow
 
     def _on_done(self, fut) -> None:
         try:
             res: WaveResult = fut.result()
         except BaseException as e:  # keep serving; surface in stats
             self.telemetry.inc("wave_errors")
+            self._close_wave_span(fut, None, error=type(e).__name__)
+            self.tracer.instant("wave.error", CAT_WAVE, error=str(e)[:200])
+            self._trip_on_error(e)
             with self._done_cv:
                 self.errors.append(e)
                 self._outstanding -= 1
@@ -189,12 +252,26 @@ class ServeRuntime:
                 self.scheduler.observe_service(wave.bucket, res.compute_s)
             self.telemetry.observe("compute", res.compute_s)
         self.telemetry.inc("images", len(wave.requests))
+        self._close_wave_span(
+            fut, wave, replica=res.replica, compute_s=res.compute_s,
+            compiled=res.compiled, pid=res.replica,
+        )
+        misses = 0
         for r in wave.requests:
             r.t_done = done
             self.telemetry.observe("queue_wait", r.t_dispatch - r.t_admit)
             self.telemetry.observe("e2e", done - r.t_admit)
-            if done > r.deadline:
+            miss = done > r.deadline
+            if miss:
                 self.telemetry.inc("deadline_miss")
+                misses += 1
+            with self._lock:
+                rsid = self._req_spans.pop(r.rid, 0)
+            self.tracer.end(rsid, deadline_miss=miss)
+        if misses and self.recorder is not None:
+            self.recorder.trip(
+                "slo_breach", bucket=wave.bucket, misses=misses
+            )
         with self._done_cv:
             self.results.update(res.outputs)
             self._outstanding -= 1
@@ -204,6 +281,16 @@ class ServeRuntime:
                 fn(res)
             except Exception:
                 self.telemetry.inc("wave_observer_errors")
+
+    def _trip_on_error(self, e: BaseException) -> None:
+        """Route a wave-path exception to the flight recorder when it is
+        one of the dump-worthy kinds."""
+        if self.recorder is None:
+            return
+        from repro.convserve.check.diagnostics import VerificationError
+
+        if isinstance(e, VerificationError):
+            self.recorder.trip("verification_error", error=str(e)[:200])
 
     # ------------------------------------------------------ the loop
 
@@ -297,16 +384,40 @@ class ServeRuntime:
         scheduler / pool / shared-cache sections (and, on request, the
         per-stage profile rollup at one bucket geometry)."""
         self.telemetry.set_gauge("queue_depth", self.scheduler.depth())
-        stages = (
-            stage_rollup(self.pool.profile_stages(profile_bucket))
-            if profile_bucket is not None
-            else None
-        )
+        stages = None
+        roofline = None
+        if profile_bucket is not None:
+            with self._lock:
+                fid = self._wave_flows.get(profile_bucket)
+            # the flow hint links the latest wave at this bucket to the
+            # stage spans the profile sweep opens
+            with self.tracer.flow(fid):
+                profile = self.pool.profile_stages(profile_bucket)
+            stages = stage_rollup(profile)
+            roofline = self._roofline_section(profile)
+        trace = self.tracer.stats() if self.tracer.active else None
         return self.telemetry.snapshot(
             scheduler=self.scheduler.stats(),
             pool=self.pool.stats(),
             cache=self.pool.cache.stats(),
             stages=stages,
+            roofline=roofline,
+            trace=trace,
+        )
+
+    def _roofline_section(self, profile) -> Optional[dict]:
+        """Join the stage profile with TileAlgebra + HardwareModel into
+        the live roofline attribution (None when the pool's executors do
+        not expose a program/hw pair, e.g. bare NetExecutors)."""
+        ex = self._first_executor()
+        program = getattr(ex, "program", None)
+        hw = getattr(ex, "hw", None)
+        if program is None or hw is None:
+            return None
+        from repro.convserve.obs import roofline as roofline_mod
+
+        return roofline_mod.roofline_section(
+            program, profile, hw, batch=1, tracer=self.tracer
         )
 
     def shutdown(self) -> None:

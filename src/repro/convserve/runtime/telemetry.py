@@ -81,24 +81,43 @@ class Histogram:
 
 class Telemetry:
     """Counters + gauges + named histograms behind one lock (histogram
-    recording happens on replica completion threads)."""
+    recording happens on replica completion threads).
 
-    def __init__(self):
+    Every mutation bumps a monotonic sequence number, and `snapshot()`
+    stamps the document with it (plus the injected clock's time) under
+    a ``meta`` section.  Consumers that make decisions from snapshots --
+    the autoscaler, the adapt controller -- compare the stamp against
+    the live `stamp()` to detect that they are acting on stale data.
+    """
+
+    def __init__(self, *, clock=None):
         self._lock = threading.Lock()
+        self._clock = clock  # None = unstamped times (seq still works)
+        self._seq = 0  # guarded-by: _lock (bumps on every mutation)
+        self._mut_t: Optional[float] = None  # guarded-by: _lock
         self._counters: Dict[str, int] = {}  # guarded-by: _lock
         self._gauges: Dict[str, float] = {}  # guarded-by: _lock
         self._hists: Dict[str, Histogram] = {}  # guarded-by: _lock
 
+    def _touch_locked(self) -> None:
+        # holds-lock: _lock
+        self._seq += 1
+        if self._clock is not None:
+            self._mut_t = self._clock.now()
+
     def inc(self, name: str, n: int = 1) -> None:
         with self._lock:
+            self._touch_locked()
             self._counters[name] = self._counters.get(name, 0) + n
 
     def set_gauge(self, name: str, value: float) -> None:
         with self._lock:
+            self._touch_locked()
             self._gauges[name] = value
 
     def observe(self, name: str, seconds: float) -> None:
         with self._lock:
+            self._touch_locked()
             h = self._hists.get(name)
             if h is None:
                 h = self._hists[name] = Histogram()
@@ -112,12 +131,27 @@ class Telemetry:
         with self._lock:
             return self._hists.get(name)
 
+    def stamp(self) -> dict:
+        """The live freshness stamp: ``{"seq", "t"}``.  `seq` increments
+        on every mutation; `t` is the clock time of the LAST mutation
+        (None without an injected clock, or before any mutation) -- so
+        ``now - t`` is the snapshot's data age."""
+        with self._lock:
+            return self._stamp_locked()
+
+    def _stamp_locked(self) -> dict:
+        # holds-lock: _lock
+        return {"seq": self._seq, "t": self._mut_t}
+
     def snapshot(self, **sections) -> dict:
         """The one JSON document: counters, gauges, latency percentiles,
         plus any extra sections (scheduler/pool/cache/stage rollups)
-        merged in by name.  Always JSON-serializable."""
+        merged in by name.  Always JSON-serializable.  The ``meta``
+        section carries the freshness stamp taken atomically with the
+        counter/gauge/latency read."""
         with self._lock:
             doc = {
+                "meta": self._stamp_locked(),
                 "counters": dict(self._counters),
                 "gauges": dict(self._gauges),
                 "latency": {k: h.snapshot() for k, h in self._hists.items()},

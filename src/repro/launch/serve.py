@@ -23,6 +23,11 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--trace", default=None, metavar="PATH",
+        help="write a Chrome/Perfetto trace of the run here "
+        "(e.g. serve.trace.json; view at https://ui.perfetto.dev)",
+    )
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch).reduced()
@@ -42,14 +47,32 @@ def main(argv=None):
         )
         for i in range(args.requests)
     ]
+    tracer = None
+    if args.trace:
+        from repro.convserve.obs import Tracer
+
+        tracer = Tracer()
     t0 = time.monotonic()
-    results = eng.run(reqs, seed=args.seed)
+    if tracer is not None:
+        with tracer.span(f"serve:{args.arch}", "request",
+                         requests=len(reqs), max_batch=args.max_batch):
+            results = eng.run(reqs, seed=args.seed)
+    else:
+        results = eng.run(reqs, seed=args.seed)
     dt = time.monotonic() - t0
     n_tok = sum(len(v) for v in results.values())
     print(f"[serve] {len(reqs)} requests, {n_tok} tokens in {dt:.1f}s "
           f"({n_tok / dt:.1f} tok/s, batch={args.max_batch})")
     for rid in sorted(results)[:4]:
         print(f"  req {rid}: {results[rid][:12]}...")
+    if tracer is not None:
+        from repro.convserve.obs import write_trace
+
+        for rid in sorted(results):
+            tracer.instant(f"request:{rid}", "request",
+                           tokens=len(results[rid]))
+        n = write_trace(tracer, args.trace)
+        print(f"[serve] wrote {args.trace} ({n} events)")
 
 
 if __name__ == "__main__":

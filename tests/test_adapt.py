@@ -418,7 +418,10 @@ def test_telemetry_snapshot_schema_is_stable():
         t.observe("e2e", v)
     snap = t.snapshot(scheduler={"depth": 0}, stages=None)
     # a None section is omitted, a real one merges in by name
-    assert set(snap) == {"counters", "gauges", "latency", "scheduler"}
+    assert set(snap) == {"meta", "counters", "gauges", "latency", "scheduler"}
+    assert set(snap["meta"]) == {"seq", "t"}
+    # seq advances on every mutation: 1 inc + 1 gauge + 8 observes
+    assert snap["meta"]["seq"] == 10
     assert snap["counters"]["waves"] == 1
     lat = snap["latency"]["e2e"]
     assert set(lat) == {"count", "mean_s", "p50_s", "p95_s", "p99_s", "max_s"}
